@@ -1,0 +1,62 @@
+"""Paper §7.4 (checkpointing schemes) + Appendix C (traffic sizing).
+
+(1) Simulated throughput of no-checkpointing vs Tarragon-incremental vs
+    Pause-Checkpoint-Resume at several intervals (paper: 2.15x drop at 8).
+(2) Analytic App-C segment/expert-traffic ratio for the paper model and all
+    assigned architectures (GQA/MQA make checkpointing cheap).
+(3) Measured checkpoint bytes + wall overhead on the real reduced engine.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine, time_fn
+from repro.configs import all_configs
+from repro.core import costmodel as cm
+from repro.core.events import SimConfig, checkpoint_scheme_throughput
+
+
+def run():
+    rows = []
+    c = SimConfig()
+    base = checkpoint_scheme_throughput(c, "none")
+    inc = checkpoint_scheme_throughput(c, "incremental")
+    rows.append(Row("ckpt/scheme/none", 1e6 / base, f"{base:.0f}tok/s"))
+    rows.append(Row("ckpt/scheme/incremental", 1e6 / inc,
+                    f"{inc:.0f}tok/s overhead="
+                    f"{(base-inc)/base*100:.2f}%(paper<3%)"))
+    for interval in (4, 8, 16, 64):
+        p = checkpoint_scheme_throughput(c, "pause",
+                                         interval_tokens=interval)
+        rows.append(Row(f"ckpt/scheme/pause@{interval}", 1e6 / p,
+                        f"{p:.0f}tok/s drop={base/p:.2f}x"
+                        + ("(paper:2.15x)" if interval == 8 else "")))
+
+    # Appendix C ratios
+    mix = cm.checkpoint_traffic_ratio(4096, 32, 8, 2)
+    rows.append(Row("appC/ratio/mixtral-8x7b", 0.0,
+                    f"{mix*100:.1f}%(paper~12.5%)"))
+    for name, cfg in all_configs().items():
+        if not cfg.moe.enabled:
+            continue
+        r = cm.checkpoint_traffic_ratio(cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.moe.top_k)
+        rows.append(Row(f"appC/ratio/{name}", 0.0, f"{r*100:.2f}%"))
+
+    # measured: checkpointing on vs off, real engine decode steps
+    prompt = np.arange(1, 11, dtype=np.int32)
+    eng_on = reduced_engine(checkpoint=True, seed=2)
+    eng_on.submit("r", prompt, 80)
+    t_on = time_fn(lambda: eng_on.step(), warmup=3, iters=12)
+    eng_off = reduced_engine(checkpoint=False, seed=2)
+    eng_off.submit("r", prompt, 80)
+    t_off = time_fn(lambda: eng_off.step(), warmup=3, iters=12)
+    over = (t_on - t_off) / t_off * 100
+    rows.append(Row("ckpt/engine_step_overhead", t_on * 1e6,
+                    f"no_ckpt={t_off*1e6:.0f}us overhead={over:.1f}%"))
+    st = eng_on.store.stats
+    rows.append(Row("ckpt/engine_bytes_written", 0.0,
+                    f"{st.bytes_written}B updates={st.updates}"))
+    return rows

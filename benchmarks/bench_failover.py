@@ -1,0 +1,49 @@
+"""Paper Fig. 9 + §7.2 headline: end-to-end failover behaviour (TBT and
+output tokens/s around an injected failure), from the calibrated event
+simulator, PLUS a functional failover run on the real reduced-scale engine
+(exact-token recovery check)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine
+from repro.core.events import (SimConfig, failover_summary,
+                               simulate_megascale_failure,
+                               simulate_tarragon_aw_failure,
+                               simulate_tarragon_ew_failure)
+
+
+def run():
+    rows = []
+    c = SimConfig()
+    s = failover_summary(c)
+    rows.append(Row("fig9/megascale_stall", s["megascale_stall_s"] * 1e6,
+                    "paper~64s"))
+    rows.append(Row("fig9/tarragon_aw_stall", s["tarragon_aw_stall_s"] * 1e6,
+                    f"improvement={s['aw_improvement_x']:.0f}x(paper:160x)"))
+    rows.append(Row("fig9/tarragon_ew_stall", s["tarragon_ew_stall_s"] * 1e6,
+                    f"improvement={s['ew_improvement_x']:.0f}x(paper:213x)"))
+
+    for sim, nm in ((simulate_megascale_failure, "megascale"),
+                    (simulate_tarragon_aw_failure, "tarragon_aw"),
+                    (simulate_tarragon_ew_failure, "tarragon_ew")):
+        tl = sim(c)
+        pre = tl.throughput[tl.t < c.fail_time].mean()
+        post = tl.throughput[tl.t > c.fail_time + tl.stall + 1].mean()
+        rows.append(Row(f"fig9/timeline/{nm}", tl.stall * 1e6,
+                        f"thr_pre={pre:.0f} thr_post={post:.0f} tok/s"))
+
+    # functional check on the real engine: EW failover must be exact
+    prompt = np.arange(1, 9, dtype=np.int32)
+    ref = reduced_engine(seed=7).generate("r", prompt, 12)
+    eng = reduced_engine(seed=7)
+    eng.submit("r", prompt, 12)
+    for _ in range(4):
+        eng.step()
+    eng.fail_ew(0)
+    while not eng.requests["r"].done:
+        eng.step()
+    exact = eng.requests["r"].tokens == ref
+    rows.append(Row("fig9/engine_ew_failover_exact", 0.0,
+                    "exact" if exact else "MISMATCH"))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Table 1: profiled deployment parameters.
+
+GPU-side constants (T_w, t_pre, t_dec, g_pre, g_dec) come from the paper's
+Table 1; we additionally MEASURE our own engine's per-layer prefill/decode
+times on CPU (reduced Mixtral) — these calibrate the failover simulator's
+relative terms and demonstrate the measurement path.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine, time_fn
+from repro.core import costmodel as cm
+
+
+def run():
+    rows = []
+    for p in (cm.VLLM_PROFILE, cm.MEGASCALE_PROFILE):
+        rows.append(Row(f"table1/{p.name}/T_w", p.T_w * 1e6,
+                        f"t_pre={p.t_pre*1e3}ms t_dec={p.t_dec*1e3}ms "
+                        f"g_pre={p.g_pre} g_dec={p.g_dec}"))
+
+    eng = reduced_engine()
+    prompt = np.arange(1, 11, dtype=np.int32)
+    eng.submit("r0", prompt, 64)
+
+    t_step = time_fn(lambda: eng.step(), warmup=3, iters=10)
+    n_layers = eng.cfg.num_layers
+    t_dec_layer = t_step / n_layers
+    rows.append(Row("table1/ours-cpu/t_dec_layer", t_dec_layer * 1e6,
+                    f"decode_step={t_step*1e3:.2f}ms L={n_layers}"))
+
+    eng2 = reduced_engine(seed=1)
+
+    def prefill_once():
+        eng2.submit(f"p{len(eng2.requests)}", prompt, 1)
+
+    t_pre = time_fn(prefill_once, warmup=1, iters=3)
+    rows.append(Row("table1/ours-cpu/t_pre_layer",
+                    t_pre / n_layers * 1e6,
+                    f"prefill={t_pre*1e3:.2f}ms prompt=10tok"))
+    return rows

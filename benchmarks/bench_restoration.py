@@ -1,0 +1,88 @@
+"""Paper Fig. 12: AW restoration strategies at varying failure points.
+
+Three strategies, all executed for real on the reduced engine:
+  * sequential replay — re-prefill the prompt, then re-decode token by token
+    up to the failure point on the alternate AW.
+  * parallel replay  — one prefill over prompt + generated prefix.
+  * tarragon         — per-request restoration from the checkpoint store.
+
+Metrics per failure point: restoration wall time, data transferred
+(AW-EW expert traffic for replays, store->AW bytes for Tarragon), and GPU
+recompute (re-executed layer-steps).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine
+from repro.core import costmodel as cm
+
+
+FAIL_POINTS = (4, 8, 16, 32)
+
+
+def _expert_replay_bytes(cfg, tokens):
+    v = cm.expert_traffic_bytes(cfg.d_model, cfg.moe.top_k, 4)
+    return tokens * cfg.num_layers * v
+
+
+def run():
+    rows = []
+    prompt = np.arange(1, 11, dtype=np.int32)
+    for n in FAIL_POINTS:
+        # ---- reference run up to failure point --------------------------
+        eng = reduced_engine(seed=9, max_seq=128)
+        eng.submit("r", prompt, n + 6)
+        for _ in range(n):
+            eng.step()
+        cfg = eng.cfg
+        gen = list(eng.requests["r"].tokens)
+
+        # ---- tarragon: per-request restore ------------------------------
+        eng.fail_aw(0)
+        t0 = time.monotonic()
+        eng.recover_aw_requests()
+        jax.block_until_ready(eng.cache)
+        t_tar = time.monotonic() - t0
+        bytes_tar = eng.store.stats.bytes_restored
+        # resume and verify it still completes
+        while not eng.requests["r"].done:
+            eng.step()
+
+        # ---- sequential replay -------------------------------------------
+        eng2 = reduced_engine(seed=9, max_seq=128)
+        t0 = time.monotonic()
+        eng2.submit("r2", prompt, n + 6)
+        for _ in range(n):
+            eng2.step()
+        t_seq = time.monotonic() - t0
+        bytes_seq = _expert_replay_bytes(cfg, len(prompt) + n)
+        gpu_seq = (1 + n) * cfg.num_layers   # prefill pass + n decode steps
+
+        # ---- parallel replay ----------------------------------------------
+        eng3 = reduced_engine(seed=9, max_seq=128)
+        long_prompt = np.asarray(list(prompt) + gen[:n], np.int32)
+        t0 = time.monotonic()
+        eng3.submit("r3", long_prompt, 4)
+        t_par = time.monotonic() - t0
+        bytes_par = bytes_seq
+        gpu_par = cfg.num_layers
+
+        rows.append(Row(f"fig12/time/fail@{n}", t_tar * 1e6,
+                        f"seq={t_seq*1e3:.1f}ms par={t_par*1e3:.1f}ms "
+                        f"speedup_seq={t_seq/max(t_tar,1e-9):.1f}x"))
+        rows.append(Row(f"fig12/bytes/fail@{n}", float(bytes_tar),
+                        f"seq={bytes_seq} par={bytes_par} "
+                        f"ratio={bytes_seq/max(bytes_tar,1):.1f}x"))
+        rows.append(Row(f"fig12/gpu_layersteps/fail@{n}", 0.0,
+                        f"tarragon=0 seq={gpu_seq} par={gpu_par}"))
+    # full-scale analytic traffic ratio for Mixtral (paper: ~8x):
+    # replay moves V = 2*topk*d per token-layer, restore moves
+    # C = 2*Hkv*head_dim -> V/C = topk*H/Hkv = 2*32/8 = 8.
+    ratio = (2 * 2 * 4096) / (2 * 8 * (4096 // 32))
+    rows.append(Row("fig12/traffic_ratio_fullscale", 0.0,
+                    f"analytic={ratio:.0f}x(paper~8x)"))
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline terms per (architecture x input shape) from the multi-pod
+dry-run artifacts (deliverable g). Reads reports/dryrun_single_pod.json
+produced by ``python -m repro.launch.dryrun --all --json ...`` — re-run that
+first if the file is missing."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                      "dryrun_single_pod.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(REPORT):
+        return [Row("roofline/missing", 0.0,
+                    "run repro.launch.dryrun --all --json first")]
+    with open(REPORT) as f:
+        results = json.load(f)
+    for r in results:
+        if r["status"] == "skipped":
+            rows.append(Row(f"roofline/{r['name']}", 0.0, "skipped(DESIGN)"))
+            continue
+        if r["status"] != "ok":
+            rows.append(Row(f"roofline/{r['name']}", 0.0, "ERROR"))
+            continue
+        dom_s = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}[r["dominant"]]
+        rows.append(Row(
+            f"roofline/{r['name']}", dom_s * 1e6,
+            f"dom={r['dominant']} compute={r['compute_s']*1e3:.2f}ms "
+            f"mem={r['memory_s']*1e3:.2f}ms "
+            f"coll={r['collective_s']*1e3:.2f}ms "
+            f"useful={r['useful_ratio']:.2f}"))
+    return rows

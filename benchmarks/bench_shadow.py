@@ -1,0 +1,44 @@
+"""Paper Appendix D: inactive shadow experts must not slow the datapath.
+
+Compare decode-step latency: (a) Tarragon engine with a loaded-but-inactive
+shadow bank, (b) MegaScale-style engine with no shadow slots, (c) Tarragon
+with shadows ACTIVE (EW failed -> experts run from shadow slots). Also
+report the shadow bank's memory budget (§5.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine, time_fn
+from repro.core.shadow import shadow_memory_bytes
+from repro.core import ert as ert_lib
+
+
+def _step_time(eng):
+    prompt = np.arange(1, 11, dtype=np.int32)
+    eng.submit("r", prompt, 200)
+    return time_fn(lambda: eng.step(), warmup=3, iters=12)
+
+
+def run():
+    rows = []
+    t_shadow = _step_time(reduced_engine(tarragon=True, checkpoint=False))
+    t_none = _step_time(reduced_engine(tarragon=False, checkpoint=False))
+    over = (t_shadow - t_none) / t_none * 100
+    rows.append(Row("appD/inactive_shadow", t_shadow * 1e6,
+                    f"no_shadow={t_none*1e6:.0f}us "
+                    f"delta={over:+.1f}%(paper:~0)"))
+
+    eng = reduced_engine(tarragon=True, checkpoint=False)
+    eng.fail_ew(0)  # shadows become active
+    t_active = _step_time(eng)
+    rows.append(Row("appD/active_shadow", t_active * 1e6,
+                    f"vs_inactive={(t_active-t_shadow)/t_shadow*100:+.1f}%"))
+
+    # §5.3 memory budget at full scale (kimi-k2 geometry, bf16)
+    p = ert_lib.default_placement(384, 16)
+    b = shadow_memory_bytes(p, 7168, 2048)
+    rows.append(Row("appD/shadow_mem_kimi", 0.0,
+                    f"{b/2**30:.1f}GiB total "
+                    f"({b/p.num_ew/2**30:.2f}GiB/EW, "
+                    f"paper: ~2.5GB/expert DeepSeek-R1)"))
+    return rows

@@ -1,0 +1,73 @@
+"""Paper Fig. 10/11 + §7.3: the cost of failure resiliency when NO failures
+occur. Tarragon mode vs MegaScale-style static binding (no ERT / no shadow
+slots / no checkpointing), measured wall-clock on the real reduced engine
+for both workloads. Paper claim: within 2.8% throughput, negligible latency
+delta."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine
+from repro.data.workloads import make_workload
+from repro.serving.scheduler import run_serving
+
+
+def _workload(kind, n=6, out=10):
+    wl = make_workload(kind, rate_rps=4.0, duration=2.0, seed=3)
+    wl = [dataclasses.replace(w, arrival=0.0,
+                              prompt_len=min(w.prompt_len, 12),
+                              max_new_tokens=out) for w in wl]
+    return wl[:n]
+
+
+def _measure(tarragon: bool, checkpoint: bool, kind: str):
+    """Median steady-state decode-step time with a full continuous batch
+    (prefill/compile excluded — the §7.3 comparison is decode-path cost)."""
+    import time
+    eng = reduced_engine(tarragon=tarragon, checkpoint=checkpoint, seed=0)
+    for i, w in enumerate(_workload(kind, out=200)):
+        eng.submit(w.request_id, w.prompt_tokens(eng.cfg.vocab_size), 200)
+    for _ in range(3):  # warmup (compile)
+        eng.step()
+    ts = []
+    for _ in range(15):
+        t0 = time.monotonic()
+        eng.step()
+        ts.append(time.monotonic() - t0)
+    step = float(np.median(ts))
+    n_active = len(eng.active_requests())
+    thr = n_active / step
+    return thr, step, float(np.percentile(ts, 95))
+
+
+def run():
+    rows = []
+    for kind in ("random", "sharegpt"):
+        thr_t, tbt_t, p95_t = _measure(True, True, kind)
+        thr_e, tbt_e, _ = _measure(True, False, kind)   # ERT+shadow only
+        thr_m, tbt_m, p95_m = _measure(False, False, kind)
+        over = (thr_m - thr_t) / max(thr_m, 1e-9) * 100
+        over_ert = (thr_m - thr_e) / max(thr_m, 1e-9) * 100
+        over_ckpt = over - over_ert
+        # the reduced model's shadow bank doubles its expert slots
+        # (P=2E); at assigned-arch scale shadows are P/E-1 ~= 8.3% of
+        # expert FLOPs (kimi: 416/384). Scale the shadow share down and
+        # keep the ckpt/ERT share as measured.
+        shadow_frac_reduced = 1.0     # P/E - 1 at reduced scale
+        shadow_frac_full = 32 / 384   # kimi-k2 geometry
+        over_full = over_ckpt + over_ert * (shadow_frac_full /
+                                            shadow_frac_reduced)
+        rows.append(Row(f"fig11/throughput/{kind}/tarragon",
+                        1e6 / max(thr_t, 1e-9),
+                        f"{thr_t:.1f}tok/s"))
+        rows.append(Row(f"fig11/throughput/{kind}/megascale",
+                        1e6 / max(thr_m, 1e-9),
+                        f"{thr_m:.1f}tok/s overhead_measured={over:.1f}% "
+                        f"[ert+shadow={over_ert:.1f}% ckpt={over_ckpt:.1f}%]"
+                        f" scale_adj={over_full:.1f}%(paper<=2.8%)"))
+        rows.append(Row(f"fig10/tbt/{kind}", tbt_t * 1e6,
+                        f"median_megascale={tbt_m*1e3:.1f}ms "
+                        f"p95_t={p95_t*1e3:.1f}ms p95_m={p95_m*1e3:.1f}ms"))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig. 8: AW-EW traffic is bursty; attention-compute gaps provide
+natural windows for incremental KV checkpointing."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.events import SimConfig, link_trace
+
+
+def run():
+    events, info = link_trace(SimConfig(), n_layers=8)
+    busy = sum(e - s for s, e, k in events if k in ("dispatch", "gather"))
+    idle = sum(e - s for s, e, k in events if k == "idle")
+    total = max(e for _, e, _ in events)
+    return [
+        Row("fig8/link_busy_frac", busy / total * 1e6,
+            f"busy={busy/total*100:.0f}% idle={idle/total*100:.0f}%"),
+        Row("fig8/ckpt_in_gap", info["t_ckpt"] * 1e6,
+            f"gap={info['t_attn']*1e6:.0f}us fits={info['ckpt_fits_gap']}"
+            "(paper:fits)"),
+    ]

@@ -1,0 +1,53 @@
+"""Shared benchmark helpers: reduced-scale engines + CSV emission.
+
+Every bench_* module exposes ``run() -> list[Row]``; run.py aggregates to
+the required ``name,us_per_call,derived`` CSV. "us_per_call" is the measured
+(or simulated) latency of the benchmark's unit operation; "derived" carries
+the paper-comparable figure (a ratio, a percentage, a pass marker).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def reduced_engine(arch="mixtral_8x7b", cap_factor=4.0, seed=0, **kw) -> \
+        InferenceEngine:
+    cfg = get_config(arch).reduced()
+    if cfg.moe.enabled and cap_factor:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cap_factor))
+    defaults = dict(max_batch=8, max_seq=96, num_aw=2, num_ew=2)
+    defaults.update(kw)
+    ecfg = EngineConfig(**defaults)
+    return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(seed))
+
+
+def time_fn(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (seconds) of fn()."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.monotonic()
+        fn()
+        ts.append(time.monotonic() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,appC]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_profile",       # Table 1
+    "bench_costmodel",     # Fig 4 (Eq 1-4 audit)
+    "bench_failover",      # Fig 9 / §7.2 headline
+    "bench_steady_state",  # Fig 10/11 / §7.3
+    "bench_checkpoint",    # §7.4 + App C
+    "bench_restoration",   # Fig 12
+    "bench_expert_batch",  # App B
+    "bench_shadow",        # App D
+    "bench_ablation",      # App F
+    "bench_traffic",       # Fig 8
+    "bench_roofline",      # §Roofline (dry-run artifacts)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated substring filters on module names")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        if only and not any(o in modname for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{modname}",
+                             fromlist=["run"])
+            for row in mod.run():
+                print(row.csv())
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{modname},0.00,ERROR:{type(e).__name__}")
+            failed.append(modname)
+        print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end training example: train a ~100M-param dense model for a few
+hundred steps on synthetic LM data and verify the loss goes down.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+
+``--small`` uses the reduced config (seconds on CPU); the default builds a
+~100M-parameter qwen2-family variant (minutes on CPU).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.workloads import lm_batches
+from repro.models import get_model
+from repro.training import init_opt_state, make_train_step
+
+
+def hundred_m_config():
+    base = get_config("qwen2_1_5b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", num_layers=8, d_model=512, num_heads=8,
+        num_kv_heads=2, head_dim=64, d_ff=2048, vocab_size=32000)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--small", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2_1_5b").reduced() if args.small \
+        else hundred_m_config()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    rs = api.init_route_state()
+    opt = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(api, lr=3e-4))
+
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+    t0 = time.time()
+    first = last = None
+    for i, batch in enumerate(lm_batches(cfg.vocab_size, args.batch,
+                                         args.seq, args.steps, seed=0)):
+        params, opt, loss = step_fn(params, opt, batch, rs)
+        loss = float(loss)
+        first = first if first is not None else loss
+        last = loss
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:4d}  loss {loss:.4f}  "
+                  f"{(time.time()-t0)/(i+1)*1e3:.0f} ms/step")
+    print(f"loss: {first:.4f} -> {last:.4f}")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

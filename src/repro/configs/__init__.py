@@ -1,0 +1,44 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (LONG_CONTEXT_ARCHS, SHAPES, ModelConfig,
+                                MoEConfig, ShapeConfig, SSMConfig,
+                                supports_shape)  # noqa: F401
+
+ARCH_IDS = (
+    "qwen2_1_5b",
+    "qwen2_moe_a2_7b",
+    "h2o_danube_1_8b",
+    "zamba2_7b",
+    "chameleon_34b",
+    "whisper_small",
+    "xlstm_350m",
+    "gemma2_2b",
+    "granite_34b",
+    "kimi_k2_1t_a32b",
+    "mixtral_8x7b",   # the paper's own evaluation model
+)
+
+
+def _module_for(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_for(name)}")
+    return mod.CONFIG
+
+
+def all_configs(include_paper_model: bool = True):
+    out = {}
+    for mid in ARCH_IDS:
+        if mid == "mixtral_8x7b" and not include_paper_model:
+            continue
+        cfg = get_config(mid)
+        out[cfg.name] = cfg
+    return out
+
+
+ASSIGNED_ARCHS = tuple(a for a in ARCH_IDS if a != "mixtral_8x7b")

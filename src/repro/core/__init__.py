@@ -1,0 +1,3 @@
+"""Tarragon core: reconfigurable expert routing (ERT/REFE), shadow experts,
+self-healing health masks, KV-cache checkpointing, orchestrator control plane,
+recovery cost model and the failover event simulator."""

@@ -1,0 +1,187 @@
+"""Asynchronous, incremental KV-cache checkpointing + per-request restoration
+(paper §6).
+
+The store mirrors the paper's RDMA design at the semantic level:
+
+  * ``register_aw`` — AW announces its cache layout; the store allocates a
+    bucket (here: a dict keyed by request id).
+  * ``async_update`` — one-sided write of one token's KV segment, tagged with
+    a monotonically increasing *sequence number*. Writes may arrive out of
+    order (the RDMA WR reordering the paper guards against); the store only
+    advances the **commit watermark** over a contiguous seq prefix, exactly
+    the "async log + commit record" design (§6.1).
+  * ``restore_request`` — returns the committed token index and the KV
+    segments for one request, which the engine injects into a healthy AW's
+    cache region (per-request restoration, §6.2). Uncommitted (gap) suffixes
+    are never restored.
+
+Segments are host numpy arrays (device_get of the [L, 2, Hkv, Dh] slice the
+decode step just wrote) — the analogue of the GPUDirect one-sided write into
+the store's pre-registered bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def _seg_nbytes(segment) -> int:
+    if isinstance(segment, (list, tuple)):
+        return sum(np.asarray(s).nbytes for s in segment)
+    return np.asarray(segment).nbytes
+
+
+@dataclass
+class _RequestLog:
+    segments: Dict[int, np.ndarray] = field(default_factory=dict)
+    token_values: Dict[int, int] = field(default_factory=dict)
+    # seq_no -> token_idx, for watermark accounting
+    seq_to_token: Dict[int, int] = field(default_factory=dict)
+    next_seq: int = 0              # AW-side monotonically increasing WR id
+    committed_seq: int = -1        # highest contiguous seq received
+    prompt_len: int = 0
+    aw_id: int = -1
+
+    @property
+    def committed_token(self) -> int:
+        """Highest token index restorable (contiguous-prefix rule)."""
+        if self.committed_seq < 0:
+            return -1
+        return max((self.seq_to_token[s]
+                    for s in range(self.committed_seq + 1)), default=-1)
+
+
+@dataclass
+class StoreStats:
+    bytes_written: int = 0
+    bytes_restored: int = 0
+    updates: int = 0
+    out_of_order: int = 0
+    restores: int = 0
+
+
+class CheckpointStore:
+    """Host-side checkpoint store service."""
+
+    def __init__(self):
+        self._logs: Dict[str, _RequestLog] = {}
+        self._aw_requests: Dict[int, set] = {}
+        self.stats = StoreStats()
+
+    # -- registration ------------------------------------------------------
+    def register_request(self, request_id: str, aw_id: int,
+                         prompt_len: int = 0):
+        log = self._logs.setdefault(request_id, _RequestLog())
+        log.aw_id = aw_id
+        log.prompt_len = prompt_len
+        self._aw_requests.setdefault(aw_id, set()).add(request_id)
+
+    def reassign(self, request_id: str, new_aw: int):
+        log = self._logs[request_id]
+        self._aw_requests.get(log.aw_id, set()).discard(request_id)
+        log.aw_id = new_aw
+        self._aw_requests.setdefault(new_aw, set()).add(request_id)
+
+    def release(self, request_id: str):
+        log = self._logs.pop(request_id, None)
+        if log is not None:
+            self._aw_requests.get(log.aw_id, set()).discard(request_id)
+
+    # -- write path ----------------------------------------------------------
+    def next_seq(self, request_id: str) -> int:
+        log = self._logs[request_id]
+        s = log.next_seq
+        log.next_seq += 1
+        return s
+
+    def async_update(self, request_id: str, token_idx: int,
+                     segment, seq_no: int, token_value: int = -1):
+        """One-sided write; tolerates out-of-order arrival. ``segment`` is a
+        numpy array or a flat list of numpy arrays (one cache-leaf each);
+        ``token_value`` is the token id emitted at ``token_idx`` (the store
+        hands it back at restoration so decode can resume, §6.2)."""
+        log = self._logs[request_id]
+        log.segments[token_idx] = segment
+        log.token_values[token_idx] = token_value
+        log.seq_to_token[seq_no] = token_idx
+        self.stats.updates += 1
+        self.stats.bytes_written += _seg_nbytes(segment)
+        if seq_no != log.committed_seq + 1:
+            self.stats.out_of_order += 1
+        # advance commit watermark over the contiguous prefix
+        while (log.committed_seq + 1) in log.seq_to_token:
+            log.committed_seq += 1
+
+    # -- read / recovery path -----------------------------------------------
+    def committed_token(self, request_id: str) -> int:
+        return self._logs[request_id].committed_token
+
+    def active_requests_on(self, aw_id: int) -> List[str]:
+        return sorted(self._aw_requests.get(aw_id, set()))
+
+    def restore_request(self, request_id: str
+                        ) -> Tuple[int, int, Dict[int, list]]:
+        """Per-request restoration: (committed token idx, token id at that
+        idx, {token_idx: segment}).
+
+        Only segments within the committed prefix are returned — segments
+        beyond a sequence gap are unusable for recovery (§6.1)."""
+        log = self._logs[request_id]
+        c = log.committed_token
+        committed_tokens = {log.seq_to_token[s]
+                            for s in range(log.committed_seq + 1)}
+        segs = {t: log.segments[t] for t in sorted(committed_tokens)
+                if t in log.segments}
+        self.stats.restores += 1
+        self.stats.bytes_restored += sum(_seg_nbytes(s)
+                                         for s in segs.values())
+        return c, log.token_values.get(c, -1), segs
+
+
+# --------------------------------------------------------------------------
+# AW-side checkpointer
+# --------------------------------------------------------------------------
+
+class KVCheckpointer:
+    """AW-side incremental checkpointing of decode-time KV segments.
+
+    After each decode step the engine hands over the per-request segment
+    (the KV slice the step just appended). The copy is issued immediately —
+    the opportunistic-interleave claim (§6.1/Fig. 8) is that this transfer
+    rides the AW-EW link's idle gaps; the event simulator models the timing,
+    while here we preserve the *ordering/commit* semantics.
+
+    ``reorder`` optionally shuffles delivery within a small window to
+    exercise the out-of-order tolerance (tests).
+    """
+
+    def __init__(self, store: CheckpointStore, aw_id: int,
+                 reorder_window: int = 0, seed: int = 0):
+        self.store = store
+        self.aw_id = aw_id
+        self.reorder_window = reorder_window
+        self._rng = np.random.default_rng(seed)
+        self._pending: List[Tuple[str, int, np.ndarray, int]] = []
+
+    def register(self, request_id: str, prompt_len: int = 0):
+        self.store.register_request(request_id, self.aw_id, prompt_len)
+
+    def checkpoint_token(self, request_id: str, token_idx: int,
+                         segment, token_value: int = -1):
+        seq = self.store.next_seq(request_id)
+        self._pending.append((request_id, token_idx, segment, seq,
+                              token_value))
+        if len(self._pending) > self.reorder_window:
+            self.flush()
+
+    def flush(self):
+        pending = self._pending
+        if self.reorder_window and len(pending) > 1:
+            idx = self._rng.permutation(len(pending))
+            pending = [pending[i] for i in idx]
+        for rid, tok, seg, seq, tv in pending:
+            self.store.async_update(rid, tok, seg, seq, token_value=tv)
+        self._pending = []

@@ -1,0 +1,135 @@
+"""Recovery cost model — paper §2.2.2, Eq. (1)-(4).
+
+For a failure while decoding token i at frontier layer l of an L-layer model:
+
+  monolithic / decoupled-AW failure (full replay):
+      T_stall(l, i) ~= T_w + L*t_pre + ((i-1)*L + l) * t_dec          (1)
+      G(l, i)      ~= M * (L*g_pre + ((i-1)*L + l) * g_dec)          (3)
+
+  decoupled EW failure (stateless replay at the frontier):
+      T_stall ~= T_w + t_dec                                          (2)
+      G       ~= g_dec                                                (4)
+
+  Tarragon (derived in §3/§6; audited by the failover simulator):
+      AW failure: detection + per-request restore + 1 frontier layer
+      EW failure: detection + reroute to shadow + 1 frontier layer
+      (T_w moves off the critical path: background provisioning)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DeploymentProfile:
+    """Profiled parameters (paper Table 1 units: seconds / GPU-time)."""
+
+    name: str
+    T_w: float        # worker (re)init: process + CUDA ctx + weights + comms
+    t_pre: float      # one prefill layer (whole prompt), seconds
+    t_dec: float      # one decoding layer (single token), seconds
+    g_pre: float      # GPU-time of one prefill layer
+    g_dec: float      # GPU-time of one decoding layer
+    num_workers: int = 16
+
+
+# Paper Table 1 (Mixtral-8x7B, 32 layers, 16 workers)
+VLLM_PROFILE = DeploymentProfile("vLLM", 24.0, 1.68e-3, 0.58e-3,
+                                 0.010, 0.0028)
+MEGASCALE_PROFILE = DeploymentProfile("MegaScale-Infer", 18.5, 2.18e-3,
+                                      0.85e-3, 0.006, 0.0022)
+
+
+@dataclass(frozen=True)
+class TarragonProfile:
+    """Tarragon-side recovery constants (§5-§7)."""
+
+    detect: float = 0.010       # probe interval (10 ms, §7.1)
+    detect_retries: int = 3     # consecutive timeouts -> fail-stop (App. E)
+    ert_update: float = 0.001   # orchestrator pushes new ERT/health arrays
+    restore_per_token: float = 2.0e-6   # checkpoint-store -> AW copy, per
+                                        # token KV segment (one-sided write)
+    restore_fixed: float = 0.050        # per-request control overhead
+    shadow_activate: float = 0.001      # ERT flip; weights already resident
+    resched: float = 0.25       # batch re-formation + pipeline refill after
+                                # failover (measured-system effect, §7.2)
+
+
+# Measured-system overheads of a coarse-grained FULL restart beyond Eq. (1):
+# staggered restart of all workers, weight-reload contention on shared
+# storage, CCL re-initialization and scheduler warm-up. Eq. (1) with Table-1
+# constants gives ~22 s for the Fig. 9 setting; the paper *measures* ~64 s.
+# The audit benchmark reports both (model vs measured-calibrated).
+FULL_RESTART_EXTRA = 42.0
+
+
+def stall_monolithic(p: DeploymentProfile, L: int, layer: int, i: int):
+    return p.T_w + L * p.t_pre + ((i - 1) * L + layer) * p.t_dec
+
+
+def stall_decoupled_aw(p: DeploymentProfile, L: int, layer: int, i: int):
+    # same replay structure as monolithic (Fig. 3b)
+    return stall_monolithic(p, L, layer, i)
+
+
+def stall_decoupled_ew(p: DeploymentProfile, L: int, layer: int, i: int):
+    return p.T_w + p.t_dec
+
+
+def gputime_monolithic(p: DeploymentProfile, L: int, layer: int, i: int):
+    return p.num_workers * (L * p.g_pre + ((i - 1) * L + layer) * p.g_dec)
+
+
+def gputime_decoupled_aw(p: DeploymentProfile, L: int, layer: int, i: int):
+    return gputime_monolithic(p, L, layer, i)
+
+
+def gputime_decoupled_ew(p: DeploymentProfile, L: int, layer: int, i: int):
+    return p.g_dec
+
+
+def stall_tarragon_aw(p: DeploymentProfile, t: TarragonProfile, L: int,
+                      layer: int, i: int, tokens_to_restore: int):
+    """Per-request restoration: detection + restore + resume at frontier.
+    No prefill/decode replay; T_w is off the critical path."""
+    detect = t.detect * t.detect_retries
+    restore = t.restore_fixed + tokens_to_restore * L * t.restore_per_token
+    return detect + t.ert_update + t.resched + restore + layer * p.t_dec
+
+
+def stall_tarragon_ew(p: DeploymentProfile, t: TarragonProfile, L: int,
+                      layer: int, i: int):
+    """Shadow-expert failover: detection + ERT flip + frontier replay."""
+    detect = t.detect * t.detect_retries
+    return detect + t.shadow_activate + t.ert_update + t.resched + p.t_dec
+
+
+def gputime_tarragon_aw(p: DeploymentProfile, L: int, layer: int, i: int):
+    # only the frontier layer of the affected request is recomputed
+    return layer * p.g_dec / max(1, L)
+
+
+def gputime_tarragon_ew(p: DeploymentProfile, L: int, layer: int, i: int):
+    return p.g_dec
+
+
+# --------------------------------------------------------------------------
+# Checkpoint traffic model (paper Appendix C)
+# --------------------------------------------------------------------------
+
+def kv_segment_bytes(d_model: int, n_heads: int, n_kv_heads: int,
+                     bytes_per_el: int = 2) -> int:
+    """C = 2 * H_kv * (hidden/H_attn) * S_elem — per token per layer."""
+    return 2 * n_kv_heads * (d_model // n_heads) * bytes_per_el
+
+
+def expert_traffic_bytes(d_model: int, top_k: int,
+                         bytes_per_el: int = 2) -> int:
+    """V = 2 * top_k * hidden * S_elem — per token per MoE layer."""
+    return 2 * top_k * d_model * bytes_per_el
+
+
+def checkpoint_traffic_ratio(d_model: int, n_heads: int, n_kv_heads: int,
+                             top_k: int) -> float:
+    return kv_segment_bytes(d_model, n_heads, n_kv_heads) / \
+        expert_traffic_bytes(d_model, top_k)

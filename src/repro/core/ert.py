@@ -1,0 +1,151 @@
+"""Expert Routing Table (ERT): decouple expert *identity* from *location*.
+
+Paper §4.2: "The ERT maps each expert to one or more candidate EWs —
+potentially including shadow experts — allowing immediate rerouting when an
+EW fails". The JAX/TPU adaptation (DESIGN.md §1): expert compute happens in a
+*physical slot space* of size P = E + n_shadow. Slots 0..E-1 are primaries
+(slot e holds logical expert e); slots E..P-1 are shadow slots whose resident
+expert is chosen by the orchestrator and can be re-pointed at runtime
+(weights pushed host-side = "pre-loading a shadow expert").
+
+The ERT itself is a pair of **device arrays** threaded through the jitted
+step function:
+    candidates [E, R] int32  — slot ids in priority order (-1 = none)
+    ew_health  [num_ew] bool — liveness of each EW shard
+Because both are data (not compile-time constants), a failover or a shadow
+activation is a host->device array update — **no recompilation and no
+collective-group rebuild**, the exact analogue of Tarragon's claim that
+recovery is a table remap rather than a CCL reconfiguration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ExpertPlacement:
+    """Static geometry of the expert slot space (fixed at compile time).
+
+    Primary slots are padded up to a multiple of ``num_ew`` so the slot axis
+    always divides the expert-parallel mesh axis (e.g. 60 Qwen experts ->
+    64 primary slots on 16 EWs; pad slots hold zero weights and never receive
+    tokens). Shadow slots are likewise a multiple of ``num_ew``."""
+
+    num_experts: int              # E logical experts
+    num_ew: int                   # EW shards ("model" mesh axis size)
+    num_shadow_slots: int         # extra slots for shadow replicas
+
+    @property
+    def primary_slots(self) -> int:
+        return -(-self.num_experts // self.num_ew) * self.num_ew
+
+    @property
+    def num_slots(self) -> int:
+        return self.primary_slots + self.num_shadow_slots
+
+    @property
+    def experts_per_ew(self) -> int:
+        return self.primary_slots // self.num_ew
+
+    def slot_owner(self) -> np.ndarray:
+        """EW shard owning each slot. Primaries are blocked contiguously
+        (expert-parallel layout); shadow slots are striped round-robin so a
+        single EW's residual memory hosts ~n_shadow/num_ew shadows."""
+        owner = np.empty((self.num_slots,), np.int32)
+        owner[: self.primary_slots] = (
+            np.arange(self.primary_slots) // self.experts_per_ew)
+        owner[self.primary_slots:] = (
+            np.arange(self.num_shadow_slots) % self.num_ew)
+        return owner
+
+
+def default_placement(num_experts: int, num_ew: int,
+                      num_shadow_slots: int = -1) -> ExpertPlacement:
+    if num_shadow_slots < 0:
+        # default: one EW's worth of residual memory (paper §5.3: shadows
+        # occupy residual GPU memory; a single-EW-failure's experts fit).
+        # Shadow slots are striped over ALL EWs, so to guarantee every
+        # protected expert a slot on a *different* EW than its primary we
+        # oversize by num_ew/(num_ew-1), then round up to a multiple of
+        # num_ew (sharding divisibility).
+        e_per = -(-num_experts // max(1, num_ew))
+        if num_ew > 1:
+            base = -(-e_per * num_ew // (num_ew - 1))
+            num_shadow_slots = -(-base // num_ew) * num_ew
+        else:
+            num_shadow_slots = e_per
+    return ExpertPlacement(num_experts, num_ew, num_shadow_slots)
+
+
+def initial_shadow_assignment(placement: ExpertPlacement,
+                              protected_ew: int = 0) -> np.ndarray:
+    """Which logical expert each shadow slot replicates (host decision).
+
+    Default protects EW ``protected_ew``: its experts are pre-loaded as
+    shadows on other EWs. The orchestrator re-points this after failures
+    (background provisioning). Greedy matching: each protected expert first
+    gets a slot on a *different* EW than its primary (a same-EW replica
+    would die with it); leftover slots take duplicate replicas."""
+    e_per = placement.experts_per_ew
+    protected = [e for e in range(protected_ew * e_per,
+                                  (protected_ew + 1) * e_per)
+                 if e < placement.num_experts]
+    if not protected:  # padded-only EW: protect round-robin instead
+        protected = list(range(min(e_per, placement.num_experts)))
+    owner = placement.slot_owner()
+    s = placement.num_shadow_slots
+    assign = np.full((s,), -1, np.int32)
+    usable = [j for j in range(s)
+              if owner[placement.primary_slots + j] != protected_ew]
+    for i, e in enumerate(protected):
+        if i < len(usable):
+            assign[usable[i]] = e
+    for j in range(s):
+        if assign[j] < 0:
+            assign[j] = protected[j % len(protected)]
+    return assign
+
+
+def build_candidates(placement: ExpertPlacement,
+                     shadow_assignment: np.ndarray) -> np.ndarray:
+    """ERT candidate table [E, 2]: (primary slot, shadow slot or -1).
+
+    A shadow slot is only a valid candidate if it lives on a different EW
+    than the primary (otherwise it would die with it)."""
+    e = placement.num_experts
+    owner = placement.slot_owner()
+    cand = np.full((e, 2), -1, np.int32)
+    cand[:, 0] = np.arange(e)
+    for j, expert in enumerate(shadow_assignment):
+        slot = placement.primary_slots + j
+        if owner[slot] != owner[expert] and cand[expert, 1] < 0:
+            cand[expert, 1] = slot
+    return cand
+
+
+def resolve_active_slots(candidates, ew_health, slot_owner):
+    """Resolve each logical expert to its highest-priority *healthy* slot.
+
+    candidates: [E, R] int32; ew_health: [num_ew] bool; slot_owner: [P] int32.
+    Returns (active_slot [E] int32, expert_alive [E] bool). Runs inside jit —
+    this is the REFE's per-dispatch ERT lookup.
+    """
+    candidates = jnp.asarray(candidates)
+    slot_owner = jnp.asarray(slot_owner)
+    valid = candidates >= 0
+    safe = jnp.maximum(candidates, 0)
+    healthy = valid & ew_health[slot_owner[safe]]
+    # first healthy candidate in priority order
+    first = jnp.argmax(healthy, axis=1)
+    any_healthy = jnp.any(healthy, axis=1)
+    active = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+    # if nothing healthy, fall back to primary (tokens will be masked out)
+    active = jnp.where(any_healthy, active, candidates[:, 0])
+    return active.astype(jnp.int32), any_healthy
+
+
+def ew_health_to_slot_health(ew_health, slot_owner):
+    return ew_health[jnp.asarray(slot_owner)]

@@ -1,0 +1,109 @@
+"""Centralized orchestrator (paper Fig. 5): liveness monitoring, ERT/health
+updates on failures, per-request restoration triggering, and background
+worker provisioning — over a virtual clock so detection latency and
+provisioning time (T_w) are modelled faithfully while the functional
+recovery runs for real on the engine.
+
+Failure detection model (§5 + App. E): implicit heartbeats are the per-step
+data-plane activity; a silent worker gets explicit probes every
+``detect_interval``; after ``retries`` consecutive timeouts the worker is
+declared fail-stop and self-healing fires.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.costmodel import TarragonProfile
+
+
+@dataclass
+class WorkerEvent:
+    t: float
+    kind: str       # fail_aw|fail_ew|detected|healed|provisioned
+    worker: str
+    detail: str = ""
+
+
+@dataclass
+class _PendingFailure:
+    kind: str
+    worker_id: int
+    t_fail: float
+    detected: bool = False
+
+
+@dataclass
+class _PendingProvision:
+    kind: str
+    worker_id: int
+    t_ready: float
+
+
+class Orchestrator:
+    def __init__(self, engine, profile: Optional[TarragonProfile] = None,
+                 worker_init_time: float = 18.5):
+        self.engine = engine
+        self.profile = profile or TarragonProfile()
+        self.T_w = worker_init_time
+        self.events: List[WorkerEvent] = []
+        self._failures: List[_PendingFailure] = []
+        self._provisions: List[_PendingProvision] = []
+
+    # -- failure injection (the SIGINT of §7.2) -----------------------------
+    def inject_failure(self, kind: str, worker_id: int, now: float):
+        assert kind in ("aw", "ew")
+        self._failures.append(_PendingFailure(kind, worker_id, now))
+        self.events.append(WorkerEvent(now, f"fail_{kind}", f"{kind}{worker_id}"))
+
+    def detection_latency(self) -> float:
+        return self.profile.detect * self.profile.detect_retries
+
+    # -- control loop --------------------------------------------------------
+    def tick(self, now: float) -> List[WorkerEvent]:
+        """Advance the control plane to virtual time ``now``. Returns the
+        events that fired during this tick."""
+        fired: List[WorkerEvent] = []
+        for f in self._failures:
+            if f.detected or now < f.t_fail + self.detection_latency():
+                continue
+            f.detected = True
+            ev = WorkerEvent(now, "detected", f"{f.kind}{f.worker_id}")
+            if f.kind == "ew":
+                # AW-side self-healing: ERT remap to shadows (instant once
+                # detected); background EW provisioning starts now.
+                self.engine.fail_ew(f.worker_id)
+                ev.detail = "ERT remap -> shadow experts"
+            else:
+                # EW-side self-healing: health mask drops the AW's slots;
+                # per-request restoration moves its requests.
+                self.engine.fail_aw(f.worker_id)
+                n = len(self.engine.recover_aw_requests())
+                ev.detail = f"restored {n} requests"
+            self._provisions.append(
+                _PendingProvision(f.kind, f.worker_id, now + self.T_w))
+            self.events.append(ev)
+            fired.append(ev)
+
+        remaining = []
+        for p in self._provisions:
+            if now < p.t_ready:
+                remaining.append(p)
+                continue
+            if p.kind == "ew":
+                # layer-aligned join (§5.4) + shadow re-pointing to protect
+                # a new EW (background weight push)
+                nxt = (p.worker_id + 1) % self.engine.ecfg.num_ew
+                self.engine.provision_ew(p.worker_id, repoint_protect=nxt)
+            else:
+                self.engine.provision_aw(p.worker_id)
+            ev = WorkerEvent(now, "provisioned", f"{p.kind}{p.worker_id}")
+            self.events.append(ev)
+            fired.append(ev)
+        self._provisions = remaining
+        return fired
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._provisions) + \
+            sum(1 for f in self._failures if not f.detected)

@@ -1,0 +1,85 @@
+"""Self-healing state transitions (paper §5).
+
+All transitions are *array updates* on RouteState — the device-side routing
+consumes them on the next step without recompilation. This module also
+carries the EW-side "sufficient subset" batching policy (§5.2) used by both
+the engine and the event simulator.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ert as ert_lib
+from repro.core import shadow as shadow_lib
+from repro.core.refe import RouteState
+
+
+# --------------------------------------------------------------------------
+# health transitions
+# --------------------------------------------------------------------------
+
+def fail_ew(rs: RouteState, ew_id: int) -> RouteState:
+    return rs._replace(ew_health=rs.ew_health.at[ew_id].set(False))
+
+
+def recover_ew(rs: RouteState, ew_id: int) -> RouteState:
+    return rs._replace(ew_health=rs.ew_health.at[ew_id].set(True))
+
+
+def fail_aw(rs: RouteState, aw_id: int) -> RouteState:
+    return rs._replace(aw_health=rs.aw_health.at[aw_id].set(False))
+
+
+def recover_aw(rs: RouteState, aw_id: int) -> RouteState:
+    return rs._replace(aw_health=rs.aw_health.at[aw_id].set(True))
+
+
+# --------------------------------------------------------------------------
+# shadow re-pointing (background provisioning of expert capacity, §5.3-§5.4)
+# --------------------------------------------------------------------------
+
+def repoint_shadows(rs: RouteState, placement: ert_lib.ExpertPlacement,
+                    expert_params: dict, protect_ew: int
+                    ) -> Tuple[RouteState, dict]:
+    """Re-point the shadow bank to protect ``protect_ew``'s experts.
+
+    Host-side weight push (NOT on the failover critical path): returns the
+    updated RouteState (new candidates + shadow_assignment) and the freshly
+    synced shadow bank to swap into the layer params."""
+    assign = ert_lib.initial_shadow_assignment(placement, protect_ew)
+    cand = ert_lib.build_candidates(placement, assign)
+    new_rs = rs._replace(candidates=jnp.asarray(cand, jnp.int32),
+                         shadow_assignment=jnp.asarray(assign, jnp.int32))
+    bank = shadow_lib.sync_shadow_bank(expert_params, assign)
+    return new_rs, bank
+
+
+def experts_without_healthy_replica(rs: RouteState,
+                                    placement: ert_lib.ExpertPlacement
+                                    ) -> np.ndarray:
+    """Logical experts currently unreachable (both primary and shadow on
+    dead EWs) — these tokens are dropped until provisioning completes."""
+    slot_owner = placement.slot_owner()
+    _, alive = ert_lib.resolve_active_slots(
+        rs.candidates, rs.ew_health, jnp.asarray(slot_owner))
+    return np.asarray(~alive).nonzero()[0]
+
+
+# --------------------------------------------------------------------------
+# EW-side sufficient-subset batching (§5.2)
+# --------------------------------------------------------------------------
+
+def ew_should_start(received_from: np.ndarray, aw_healthy: np.ndarray,
+                    batch_tokens: int, min_batch: int,
+                    probe_expired: bool) -> bool:
+    """Decide whether an EW starts expert compute for a layer batch.
+
+    Starts when (i) all currently-healthy AWs have delivered, or (ii) the
+    buffered batch reached the GPU-efficiency knee ``min_batch``, or (iii)
+    the probing window for missing AWs expired (they are then treated as
+    failed for this layer and their slots omitted)."""
+    healthy_delivered = bool(np.all(received_from[aw_healthy]))
+    return healthy_delivered or batch_tokens >= min_batch or probe_expired

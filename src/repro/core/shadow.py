@@ -1,0 +1,54 @@
+"""Shadow experts (paper §5.3): pre-loaded, normally-inactive expert replicas.
+
+Weights live in a separate *shadow bank* appended to the physical slot space
+(slots E..P-1). The bank is populated host-side by the orchestrator
+("pre-loading into residual GPU memory"); activation is purely an ERT flip —
+no weight movement on the failover critical path, which is the point.
+
+Inactive shadows consume memory but no compute: the dispatch one-hot never
+selects an inactive slot, so its [C, D] input buffer stays zero and (on real
+hardware) the Pallas moe_gemm tile for an empty slot is skippable. This
+mirrors App. D's measurement that a loaded-but-idle shadow adds no latency.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ert import ExpertPlacement
+
+
+def sync_shadow_bank(expert_params: dict, shadow_assignment) -> dict:
+    """Populate the shadow bank from primary expert weights.
+
+    expert_params: {"wg": [..., E, D, F], "wu": [..., E, D, F],
+    "wd": [..., E, F, D]} — the expert axis is -3 in every bank (works both
+    for per-layer params and scan-stacked [R, E, ...] params).
+    shadow_assignment: [S] int32 — resident logical expert per shadow slot.
+    Returns the shadow bank with the same keys, expert axis sized S.
+    """
+    idx = jnp.asarray(shadow_assignment)
+    return {k: jnp.take(v, idx, axis=-3) for k, v in expert_params.items()}
+
+
+def full_slot_bank(expert_params: dict, shadow_bank: dict,
+                   primary_slots: int = 0) -> dict:
+    """Concatenate primary + shadow banks into the [..., P, ...] slot bank.
+    Primaries are zero-padded to ``primary_slots`` (sharding divisibility —
+    pad slots hold zero weights and the ERT never routes to them)."""
+    out = {}
+    for k in expert_params:
+        prim = expert_params[k]
+        e = prim.shape[-3]
+        if primary_slots and primary_slots > e:
+            pad_widths = [(0, 0)] * prim.ndim
+            pad_widths[prim.ndim - 3] = (0, primary_slots - e)
+            prim = jnp.pad(prim, pad_widths)
+        out[k] = jnp.concatenate([prim, shadow_bank[k]], axis=-3)
+    return out
+
+
+def shadow_memory_bytes(placement: ExpertPlacement, d_model: int, d_ff: int,
+                        bytes_per_el: int = 2, gated: bool = True) -> int:
+    """Residual-memory cost of the shadow bank (paper §5.3's budget check)."""
+    per_expert = (3 if gated else 2) * d_model * d_ff * bytes_per_el
+    return placement.num_shadow_slots * per_expert

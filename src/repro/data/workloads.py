@@ -1,0 +1,84 @@
+"""Workload generation (paper §7.1).
+
+* ``sharegpt``  — ShareGPT-like: naturally varying prompt/completion lengths
+  (log-normal mixture fitted to the published ShareGPT length statistics;
+  the dataset itself is not redistributable offline).
+* ``random``    — the paper's synthetic decode-heavy workload: fixed
+  10-token prompts, 128 generated tokens.
+* Arrivals follow a Poisson process of configurable rate.
+
+Also provides a token-stream iterator for the training example (synthetic
+LM data, deterministic given seed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    request_id: str
+    arrival: float            # seconds since epoch 0
+    prompt_len: int
+    max_new_tokens: int
+    seed: int
+
+    def prompt_tokens(self, vocab: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, vocab, size=(self.prompt_len,),
+                            dtype=np.int32)
+
+
+def poisson_arrivals(rate_rps: float, duration: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    n = rng.poisson(rate_rps * duration)
+    return np.sort(rng.uniform(0.0, duration, size=n))
+
+
+def make_workload(kind: str, rate_rps: float, duration: float,
+                  seed: int = 0, max_prompt: int = 1024,
+                  max_new: int = 256) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(rate_rps, duration, rng)
+    reqs = []
+    for i, t in enumerate(arrivals):
+        if kind == "random":
+            p_len, n_new = 10, 128
+        elif kind == "sharegpt":
+            # log-normal prompt (~median 160 tok) and completion (~median 90)
+            p_len = int(np.clip(rng.lognormal(5.0, 1.0), 4, max_prompt))
+            n_new = int(np.clip(rng.lognormal(4.5, 0.8), 4, max_new))
+        else:
+            raise ValueError(kind)
+        reqs.append(Request(f"{kind}-{i}", float(t), p_len, n_new,
+                            seed * 100003 + i))
+    return reqs
+
+
+def lm_batches(vocab: int, batch: int, seq: int, steps: int,
+               seed: int = 0, learnable: bool = True) -> Iterator[dict]:
+    """Synthetic LM training stream: returns {tokens, labels} per step.
+
+    ``learnable=True`` generates affine-progression sequences
+    (x[t+1] = (a*x[t] + b) mod V with fixed a,b) — a next-token function the
+    model can actually learn, so training loss decreases below the uniform
+    entropy floor. ``learnable=False`` gives uniform noise (floor = ln V).
+    """
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(2, 7)) * 2 + 1  # odd -> bijective mod 2^k vocabs
+    b = int(rng.integers(1, vocab))
+    for _ in range(steps):
+        if learnable:
+            x0 = rng.integers(0, vocab, size=(batch, 1))
+            toks = np.empty((batch, seq + 1), np.int64)
+            toks[:, :1] = x0
+            for t in range(seq):
+                toks[:, t + 1] = (a * toks[:, t] + b) % vocab
+            toks = toks.astype(np.int32)
+        else:
+            toks = rng.integers(0, vocab, size=(batch, seq + 1),
+                                dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

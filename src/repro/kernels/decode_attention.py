@@ -1,0 +1,119 @@
+"""Pallas TPU flash-decode kernel (GQA, one query token vs a long KV cache).
+
+This is the latency-critical op of the decode phase (§2 of the paper: TBT is
+the user-visible metric; decode dominates recovery concern). The kernel
+streams the KV cache HBM->VMEM in blocks and keeps an online-softmax running
+(m, l, acc) per (batch, kv-head) so live VMEM is O(block) regardless of the
+32k/500k cache length.
+
+Layout / tiling decisions (TPU-native, not a CUDA port):
+  * grid = (B, Hkv, Sc // block_k); the kv-block axis is innermost, i.e. the
+    sequential accumulation axis on TPU.
+  * q block [G, Dh] (G = H/Hkv grouped queries) hits the MXU as a skinny
+    matmul against [block_k, Dh] key tiles; Dh is padded to 128 by layout.
+  * outputs are the softmax partials (m, l, acc); the current token's
+    self-attention term and the final normalization are fused outside in
+    ``ops.decode_attention`` (keeps the kernel free of ragged +1 logic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref,
+                        m_ref, l_ref, acc_ref,
+                        *, window: int, softcap: float, block_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, Dh] (pre-scaled)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    cpos = cpos_ref[0]                           # [bk] int32
+    pos = pos_ref[0]                             # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (cpos >= 0) & (cpos <= pos)
+    if window:
+        mask &= cpos > (pos - window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[0, 0]                         # [G]
+    l_prev = l_ref[0, 0]
+    acc_prev = acc_ref[0, 0]                     # [G, Dh]
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    acc_ref[0, 0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
+                                             "interpret"))
+def decode_attention_partial(q, ck, cv, cpos, pos, *, window: int = 0,
+                             softcap: float = 0.0, block_k: int = 512,
+                             interpret: bool = False):
+    """Online-softmax partials of q against the KV cache.
+
+    q: [B,H,Dh] (unscaled); ck/cv: [B,Sc,Hkv,Dh]; cpos: [B,Sc]; pos: [B].
+    Returns (m, l, acc): [B,Hkv,G], [B,Hkv,G], [B,Hkv,G,Dh] — fp32.
+    """
+    b, h, dh = q.shape
+    sc, hkv = ck.shape[1], ck.shape[2]
+    g = h // hkv
+    bk = min(block_k, sc)
+    while sc % bk:
+        bk //= 2
+    bk = max(bk, 1)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+
+    grid = (b, hkv, sc // bk)
+    kernel = functools.partial(_decode_attn_kernel, window=window,
+                               softcap=softcap, block_k=bk)
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk), lambda bi, hi, ki: (bi, ki)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qs, ck, cv, cpos)
+    return m, l, acc

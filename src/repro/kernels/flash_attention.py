@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention for the full-sequence (train/prefill) path.
+
+Closes the dominant §Roofline headroom: the pure-jnp blockwise path
+materializes [bq, bk] score tiles in HBM; this kernel keeps the online-
+softmax state (m, l, acc) in VMEM scratch across the (sequential, innermost)
+kv-block grid axis, so scores never leave VMEM.
+
+Grid = (B, Hkv, Sq//bq, Sk//bk) — kv innermost, q-block output revisited.
+Supports GQA (q block [bq, G, Dh] vs kv [bk, Dh]), causal masking, sliding
+windows and score softcap via position operands (same mask semantics as
+``models.attention.blockwise_attention``, its oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, causal: bool, window: int, softcap: float):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)       # [bq, G, Dh] (pre-scaled)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    qpos = qpos_ref[0]                           # [bq]
+    kpos = kpos_ref[0]                           # [bk]
+
+    bq, g, dh = q.shape
+    s = jax.lax.dot_general(q.reshape(bq * g, dh), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(bq, g, -1)                     # [bq, G, bk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(p.reshape(bq * g, -1), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_new = acc_prev * corr[..., None] + pv.reshape(bq, g, dh)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out = acc_new / jnp.maximum(l_new[..., None], 1e-30)
+        out = jnp.where((l_new > 0)[..., None], out, 0.0)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: [B,Sq,H,Dh]; k,v: [B,Sk,Hkv,Dh]; *_pos: [B,Sq]/[B,Sk] int32
+    (-1 = invalid). Returns [B,Sq,H,Dh]."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+
+    def fit(block, s):
+        blk = min(block, s)
+        while s % blk:
+            blk //= 2
+        return max(blk, 1)
+
+    bq, bk = fit(block_q, sq), fit(block_k, sk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, dh)
+    qs = qs.astype(q.dtype)
+
+    grid = (b, hkv, sq // bq, sk // bk)
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, dh),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bq), lambda bi, hi, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, bk), lambda bi, hi, qi, ki: (bi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, g, dh),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, k, v, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32))
+    return out.reshape(b, sq, h, dh)

@@ -1,0 +1,126 @@
+"""Jitted public wrappers around the Pallas kernels with pure-jnp fallbacks.
+
+Dispatch policy:
+  * TPU backend        -> Pallas kernels (compiled).
+  * CPU (this container) -> jnp reference path by default (fast, exact);
+    tests exercise the Pallas bodies via interpret=True explicitly.
+  * ``REPRO_KERNELS=pallas_interpret`` forces interpret-mode Pallas everywhere
+    (used by the kernel smoke suite / CI).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env != "auto":
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def use_pallas() -> bool:
+    return _mode() in ("pallas", "pallas_interpret")
+
+
+def _interpret() -> bool:
+    return _mode() == "pallas_interpret"
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+def combine_decode_partials(q, m, l, acc, k1, v1, *, softcap: float = 0.0):
+    """Fold the current token's self-attention into cache partials (m,l,acc)
+    and normalize. q: [B,H,Dh]; k1/v1: [B,Hkv,Dh]."""
+    b, h, dh = q.shape
+    hkv = k1.shape[1]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+    s_self = jnp.einsum("bhgd,bhd->bhg", qs, k1.astype(jnp.float32))
+    if softcap:
+        s_self = jnp.tanh(s_self / softcap) * softcap
+    m_new = jnp.maximum(m, s_self)
+    corr = jnp.exp(m - m_new)
+    p_self = jnp.exp(s_self - m_new)
+    l_new = l * corr + p_self
+    acc_new = acc * corr[..., None] + p_self[..., None] * \
+        v1.astype(jnp.float32)[:, :, None, :]
+    out = acc_new / jnp.maximum(l_new[..., None], 1e-30)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-token GQA decode attention over cache + current token.
+
+    q: [B,H,Dh]; ck/cv: [B,Sc,Hkv,Dh]; cpos: [B,Sc]; k1/v1: [B,Hkv,Dh];
+    pos: [B]. Returns [B,H,Dh].
+    """
+    if use_pallas():
+        from repro.kernels.decode_attention import decode_attention_partial
+        m, l, acc = decode_attention_partial(
+            q, ck, cv, cpos, pos, window=window, softcap=softcap,
+            interpret=_interpret())
+    else:
+        # partial+combine (not monolithic softmax): keeps every reduction
+        # contracting over the cache axis so seq-sharded caches lower to
+        # psum-combines (§Perf iteration 3 / distributed flash-decode)
+        m, l, acc = kref.decode_attention_partial_ref(
+            q, ck, cv, cpos, pos, window=window, softcap=softcap)
+    return combine_decode_partials(q, m, l, acc, k1, v1, softcap=softcap)
+
+
+def full_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                   window: int = 0, softcap: float = 0.0):
+    """Full-sequence (train/prefill) attention: Pallas flash kernel on TPU
+    (scores stay in VMEM), blockwise-jnp elsewhere."""
+    if use_pallas():
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, softcap=softcap,
+                               interpret=_interpret())
+    from repro.models.attention import blockwise_attention
+    return blockwise_attention(q, k, v, q_pos, k_pos, window=window,
+                               softcap=softcap, causal=causal)
+
+
+# --------------------------------------------------------------------------
+# grouped expert FFN
+# --------------------------------------------------------------------------
+
+def expert_ffn(x, w_gate, w_up, w_down, *, act: str = "silu", counts=None):
+    """x: [P,...,D] per-slot token batches -> [P,...,D]."""
+    if use_pallas():
+        from repro.kernels.moe_gemm import moe_gemm
+        shape = x.shape
+        if x.ndim > 3:  # flatten grouped dims for the kernel grid
+            x = x.reshape(shape[0], -1, shape[-1])
+        y = moe_gemm(x, w_gate, w_up, w_down, act=act, counts=counts,
+                     interpret=_interpret())
+        return y.reshape(shape)
+    return kref.moe_gemm_ref(x, w_gate, w_up, w_down, act=act)
+
+
+# --------------------------------------------------------------------------
+# SSM scan
+# --------------------------------------------------------------------------
+
+def ssm_scan(x, dt, a, b, c, *, chunk: int = 64):
+    """Full-sequence SSD scan (zero initial state). The chunk-parallel form
+    is used on every backend (§Perf iteration 2): per-timestep state carry
+    is S/chunk x more HBM traffic and no MXU work."""
+    if use_pallas():
+        from repro.kernels.ssm_scan import ssm_scan as pallas_scan
+        return pallas_scan(x, dt, a, b, c, chunk=chunk,
+                           interpret=_interpret())
+    if x.shape[1] > 1:
+        return kref.ssm_scan_chunked_ref(x, dt, a, b, c, chunk=chunk)
+    return kref.ssm_scan_ref(x, dt, a, b, c)

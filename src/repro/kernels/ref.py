@@ -1,0 +1,193 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel tests (assert_allclose, interpret=True)
+and the CPU execution path of the framework.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# decode attention (GQA, one query token vs cached K/V + current token)
+# --------------------------------------------------------------------------
+
+def decode_attention_partial_ref(q, ck, cv, cpos, pos, *, window: int = 0,
+                                 softcap: float = 0.0):
+    """Online-softmax partials of q against the cache (pure jnp).
+
+    §Perf iteration 3: every reduction here contracts over the cache
+    sequence axis (max / sum / dot), so when the KV cache is seq-sharded
+    (long_500k) GSPMD lowers to small psum-combines instead of gathering
+    the cache — the distributed flash-decode pattern. The current token is
+    folded in afterwards (ops.combine_decode_partials), never concatenated
+    along the sharded axis.
+    Returns (m [B,Hkv,G], l [B,Hkv,G], acc [B,Hkv,G,Dh]) fp32.
+    """
+    b, h, dh = q.shape
+    hkv = ck.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qs, ck.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (cpos >= 0) & (cpos <= pos[:, None])
+    if window:
+        mask &= cpos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
+    return m, l, acc
+
+
+def decode_attention_ref(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: [B,H,Dh]; ck/cv: [B,Sc,Hkv,Dh]; cpos: [B,Sc]; k1/v1: [B,Hkv,Dh];
+    pos: [B]. Returns [B,H,Dh] (fp32 accumulate, cast back to q.dtype).
+    """
+    b, h, dh = q.shape
+    hkv = ck.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+
+    s = jnp.einsum("bhgd,bshd->bhgs", qs, ck.astype(jnp.float32))
+    s_self = jnp.einsum("bhgd,bhd->bhg", qs, k1.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+        s_self = jnp.tanh(s_self / softcap) * softcap
+    mask = (cpos >= 0) & (cpos <= pos[:, None])
+    if window:
+        mask &= cpos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+
+    s_all = jnp.concatenate([s, s_self[..., None]], axis=-1)
+    p = jax.nn.softmax(s_all, axis=-1)
+    v_all = jnp.concatenate(
+        [cv.astype(jnp.float32),
+         v1.astype(jnp.float32)[:, None]], axis=1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_all)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# grouped MoE expert FFN
+# --------------------------------------------------------------------------
+
+def moe_gemm_ref(x, w_gate, w_up, w_down, act: str = "silu"):
+    """x: [P,...,D]; w_gate/w_up: [P,D,F]; w_down: [P,F,D] -> [P,...,D].
+
+    SwiGLU-style gated FFN applied independently per expert slot, fp32
+    accumulation. ``w_gate`` may be None for ungated FFNs. Ellipsis dims
+    (e.g. the [G, C] of grouped dispatch) pass through untouched, keeping
+    their sharding."""
+    fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    x32 = x.astype(jnp.float32)
+    up = jnp.einsum("p...d,pdf->p...f", x32, w_up.astype(jnp.float32))
+    if w_gate is not None:
+        up = fn(jnp.einsum("p...d,pdf->p...f", x32,
+                           w_gate.astype(jnp.float32))) * up
+    else:
+        up = fn(up)
+    y = jnp.einsum("p...f,pfd->p...d", up, w_down.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2-style chunked selective state-space scan
+# --------------------------------------------------------------------------
+
+def ssm_scan_chunked_ref(x, dt, a, b, c, chunk: int = 64):
+    """Chunk-parallel SSD (same math as kernels/ssm_scan.py, pure jnp).
+
+    §Perf iteration 2: the sequential scan carries the [B,H,P,N] state
+    through every timestep (HBM traffic ~ S * state bytes); the chunked
+    form recasts intra-chunk work as [T,T]/[T,N] matmuls and carries state
+    only once per chunk — S/chunk x less state traffic and MXU-shaped
+    compute. Exact (not approximate); zero initial state.
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    t = min(chunk, s)
+    while s % t:
+        t //= 2
+    nch = s // t
+
+    xs = x.reshape(bs, nch, t, h, p).astype(jnp.float32)
+    dts = dt.reshape(bs, nch, t, h).astype(jnp.float32)
+    bm = b.reshape(bs, nch, t, n).astype(jnp.float32)
+    cm = c.reshape(bs, nch, t, n).astype(jnp.float32)
+
+    seg = jnp.cumsum(dts, axis=2) * a[None, None, None, :]  # [B,NC,T,H]
+    ii = jnp.arange(t)
+    causal = ii[:, None] >= ii[None, :]
+    # intra-chunk: y_intra[i] = sum_j exp(seg_i - seg_j) dt_j (C_i.B_j) x_j
+    # mask in LOG space: for j > i the difference is positive and exp()
+    # overflows before the causal zeroing (inf * 0 = NaN)
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]    # [B,NC,T,T,H]
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    ldec = jnp.exp(diff)
+    g = jnp.einsum("bgin,bgjn->bgij", cm, bm)               # [B,NC,T,T]
+    w = g[..., None] * ldec * dts[:, :, None, :, :]         # [B,NC,T,T,H]
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", w, xs)
+
+    # inter-chunk state carry (sequential over NC only)
+    seg_tot = seg[:, :, -1, :]                              # [B,NC,H]
+    carry_w = dts * jnp.exp(seg_tot[:, :, None, :] - seg)   # [B,NC,T,H]
+    dh = jnp.einsum("bgth,bgthp,bgtn->bghpn", carry_w, xs, bm)
+
+    def chunk_step(hstate, inp):
+        dh_g, decay_g = inp                                  # [B,H,P,N],[B,H]
+        h_out = hstate * jnp.exp(decay_g)[..., None, None] + dh_g
+        return h_out, hstate                                 # emit h_in
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    hf, h_ins = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(dh, 1, 0), jnp.moveaxis(seg_tot, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                        # [B,NC,H,P,N]
+
+    y_state = jnp.einsum("bgtn,bghpn->bgthp", cm, h_ins)
+    y_state = y_state * jnp.exp(seg)[..., None]
+    y = (y_intra + y_state).reshape(bs, s, h, p).astype(x.dtype)
+    return y, hf
+
+
+def ssm_scan_ref(x, dt, a, b, c, h0=None):
+    """Sequential reference of the SSD recurrence.
+
+    x:  [B,S,H,P]   per-head input
+    dt: [B,S,H]     softplus'd step sizes (>0)
+    a:  [H]         negative decay rates (A = -exp(a_log) outside; here a<0)
+    b:  [B,S,N]     input projection (shared across heads, Mamba2 style)
+    c:  [B,S,N]     output projection
+    h0: [B,H,P,N]   initial state (zeros if None)
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)                         # [B,H]
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        hstate = hstate * decay[..., None, None] + dbx
+        yt = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, yt
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, hf

@@ -1,0 +1,109 @@
+"""Pallas TPU chunked selective state-space (Mamba2/SSD) scan kernel.
+
+TPU adaptation of the SSD "chunked" algorithm: the GPU version leans on warp
+shuffles for the intra-chunk scan; on TPU we recast both intra-chunk and
+inter-chunk work as MXU matmuls over [T, T] / [T, N] tiles and carry the
+[P, N] state across chunks in a VMEM scratch buffer (the chunk axis is the
+innermost, sequential grid dimension).
+
+Per (batch, head, chunk) with chunk length T:
+  seg[i]   = cumsum(dt * a)[i]                      (log-decay within chunk)
+  L[i,j]   = exp(seg[i] - seg[j]) * (i >= j)        (decay matrix)
+  y_intra  = ((C B^T) ∘ L ∘ dt[j]) @ x              [T,P]
+  y_state  = (C @ h_in^T) * exp(seg[i])             [T,P]
+  h_out    = exp(seg[T-1]) h_in + x^T (dt exp(seg[T-1]-seg)) B   [P,N]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+                *, chunk: int):
+    ci = pl.program_id(2)
+    nchunks = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0]                                     # scalar (this head)
+    x = x_ref[0, :, 0].astype(jnp.float32)           # [T, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [T]
+    bmat = b_ref[0].astype(jnp.float32)              # [T, N]
+    cmat = c_ref[0].astype(jnp.float32)              # [T, N]
+
+    seg = jnp.cumsum(dt) * a                         # [T] (a constant/head)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask in log space: exp of a positive (j > i) decay overflows to inf
+    # before the causal zeroing (inf * 0 = NaN)
+    diff = jnp.where(ii >= jj, seg[:, None] - seg[None, :], -jnp.inf)
+    ldec = jnp.exp(diff)
+
+    g = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [T,T]
+    w = g * ldec * dt[None, :]
+    y_intra = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    h_in = h_scr[...]                                # [P, N]
+    y_state = jax.lax.dot_general(cmat, h_in, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_state = y_state * jnp.exp(seg)[:, None]
+    y_ref[0, :, 0] = (y_intra + y_state).astype(y_ref.dtype)
+
+    seg_total = seg[-1]
+    carry_w = dt * jnp.exp(seg_total - seg)          # [T]
+    dh = jax.lax.dot_general(x * carry_w[:, None], bmat,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    h_new = jnp.exp(seg_total) * h_in + dh
+    h_scr[...] = h_new
+
+    @pl.when(ci == nchunks - 1)
+    def _finalize():
+        hout_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x, dt, a, b, c, *, chunk: int = 64, interpret: bool = False):
+    """Chunk-parallel SSD scan. Same contract as ``ref.ssm_scan_ref`` with
+    h0 = 0. x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b,c: [B,S,N]."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    t = min(chunk, s)
+    while s % t:
+        t //= 2
+    t = max(t, 1)
+
+    grid = (bs, h, s // t)
+    kernel = functools.partial(_ssm_kernel, chunk=t)
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, t, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, t, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, t, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), x, dt, b, c)
+    return y, hf

@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh; print memory_analysis / cost_analysis; emit roofline
+terms (deliverables e + g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape decode_32k [--multi-pod] [--no-tarragon] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the device
+count on first init. Smoke tests and benchmarks never import this module.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import SHAPES, supports_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingPolicy
+from repro.launch.specs import adapt_config, build_case
+from repro.roofline import analysis
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             tarragon: bool = True, policy: ShardingPolicy = None,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape)
+    if not supports_shape(cfg, shape):
+        return {"name": f"{arch}:{shape_name}", "status": "skipped",
+                "reason": "no sub-quadratic long-context path (DESIGN.md)"}
+    t0 = time.time()
+    case = build_case(arch, shape_name, mesh, policy=policy,
+                      tarragon=tarragon)
+    jitted = jax.jit(case.step_fn,
+                     in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings,
+                     donate_argnums=case.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    chips = mesh.devices.size
+    rep = analysis.analyze(case.name, compiled, cfg, shape, chips)
+    result = rep.to_dict()
+    result.update({
+        "status": "ok",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "tarragon": tarragon,
+        "compile_s": round(t1 - t0, 1),
+    })
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"== {case.name} mesh={result['mesh']} "
+              f"(compile {result['compile_s']}s)")
+        print(f"   memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB")
+        print(f"   cost_analysis: flops/dev={rep.hlo_flops:.3e} "
+              f"bytes/dev={rep.hlo_bytes:.3e}")
+        print(f"   roofline: compute={rep.compute_s*1e3:.3f}ms "
+              f"memory={rep.memory_s*1e3:.3f}ms "
+              f"collective={rep.collective_s*1e3:.3f}ms "
+              f"-> {rep.dominant}-bound, useful={rep.useful_ratio:.3f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-paper-model", action="store_true",
+                    help="also sweep mixtral-8x7b (the paper's own model)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-tarragon", action="store_true",
+                    help="MegaScale-style static binding baseline")
+    ap.add_argument("--json", type=str, default=None)
+    args = ap.parse_args()
+
+    cases = []
+    if args.all:
+        archs = list(ASSIGNED_ARCHS)
+        if args.include_paper_model:
+            archs.append("mixtral_8x7b")
+        for arch in archs:
+            arch_name = get_config(arch).name
+            for shape_name in SHAPES:
+                cases.append((arch_name, shape_name))
+    else:
+        assert args.arch and args.shape
+        cases.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape_name in cases:
+        try:
+            results.append(run_case(arch, shape_name,
+                                    multi_pod=args.multi_pod,
+                                    tarragon=not args.no_tarragon))
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            results.append({"name": f"{arch}:{shape_name}",
+                            "status": "error", "error": str(e)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 16x16 = 256 chips -> ("data", "model").
+Multi-pod:  2x16x16 = 512 chips -> ("pod", "data", "model").
+
+AW/EW mapping (DESIGN.md): the ``data`` axis carries data-parallel attention
+workers (disjoint request slots), the ``model`` axis carries the
+expert-parallel / tensor-parallel group (EWs for MoE archs). ``pod`` extends
+data parallelism across pods.
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for CPU tests (1 device)."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes that carry batch (data parallel) sharding."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mp_axis(mesh) -> str:
+    return "model"
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s

@@ -1,0 +1,81 @@
+"""Serving launcher: run the Tarragon engine against a workload on a chosen
+mesh/scale.
+
+CPU-functional mode (default — this container):
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
+        --workload random --rps 4 --duration 2 [--fail ew:0@0.5]
+
+The reduced model runs for real; failures are injected and recovered. On a
+real TPU cluster the same engine/step functions run with the production
+mesh shardings from launch/sharding.py (see launch/dryrun.py for the exact
+jit configuration per architecture x shape).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import make_workload
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.scheduler import FailurePlan, run_serving
+
+
+def parse_failure(s: str) -> FailurePlan:
+    kindid, t = s.split("@")
+    kind, wid = kindid.split(":")
+    return FailurePlan(float(t), kind, int(wid))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral_8x7b")
+    ap.add_argument("--workload", choices=("random", "sharegpt"),
+                    default="random")
+    ap.add_argument("--rps", type=float, default=4.0)
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--num-aw", type=int, default=2)
+    ap.add_argument("--num-ew", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--no-tarragon", action="store_true")
+    ap.add_argument("--fail", type=str, action="append", default=[],
+                    help="kind:worker@time, e.g. ew:0@0.5")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.moe.enabled:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    ecfg = EngineConfig(max_batch=args.max_batch, max_seq=96,
+                        num_aw=args.num_aw, num_ew=args.num_ew,
+                        tarragon=not args.no_tarragon)
+    eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
+    orch = Orchestrator(eng, worker_init_time=1.0)
+
+    wl = make_workload(args.workload, args.rps, args.duration,
+                       seed=args.seed, max_prompt=16, max_new=24)
+    failures = [parse_failure(f) for f in args.fail]
+    m = run_serving(eng, wl, duration=600.0, orchestrator=orch,
+                    failures=failures, step_time=0.05)
+
+    tbt = m.tbt_values()
+    print(f"[serve] {cfg.name} tarragon={not args.no_tarragon} "
+          f"AW={args.num_aw} EW={args.num_ew}")
+    print(f"  requests finished: {len(m.finished)}/{len(wl)}")
+    print(f"  tokens: {len(m.token_log)}  "
+          f"throughput: {m.throughput():.1f} tok/s")
+    if tbt.size:
+        print(f"  TBT p50={np.median(tbt)*1e3:.1f}ms "
+              f"p95={np.percentile(tbt,95)*1e3:.1f}ms "
+              f"max_stall={m.max_stall()*1e3:.1f}ms")
+    for e in orch.events:
+        print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
+
+
+if __name__ == "__main__":
+    main()

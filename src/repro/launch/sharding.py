@@ -1,0 +1,200 @@
+"""Sharding rules: map every param / cache / activation leaf to a
+PartitionSpec on the production mesh.
+
+Baseline (paper-faithful MegaScale/DEP mapping):
+  * attention params  — tensor-parallel over ``model`` (heads / d_ff split),
+    batch over ``pod``+``data``  (AW group = data-parallel attention)
+  * MoE expert banks  — expert axis over ``model`` (EW group = expert
+    parallel); optionally the per-expert FF dim over ``data`` for weights
+    that exceed HBM otherwise (kimi-k2)
+  * shadow banks      — like experts when the slot count divides, else
+    replicated (they are one EW's worth of memory)
+  * KV caches         — batch over dp; KV heads over ``model`` when they
+    divide, else the sequence axis (long_500k / few-KV-head archs)
+
+Everything is divisibility-guarded: a dim is only sharded if the axis size
+divides it, so every (arch x shape x mesh) combination lowers.
+``ShardingPolicy`` carries the per-arch/hillclimb overrides.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    expert_ff_over_data: bool = False    # kimi-k2: shard expert FF over data
+    vocab_over_model: bool = True
+    seq_shard_long: bool = True          # batch-1 decode: shard KV seq
+    # ZeRO-style weight sharding over the pod axis (train memory relief)
+    zero_over_pod: bool = False
+    # §Perf iteration 3: only seq-shard a KV cache when replicating it
+    # would actually cost memory — a ring-buffered sliding-window cache is
+    # small, and sharding its sequence axis makes every decode layer pay
+    # gather/permute collectives for nothing.
+    cache_replicate_max_bytes: int = 256 * 2**20
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0 and n >= size
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[a] for a in name]))
+    return mesh.shape[name]
+
+
+class Sharder:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 policy: ShardingPolicy = ShardingPolicy()):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy
+        self.dp = dp_axes(mesh)
+        self.dp = self.dp[0] if len(self.dp) == 1 else self.dp
+        self.mp = "model"
+        self.mp_size = mesh.shape["model"]
+        self.dp_size = _axis_size(mesh, self.dp)
+        self.data_size = mesh.shape["data"]
+
+    # ------------------------------------------------------------------
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _spec_nd(self, ndim: int, placed: Dict[int, Any]) -> P:
+        dims = [None] * ndim
+        for ax, name in placed.items():
+            dims[ax] = name
+        return P(*dims)
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        nd = len(shape)
+        mp, dp = self.mp, "data"
+        pol = self.policy
+
+        def last_over_mp():
+            return {nd - 1: mp} if _div(shape[-1], self.mp_size) else {}
+
+        def penult_over_mp():
+            return {nd - 2: mp} if _div(shape[-2], self.mp_size) else {}
+
+        placed: Dict[int, Any] = {}
+        if re.search(r"(experts|shadow)/(wg|wu)$", path):
+            # [..., E, D, F]
+            if _div(shape[nd - 3], self.mp_size):
+                placed[nd - 3] = mp
+            if pol.expert_ff_over_data and _div(shape[-1], self.data_size):
+                placed[nd - 1] = dp
+        elif re.search(r"(experts|shadow)/wd$", path):
+            # [..., E, F, D]
+            if _div(shape[nd - 3], self.mp_size):
+                placed[nd - 3] = mp
+            if pol.expert_ff_over_data and _div(shape[-2], self.data_size):
+                placed[nd - 2] = dp
+        elif re.search(r"router$", path):
+            placed = {}
+        elif re.search(r"(embed|unembed)$", path):
+            if pol.vocab_over_model and _div(shape[-2], self.mp_size):
+                placed[nd - 2] = mp
+        elif re.search(r"/(wq|wk|wv|w_up|w_gate|in_proj|wi|wf|wz|wo_gate|"
+                       r"ri|rf|rz|ro)$", path):
+            placed = last_over_mp()
+        elif re.search(r"/(wo|w_down|out_proj)$", path):
+            placed = penult_over_mp()
+        elif re.search(r"/(bq|bk|bv)$", path):
+            placed = last_over_mp()
+        elif re.search(r"/conv_w$", path):
+            placed = last_over_mp()
+        else:
+            placed = {}
+
+        if pol.zero_over_pod and "pod" in self.mesh.axis_names:
+            # FSDP/ZeRO: additionally shard the largest unplaced dim over pod
+            pod = self.mesh.shape["pod"]
+            free = [i for i in range(nd) if i not in placed]
+            free.sort(key=lambda i: -shape[i])
+            for i in free:
+                if _div(shape[i], pod):
+                    placed[i] = "pod"
+                    break
+        return self._spec_nd(nd, placed)
+
+    def shard_params(self, params_shapes):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+        out = []
+        for path, leaf in flat:
+            p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+            out.append(self.named(self.param_spec(p, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # cache
+    # ------------------------------------------------------------------
+    def cache_spec(self, kind: str, shape, batch_axis: int) -> P:
+        nd = len(shape)
+        placed: Dict[int, Any] = {}
+        b = shape[batch_axis]
+        if _div(b, self.dp_size):
+            placed[batch_axis] = self.dp
+        elif _div(b, self.data_size):
+            placed[batch_axis] = "data"
+        if kind in ("attn_k", "attn_v"):
+            h_ax, s_ax = batch_axis + 2, batch_axis + 1
+            leaf_bytes = int(np.prod(shape)) * 2  # bf16
+            if batch_axis in placed:
+                leaf_bytes //= self.dp_size
+            if _div(shape[h_ax], self.mp_size):
+                placed[h_ax] = self.mp
+            elif self.policy.seq_shard_long and _div(shape[s_ax],
+                                                     self.mp_size) and \
+                    leaf_bytes > self.policy.cache_replicate_max_bytes:
+                placed[s_ax] = self.mp
+        elif kind == "state":
+            # shard the first post-batch dim divisible by model axis
+            for ax in range(batch_axis + 1, nd):
+                if _div(shape[ax], self.mp_size):
+                    placed[ax] = self.mp
+                    break
+        return self._spec_nd(nd, placed)
+
+    def shard_cache(self, layout, cache_shapes):
+        leaves, treedef = jax.tree_util.tree_flatten(cache_shapes)
+        out = []
+        for leaf, ax, kind in zip(leaves, layout.batch_axis,
+                                  layout.leaf_kind):
+            out.append(self.named(self.cache_spec(kind, leaf.shape, ax)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # activations / batch inputs
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape) -> P:
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if _div(shape[0], self.dp_size):
+            return self._spec_nd(nd, {0: self.dp})
+        if _div(shape[0], self.data_size):
+            return self._spec_nd(nd, {0: "data"})
+        return self._spec_nd(nd, {})
+
+    def shard_batch(self, tree):
+        return jax.tree_util.tree_map(
+            lambda l: self.named(self.batch_spec(l.shape)), tree)
+
+    def replicated(self, tree):
+        return jax.tree_util.tree_map(lambda _: self.named(P()), tree)

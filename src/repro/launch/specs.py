@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, zero allocation — the dry-run lowers against these.
+
+``build_case`` assembles everything one (arch x shape x mesh) combination
+needs: the step function, arg structs and shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.launch.mesh import dp_axes, dp_size
+from repro.launch.sharding import Sharder, ShardingPolicy
+from repro.models import get_model
+from repro.serving.kvcache import CacheLayout
+from repro.training import init_opt_state, make_train_step
+
+KEY_STRUCT = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+# Long-context variants (DESIGN.md §4): archs whose full-attention layers
+# get a sliding window for the 500k decode shape.
+LONG_VARIANT_WINDOW = {"zamba2-7b": 8192, "gemma2-2b": 4096}
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeConfig,
+                 dtype: str = "bfloat16") -> ModelConfig:
+    cfg = dataclasses.replace(cfg, dtype=dtype)
+    if shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat=True)
+    if shape.name == "long_500k" and cfg.name in LONG_VARIANT_WINDOW:
+        win = LONG_VARIANT_WINDOW[cfg.name]
+        if cfg.sliding_window == 0:
+            cfg = dataclasses.replace(cfg, sliding_window=win)
+    return cfg
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig, *,
+                  with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _struct((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _struct((b, s), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = _struct((b, cfg.encoder_seq, cfg.d_model),
+                                  cfg.jnp_dtype)
+    return batch
+
+
+@dataclass
+class DryrunCase:
+    name: str
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_case(arch: str, shape_name: str, mesh,
+               policy: Optional[ShardingPolicy] = None,
+               tarragon: bool = True, dtype: str = "bfloat16") -> DryrunCase:
+    shape = SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape, dtype)
+    if policy is None:
+        policy = ShardingPolicy(
+            expert_ff_over_data=(cfg.name == "kimi-k2-1t-a32b"),
+            zero_over_pod=(shape.kind == "train"))
+    num_aw = mesh.shape["data"]
+    num_ew = mesh.shape["model"]
+    api = get_model(cfg, num_aw=num_aw, num_ew=num_ew, tarragon=tarragon)
+    sharder = Sharder(cfg, mesh, policy)
+
+    params_s = jax.eval_shape(api.init_params, KEY_STRUCT)
+    params_sh = sharder.shard_params(params_s)
+    rs_s = jax.eval_shape(api.init_route_state)
+    rs_sh = sharder.replicated(rs_s)
+
+    if shape.kind == "train":
+        batch_s = batch_structs(cfg, shape, with_labels=True)
+        batch_sh = sharder.shard_batch(batch_s)
+        opt_s = jax.eval_shape(init_opt_state, params_s)
+        opt_sh = type(opt_s)(params_sh, params_sh,
+                             sharder.named(jax.sharding.PartitionSpec()))
+        train_step = make_train_step(api)
+        return DryrunCase(
+            name=f"{arch}:{shape_name}:train",
+            step_fn=train_step,
+            args=(params_s, opt_s, batch_s, rs_s),
+            in_shardings=(params_sh, opt_sh, batch_sh, rs_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch_s = batch_structs(cfg, shape, with_labels=False)
+        batch_sh = sharder.shard_batch(batch_s)
+        step = partial(api.prefill, max_seq=shape.seq_len)
+        return DryrunCase(
+            name=f"{arch}:{shape_name}:prefill",
+            step_fn=step,
+            args=(params_s, batch_s, rs_s),
+            in_shardings=(params_sh, batch_sh, rs_sh),
+            out_shardings=None,
+        )
+
+    # decode: ONE new token against a seq_len KV cache
+    b, s = shape.global_batch, shape.seq_len
+    cache_s = jax.eval_shape(lambda: api.init_cache(b, s))
+    layout = CacheLayout(api.init_cache)
+    cache_sh = sharder.shard_cache(layout, cache_s)
+    tokens_s = _struct((b,), jnp.int32)
+    pos_s = _struct((b,), jnp.int32)
+    tok_sh = sharder.named(sharder.batch_spec((b,)))
+    logits_sh = None
+    return DryrunCase(
+        name=f"{arch}:{shape_name}:decode",
+        step_fn=api.decode,
+        args=(params_s, tokens_s, pos_s, cache_s, rs_s),
+        in_shardings=(params_sh, tok_sh, tok_sh, cache_sh, rs_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(3,),
+    )

@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid stack: Mamba2 blocks with a *shared* transformer
+(attention+MLP) block applied every ``hybrid_attn_every`` Mamba blocks
+[arXiv:2411.15242].
+
+The shared block's weights are closed over (not stacked) — the defining
+Zamba2 trick — but each occurrence keeps its own KV cache. Scan runs over
+super-units of (``every`` mamba blocks + 1 shared-attn application); trailing
+mamba blocks that don't fill a unit are scanned separately.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import refe
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (cast_tree, embed_init, mlp, mlp_init,
+                                 rmsnorm, rmsnorm_init, unembed)
+from repro.models.transformer import ModelApi
+
+
+def _geometry(cfg: ModelConfig):
+    every = cfg.hybrid_attn_every
+    r = cfg.num_layers // every
+    trailing = cfg.num_layers - r * every
+    return every, r, trailing
+
+
+def _mamba_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": rmsnorm_init(cfg.d_model), "mamba": mamba2.mamba_init(k2, cfg)}
+
+
+def build_hybrid(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
+                 tarragon: bool = True) -> ModelApi:
+    every, r, trailing = _geometry(cfg)
+    dtype = cfg.jnp_dtype
+    window = cfg.sliding_window  # 0 except the long_500k variant
+
+    def init_params(key):
+        ks = jax.random.split(key, 6)
+        params = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "shared": {
+                "ln1": rmsnorm_init(cfg.d_model),
+                "attn": attn.attn_init(ks[1], cfg),
+                "ln2": rmsnorm_init(cfg.d_model),
+                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+            },
+        }
+
+        def unit_init(k):
+            return jax.vmap(lambda kk: _mamba_block_init(kk, cfg))(
+                jax.random.split(k, every))
+
+        params["units"] = jax.vmap(unit_init)(jax.random.split(ks[3], r))
+        if trailing:
+            params["trailing"] = jax.vmap(
+                lambda kk: _mamba_block_init(kk, cfg))(
+                jax.random.split(ks[4], trailing))
+        return cast_tree(params, dtype)
+
+    def init_cache(batch: int, max_seq: int):
+        kv = attn.init_cache(cfg, batch, max_seq, window=window)
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (r,) + a.shape), kv)
+        st = mamba2.init_state(cfg, batch, dtype)
+        units = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (r, every) + a.shape), st)
+        cache = {"kv": kv, "units": units}
+        if trailing:
+            cache["trailing"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (trailing,) + a.shape), st)
+        return cache
+
+    def _shared_attn(params, x, mode, positions, pos, kv):
+        p = params["shared"]
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "decode":
+            a, kv = attn.attn_decode(cfg, p["attn"], h, kv, pos,
+                                     window=window)
+        else:
+            a, kv = attn.attn_full(cfg, p["attn"], h, positions,
+                                   window=window, cache=kv)
+        x = x + a
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], h, cfg.act), kv
+
+    def _mamba_apply(bp, x, st, mode):
+        h = rmsnorm(bp["ln"], x, cfg.norm_eps)
+        if mode == "decode":
+            y, st = mamba2.mamba_decode_step(cfg, bp["mamba"], h, st)
+        else:
+            y, st = mamba2.mamba_forward(cfg, bp["mamba"], h, st)
+        return x + y, st
+
+    def _run(params, x, mode, positions=None, pos=None, cache=None):
+        track = cache is not None
+
+        def unit_body(carry, xs):
+            h = carry
+            unit_params, unit_cache = xs
+            states = unit_cache["states"] if track else None
+
+            def mamba_body(hc, mxs):
+                bp, st = mxs
+                hc, st_new = _mamba_apply(bp, hc, st, mode)
+                return hc, st_new
+
+            if track:
+                h, new_states = jax.lax.scan(
+                    mamba_body, h, (unit_params, states))
+            else:
+                h, _ = jax.lax.scan(
+                    lambda hc, bp: mamba_body(hc, (bp, None)), h,
+                    unit_params)
+                new_states = None
+            kv = unit_cache["kv"] if track else None
+            h, kv_new = _shared_attn(params, h, mode, positions, pos, kv)
+            ys = {"states": new_states, "kv": kv_new} if track else None
+            return h, ys
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        if track:
+            xs = (params["units"],
+                  {"states": cache["units"], "kv": cache["kv"]})
+            x, ys = jax.lax.scan(body, x, xs)
+            new_cache = {"units": ys["states"], "kv": ys["kv"]}
+        else:
+            x, _ = jax.lax.scan(
+                lambda c, p: body(c, (p, {})), x, params["units"])
+            new_cache = None
+
+        if trailing:
+            def tbody(hc, txs):
+                if track:
+                    bp, st = txs
+                else:
+                    bp, st = txs, None
+                hc, st_new = _mamba_apply(bp, hc, st, mode)
+                return hc, st_new
+
+            if track:
+                x, new_tr = jax.lax.scan(
+                    tbody, x, (params["trailing"], cache["trailing"]))
+                new_cache["trailing"] = new_tr
+            else:
+                x, _ = jax.lax.scan(tbody, x, params["trailing"])
+
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps), new_cache
+
+    def _embed(params, tokens):
+        return params["embed"].astype(dtype)[tokens]
+
+    def forward_train(params, batch, route_state):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _ = _run(params, _embed(params, tokens), "train",
+                    positions=positions)
+        return unembed(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    def prefill(params, batch, route_state, max_seq: int):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        cache = init_cache(b, max_seq)
+        x, cache = _run(params, _embed(params, tokens), "prefill",
+                        positions=positions, cache=cache)
+        return unembed(cfg, params, x[:, -1]), cache
+
+    def decode(params, tokens, pos, cache, route_state, capacity=None):
+        x = _embed(params, tokens[:, None])
+        x, cache = _run(params, x, "decode", pos=pos, cache=cache)
+        return unembed(cfg, params, x[:, 0]), cache
+
+    def init_route_state():
+        return refe.RouteState(
+            candidates=jnp.zeros((0, 2), jnp.int32),
+            ew_health=jnp.ones((num_ew,), bool),
+            aw_health=jnp.ones((num_aw,), bool),
+            shadow_assignment=jnp.zeros((0,), jnp.int32))
+
+    return ModelApi(cfg, None, num_aw, num_ew, init_params, init_cache,
+                    forward_train, prefill, decode, init_route_state)

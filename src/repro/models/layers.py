@@ -1,0 +1,109 @@
+"""Shared low-level layers: norms, RoPE, dense MLP, embeddings.
+
+Pure-functional: params are plain dict pytrees; every function takes
+``cfg: ModelConfig`` explicitly. Initializers return float32 and are cast to
+``cfg.jnp_dtype`` at the top level (keeps smoke tests exact, dry-run bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, scale: float = 1.0):
+    std = scale / jnp.sqrt(jnp.asarray(in_dim, jnp.float32))
+    return jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    angles = angles[..., None, :]                       # [..., S, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense MLP (SwiGLU or plain)
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff), "w_down": dense_init(ks[1], d_ff, d)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(params, x, act: str = "silu"):
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act_fn(act)(x @ params["w_gate"]) * up
+    else:
+        up = act_fn(act)(up)
+    return up @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding with optional logit softcap (gemma2)
+# --------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def unembed(cfg: ModelConfig, params, h):
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = h @ w.T.astype(h.dtype)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree)

@@ -1,0 +1,130 @@
+"""Mamba2 (SSD) block — the recurrent substrate for zamba2-7b.
+
+Per-request state is a compact (h [B,H,P,N], conv [B,W-1,Di]) pair rather
+than a growing KV cache — the favourable case for Tarragon's checkpointing
+(DESIGN.md §4): an incremental "segment" is one state snapshot of fixed size.
+
+Full-sequence path uses the chunked SSD scan (kernels/ssm_scan.py on TPU,
+sequential ref on CPU); decode is a single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    return d_inner, n_heads
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    n = cfg.ssm.state_dim
+    di, nh = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    # fused in_proj -> [z, x, B, C, dt]
+    proj_out = 2 * di + 2 * n + nh
+    p = {
+        "in_proj": dense_init(ks[0], d, proj_out),
+        "out_proj": dense_init(ks[1], di, d),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm.conv_width, di),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": rmsnorm_init(di),
+    }
+    return p
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=None):
+    n = cfg.ssm.state_dim
+    di, nh = mamba_dims(cfg)
+    w = cfg.ssm.conv_width
+    dt = dtype or cfg.jnp_dtype
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm.head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, di), dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, nh = mamba_dims(cfg)
+    n = cfg.ssm.state_dim
+    z, xin, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xin, b, c, dt
+
+
+def _causal_conv(params, xin, conv_state=None):
+    """Depthwise causal conv over time. xin: [B,S,Di]."""
+    w = params["conv_w"]                        # [W, Di]
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xin.shape[0], width - 1, xin.shape[-1]), xin.dtype)
+    else:
+        pad = conv_state.astype(xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)    # [B, S+W-1, Di]
+    out = sum(xp[:, i:i + xin.shape[1]] * w[i].astype(xin.dtype)
+              for i in range(width))
+    out = out + params["conv_b"].astype(xin.dtype)
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba_forward(cfg: ModelConfig, params, x, state=None):
+    """Full-sequence SSD. x: [B,S,D] -> (y [B,S,D], new_state or None).
+
+    Note: the chunked kernel assumes zero initial state (train/prefill from
+    scratch); a non-zero carried state is only used in decode.
+    """
+    bsz, s, _ = x.shape
+    di, nh = mamba_dims(cfg)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xin, b, c, dt_raw = _split_proj(cfg, proj)
+    conv_state = state["conv"] if state is not None else None
+    xin, new_conv = _causal_conv(params, xin, conv_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"])                   # [B,S,H]
+    a = -jnp.exp(params["a_log"])                             # [H]
+    xh = xin.reshape(bsz, s, nh, cfg.ssm.head_dim)
+    y, hf = kops.ssm_scan(xh, dt, a, b.astype(jnp.float32),
+                          c.astype(jnp.float32), chunk=cfg.ssm.chunk)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_state = {"h": hf, "conv": new_conv} if state is not None else None
+    return out, new_state
+
+
+def mamba_decode_step(cfg: ModelConfig, params, x, state):
+    """Single-token recurrence. x: [B,1,D] -> (y [B,1,D], new_state)."""
+    bsz = x.shape[0]
+    di, nh = mamba_dims(cfg)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xin, b, c, dt_raw = _split_proj(cfg, proj)
+    xin, new_conv = _causal_conv(params, xin, state["conv"])
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         params["dt_bias"])                   # [B,H]
+    a = -jnp.exp(params["a_log"])
+    xh = xin.reshape(bsz, nh, cfg.ssm.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                   # [B,H]
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh,
+                     b[:, 0].astype(jnp.float32))
+    h = state["h"] * decay[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h, c[:, 0].astype(jnp.float32))
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, {"h": h, "conv": new_conv}

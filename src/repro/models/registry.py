@@ -1,0 +1,20 @@
+"""Model family dispatch: config -> ModelApi."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import ModelApi, build_decoder
+
+
+def get_model(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
+              tarragon: bool = True) -> ModelApi:
+    kw = dict(num_aw=num_aw, num_ew=num_ew, tarragon=tarragon)
+    if cfg.is_encdec:
+        from repro.models.whisper import build_encdec
+        return build_encdec(cfg, **kw)
+    if cfg.xlstm_pattern:
+        from repro.models.xlstm_model import build_xlstm
+        return build_xlstm(cfg, **kw)
+    if cfg.ssm.enabled and cfg.hybrid_attn_every:
+        from repro.models.hybrid import build_hybrid
+        return build_hybrid(cfg, **kw)
+    return build_decoder(cfg, **kw)

@@ -1,0 +1,163 @@
+"""Whisper-small encoder-decoder backbone [arXiv:2212.04356].
+
+Per the brief's carve-out, the mel-spectrogram + conv frontend is a STUB:
+``batch["frames"]`` carries precomputed frame embeddings [B, T_enc, D].
+The encoder is stateless (Tarragon-wise it behaves like an EW: pure replay);
+the decoder holds self-attention KV plus cross-attention KV computed once at
+prefill — both are covered by per-request restoration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import refe
+from repro.models import attention as attn
+from repro.models.layers import (cast_tree, embed_init, mlp, mlp_init,
+                                 rmsnorm, rmsnorm_init, unembed)
+from repro.models.transformer import ModelApi
+
+
+def build_encdec(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
+                 tarragon: bool = True) -> ModelApi:
+    dtype = cfg.jnp_dtype
+    r_enc, r_dec = cfg.encoder_layers, cfg.num_layers
+
+    def _enc_layer_init(key):
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn.attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+        }
+
+    def _dec_layer_init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "self_attn": attn.attn_init(ks[0], cfg),
+            "ln_x": rmsnorm_init(cfg.d_model),
+            "cross_attn": attn.attn_init(ks[1], cfg, cross=True),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+        }
+
+    def init_params(key):
+        ks = jax.random.split(key, 4)
+        params = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "enc_final_norm": rmsnorm_init(cfg.d_model),
+            "enc": jax.vmap(_enc_layer_init)(jax.random.split(ks[1], r_enc)),
+            "dec": jax.vmap(_dec_layer_init)(jax.random.split(ks[2], r_dec)),
+        }
+        return cast_tree(params, dtype)
+
+    # ---- encoder -----------------------------------------------------------
+    def encode(params, frames):
+        b, t, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+        def body(h, lp):
+            a, _ = attn.attn_full(cfg, lp["attn"],
+                                  rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                  positions, causal=False)
+            h = h + a
+            h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                        cfg.act)
+            return h, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(body, frames.astype(dtype), params["enc"])
+        return rmsnorm(params["enc_final_norm"], h, cfg.norm_eps)
+
+    # ---- decoder -----------------------------------------------------------
+    def init_cache(batch: int, max_seq: int):
+        kv = attn.init_cache(cfg, batch, max_seq)
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (r_dec,) + a.shape), kv)
+        t_enc = cfg.encoder_seq
+        cross = {
+            "k": jnp.zeros((r_dec, batch, t_enc, cfg.num_kv_heads,
+                            cfg.head_dim_), dtype),
+            "v": jnp.zeros((r_dec, batch, t_enc, cfg.num_kv_heads,
+                            cfg.head_dim_), dtype),
+        }
+        return {"kv": kv, "cross": cross}
+
+    def _dec_layer(lp, h, mode, positions, pos, kv, cross_kv):
+        a, kv = (attn.attn_decode(cfg, lp["self_attn"],
+                                  rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                  kv, pos)
+                 if mode == "decode" else
+                 attn.attn_full(cfg, lp["self_attn"],
+                                rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                positions, cache=kv))
+        h = h + a
+        c = attn.attn_cross(cfg, lp["cross_attn"],
+                            rmsnorm(lp["ln_x"], h, cfg.norm_eps), cross_kv)
+        h = h + c
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, kv
+
+    def _run_decoder(params, x, mode, positions=None, pos=None, cache=None):
+        def body(h, xs):
+            lp, kv, cross = xs
+            h, kv_new = _dec_layer(lp, h, mode, positions, pos, kv, cross)
+            return h, kv_new
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, new_kv = jax.lax.scan(
+            body, x, (params["dec"], cache["kv"], cache["cross"]))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, {"kv": new_kv, "cross": cache["cross"]}
+
+    def _embed(params, tokens):
+        return params["embed"].astype(dtype)[tokens]
+
+    def _fill_cross(params, cache, enc_out):
+        def body(_, lp):
+            ckv = attn.cross_kv_init(cfg, lp["cross_attn"], enc_out)
+            return None, ckv
+
+        _, cross = jax.lax.scan(body, None, params["dec"])
+        return {"kv": cache["kv"], "cross": cross}
+
+    def forward_train(params, batch, route_state):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        enc_out = encode(params, batch["frames"])
+        cache = init_cache(b, s)
+        cache = _fill_cross(params, cache, enc_out)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _ = _run_decoder(params, _embed(params, tokens), "train",
+                            positions=positions, cache=cache)
+        return unembed(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    def prefill(params, batch, route_state, max_seq: int):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        enc_out = encode(params, batch["frames"])
+        cache = init_cache(b, max_seq)
+        cache = _fill_cross(params, cache, enc_out)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, cache = _run_decoder(params, _embed(params, tokens), "prefill",
+                                positions=positions, cache=cache)
+        return unembed(cfg, params, x[:, -1]), cache
+
+    def decode(params, tokens, pos, cache, route_state, capacity=None):
+        x = _embed(params, tokens[:, None])
+        x, cache = _run_decoder(params, x, "decode", pos=pos, cache=cache)
+        return unembed(cfg, params, x[:, 0]), cache
+
+    def init_route_state():
+        return refe.RouteState(
+            candidates=jnp.zeros((0, 2), jnp.int32),
+            ew_health=jnp.ones((num_ew,), bool),
+            aw_health=jnp.ones((num_aw,), bool),
+            shadow_assignment=jnp.zeros((0,), jnp.int32))
+
+    return ModelApi(cfg, None, num_aw, num_ew, init_params, init_cache,
+                    forward_train, prefill, decode, init_route_state)

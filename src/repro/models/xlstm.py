@@ -1,0 +1,239 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory with hidden-state recurrence) for xlstm-350m.
+
+Per-request state is constant-size (no KV growth) — like Mamba, the
+degenerate-cheap case for Tarragon's incremental checkpointing.
+
+Exponential gating is stabilized with the max-state m (paper eq. 15-17).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wi": dense_init(ks[3], d, h),   # input gate (exp)
+        "wf": dense_init(ks[4], d, h),   # forget gate (exp/sigmoid)
+        "wo_gate": dense_init(ks[5], d, d),
+        "wo": dense_init(jax.random.fold_in(key, 7), d, d),
+        "norm": rmsnorm_init(dh),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One time step. q,k,v: [B,H,Dh]; i,f: [B,H]."""
+    q, k, v, ig, fg = qkvif
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + m - m_new)
+    c_new = f_p[..., None, None] * c + \
+        i_p[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    h_t = jnp.einsum("bhvd,bhd->bhv", c_new, q) / denom[..., None]
+    return {"c": c_new, "n": n_new, "m": m_new}, h_t
+
+
+def _mlstm_projections(cfg, params, x):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    def heads(w):
+        return (x @ w.astype(x.dtype)).reshape(b, s, h, dh).astype(jnp.float32)
+
+    q = heads(params["wq"]) * scale
+    k = heads(params["wk"]) * scale
+    v = heads(params["wv"])
+    ig = (x @ params["wi"].astype(x.dtype)).astype(jnp.float32)  # [B,S,H]
+    fg = jax.nn.log_sigmoid(
+        (x @ params["wf"].astype(x.dtype)).astype(jnp.float32))
+    return q, k, v, ig, fg
+
+
+def _mlstm_recurrent(q, k, v, ig, fg, st0):
+    """Sequential reference: scan _mlstm_cell over time."""
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ig, fg))
+    stf, hs = jax.lax.scan(_mlstm_cell, st0, xs)
+    return jnp.moveaxis(hs, 0, 1), stf                 # [B,S,H,Dh]
+
+
+def _mlstm_chunked(q, k, v, ig, fg, st0, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (§Perf iteration 4).
+
+    The per-step recurrence carries the [B,H,Dh,Dh] matrix memory through
+    every timestep (HBM traffic ~ S * Dh^2); the chunkwise form (xLSTM
+    paper App. parallel formulation + chunk boundaries) computes intra-
+    chunk contributions as stabilized [T,T] attention-like matmuls and
+    carries (C, n, m) once per chunk. Exact, incl. the max-stabilizer.
+    """
+    bsz, s, h, dh = q.shape
+    t = min(chunk, s)
+    while s % t:
+        t //= 2
+    nc = s // t
+
+    def rs(a):  # [B,S,...] -> [B,NC,T,...]
+        return a.reshape(bsz, nc, t, *a.shape[2:])
+
+    qc, kc, vc, igc, fgc = map(rs, (q, k, v, ig, fg))
+    cumf = jnp.cumsum(fgc, axis=2)                      # [B,NC,T,H]
+    # intra-chunk log-weights b[t,j] = cumf_t - cumf_j + ig_j (j <= t)
+    ii = jnp.arange(t)
+    causal = ii[:, None] >= ii[None, :]
+    blog = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + \
+        igc[:, :, None, :, :]                           # [B,NC,Ti,Tj,H]
+    blog = jnp.where(causal[None, None, :, :, None], blog, -jnp.inf)
+    m_intra = jnp.max(blog, axis=3)                     # [B,NC,T,H]
+    scores = jnp.einsum("bgihd,bgjhd->bgijh", qc, kc)   # [B,NC,Ti,Tj,H]
+    # end-of-chunk carry log-weights
+    b_end = cumf[:, :, -1:, :] - cumf + igc             # [B,NC,T,H]
+    m_end_intra = jnp.max(b_end, axis=2)                # [B,NC,H]
+
+    def chunk_body(carry, xs_g):
+        c_in, n_in, m_in = carry
+        qg, kg, vg, cumf_g, blog_g, m_intra_g, sc_g, bend_g, mendi_g = xs_g
+        m_carry = m_in[:, None, :] + cumf_g             # [B,T,H]
+        m_t = jnp.maximum(m_intra_g, m_carry)           # [B,T,H]
+        d_mat = jnp.exp(blog_g - m_t[:, :, None, :])    # [B,Ti,Tj,H]
+        w = sc_g * d_mat
+        num = jnp.einsum("bijh,bjhd->bihd", w, vg)
+        den = jnp.sum(w, axis=2)                        # [B,Ti,H]
+        # carried-state contribution
+        scale = jnp.exp(m_carry - m_t)                  # [B,T,H]
+        num = num + scale[..., None] * \
+            jnp.einsum("bhvd,bihd->bihv", c_in, qg)
+        den = den + scale * jnp.einsum("bhd,bihd->bih", n_in, qg)
+        # stabilized-form clamp: matches max(|n~.q|, 1) of _mlstm_cell
+        h_t = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # chunk-end state update
+        m_carry_end = m_in + cumf_g[:, -1]              # [B,H]
+        m_out = jnp.maximum(m_carry_end, mendi_g)
+        w_end = jnp.exp(bend_g - m_out[:, None, :])     # [B,T,H]
+        c_out = jnp.exp(m_carry_end - m_out)[..., None, None] * c_in + \
+            jnp.einsum("bjh,bjhv,bjhd->bhvd", w_end, vg, kg)
+        n_out = jnp.exp(m_carry_end - m_out)[..., None] * n_in + \
+            jnp.einsum("bjh,bjhd->bhd", w_end, kg)
+        return (c_out, n_out, m_out), h_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (qc, kc, vc, cumf, blog, m_intra, scores, b_end,
+                m_end_intra))
+    (cf, nf, mf), hs = jax.lax.scan(
+        chunk_body, (st0["c"], st0["n"], st0["m"]), xs)
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, h, dh)
+    return hseq, {"c": cf, "n": nf, "m": mf}
+
+
+def mlstm_forward(cfg: ModelConfig, params, x, state=None, chunk: int = 64):
+    """x: [B,S,D] -> (y, final state). Chunkwise-parallel for sequences,
+    recurrent for single steps."""
+    b, s, d = x.shape
+    q, k, v, ig, fg = _mlstm_projections(cfg, params, x)
+    st0 = state if state is not None else mlstm_state(cfg, b)
+    if s > 1:
+        hseq, stf = _mlstm_chunked(q, k, v, ig, fg, st0, chunk=chunk)
+    else:
+        hseq, stf = _mlstm_recurrent(q, k, v, ig, fg, st0)
+    hseq = rmsnorm(params["norm"], hseq, cfg.norm_eps).astype(x.dtype)
+    hseq = hseq.reshape(b, s, d)
+    gate = jax.nn.silu(x @ params["wo_gate"].astype(x.dtype))
+    out = (hseq * gate) @ params["wo"].astype(x.dtype)
+    return out, stf
+
+
+def mlstm_decode_step(cfg: ModelConfig, params, x, state):
+    y, stf = mlstm_forward(cfg, params, x, state)
+    return y, stf
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    p = {}
+    for name, kk in zip(("i", "f", "z", "o"), ks[:4]):
+        p[f"w{name}"] = dense_init(kk, d, d)
+        p[f"r{name}"] = dense_init(ks[4 + "ifzo".index(name)], d, d, 0.5)
+    p["wo"] = dense_init(ks[8], d, d)
+    p["norm"] = rmsnorm_init(d)
+    return p
+
+
+def slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def _slstm_cell(params, state, xt):
+    """xt: [B,D] float32."""
+    hp = state["h"]
+
+    def gate(name):
+        return xt @ params[f"w{name}"] + hp @ params[f"r{name}"]
+
+    ig, fg = gate("i"), jax.nn.log_sigmoid(gate("f"))
+    zt = jnp.tanh(gate("z"))
+    ot = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(fg + state["m"], ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + state["m"] - m_new)
+    c_new = f_p * state["c"] + i_p * zt
+    n_new = f_p * state["n"] + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_forward(cfg: ModelConfig, params, x, state=None):
+    b, s, d = x.shape
+    st0 = state if state is not None else slstm_state(cfg, b)
+    p32 = {k: v.astype(jnp.float32) if hasattr(v, "astype") else v
+           for k, v in params.items() if k != "norm"}
+    p32["norm"] = params["norm"]
+
+    def step(st, xt):
+        st = _slstm_cell(p32, st, xt)
+        return st, st["h"]
+
+    stf, hs = jax.lax.scan(step, st0,
+                           jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    hseq = jnp.moveaxis(hs, 0, 1)
+    hseq = rmsnorm(params["norm"], hseq, cfg.norm_eps).astype(x.dtype)
+    out = hseq @ params["wo"].astype(x.dtype)
+    return out, stf
+
+
+def slstm_decode_step(cfg: ModelConfig, params, x, state):
+    y, stf = slstm_forward(cfg, params, x, state)
+    return y, stf

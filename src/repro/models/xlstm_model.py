@@ -1,0 +1,109 @@
+"""xLSTM-350m stack builder: alternating mLSTM/sLSTM blocks per
+``cfg.xlstm_pattern``, scanned over repeated units [arXiv:2405.04517].
+Constant-size recurrent state per request (no KV cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import refe
+from repro.models import xlstm as xl
+from repro.models.layers import (cast_tree, embed_init, rmsnorm,
+                                 rmsnorm_init, unembed)
+from repro.models.transformer import ModelApi
+
+_INIT = {"mlstm": xl.mlstm_init, "slstm": xl.slstm_init}
+_FWD = {"mlstm": xl.mlstm_forward, "slstm": xl.slstm_forward}
+_STEP = {"mlstm": xl.mlstm_decode_step, "slstm": xl.slstm_decode_step}
+_STATE = {"mlstm": xl.mlstm_state, "slstm": xl.slstm_state}
+
+
+def build_xlstm(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
+                tarragon: bool = True) -> ModelApi:
+    pattern = cfg.xlstm_pattern
+    u = len(pattern)
+    assert cfg.num_layers % u == 0
+    r = cfg.num_layers // u
+    dtype = cfg.jnp_dtype
+
+    def init_params(key):
+        ks = jax.random.split(key, 2)
+        params = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+
+        def unit_init(k):
+            lk = jax.random.split(k, u)
+            return tuple(
+                {"ln": rmsnorm_init(cfg.d_model),
+                 "cell": _INIT[pattern[i]](lk[i], cfg)}
+                for i in range(u))
+
+        params["blocks"] = jax.vmap(unit_init)(jax.random.split(ks[1], r))
+        return cast_tree(params, dtype)
+
+    def init_cache(batch: int, max_seq: int = 0):
+        def one(kind):
+            st = _STATE[kind](cfg, batch)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (r,) + a.shape), st)
+
+        return tuple(one(k) for k in pattern)
+
+    def _run(params, x, mode, cache=None):
+        track = cache is not None
+
+        def unit_body(carry, xs):
+            h = carry
+            unit_params, unit_states = xs
+            new_states = []
+            for i, kind in enumerate(pattern):
+                bp = unit_params[i]
+                st = unit_states[i] if track else None
+                hn = rmsnorm(bp["ln"], h, cfg.norm_eps)
+                fn = _STEP[kind] if mode == "decode" else _FWD[kind]
+                y, st_new = fn(cfg, bp["cell"], hn, st)
+                h = h + y
+                new_states.append(st_new)
+            return h, (tuple(new_states) if track else None)
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        if track:
+            x, new_cache = jax.lax.scan(body, x,
+                                        (params["blocks"], cache))
+        else:
+            x, _ = jax.lax.scan(
+                lambda c, p: body(c, (p, None)), x, params["blocks"])
+            new_cache = None
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps), new_cache
+
+    def _embed(params, tokens):
+        return params["embed"].astype(dtype)[tokens]
+
+    def forward_train(params, batch, route_state):
+        x, _ = _run(params, _embed(params, batch["tokens"]), "train")
+        return unembed(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    def prefill(params, batch, route_state, max_seq: int = 0):
+        b = batch["tokens"].shape[0]
+        cache = init_cache(b)
+        x, cache = _run(params, _embed(params, batch["tokens"]), "prefill",
+                        cache=cache)
+        return unembed(cfg, params, x[:, -1]), cache
+
+    def decode(params, tokens, pos, cache, route_state, capacity=None):
+        x = _embed(params, tokens[:, None])
+        x, cache = _run(params, x, "decode", cache=cache)
+        return unembed(cfg, params, x[:, 0]), cache
+
+    def init_route_state():
+        return refe.RouteState(
+            candidates=jnp.zeros((0, 2), jnp.int32),
+            ew_health=jnp.ones((num_ew,), bool),
+            aw_health=jnp.ones((num_aw,), bool),
+            shadow_assignment=jnp.zeros((0,), jnp.int32))
+
+    return ModelApi(cfg, None, num_aw, num_ew, init_params, init_cache,
+                    forward_train, prefill, decode, init_route_state)

@@ -1,0 +1,305 @@
+"""Tarragon inference engine: continuous batching over a slot-based cache,
+decoupled AW/EW roles via mesh-partitioned routing, per-token incremental
+KV checkpointing, and worker-granularity failure injection/recovery.
+
+The engine is the AW-side "Compute Engine" of Fig. 5, generalized to all ten
+assigned architectures. One jitted decode step serves every active slot;
+prefill runs per request (exact prompt length) and the resulting cache slice
+is merged into the global slot cache.
+
+Failure API (used by the orchestrator and by tests):
+  * ``fail_aw(a)``   — drop AW a: its slots are lost; requests recover via
+    per-request restoration from the checkpoint store onto healthy AWs.
+  * ``fail_ew(e)``   — drop EW e: the ERT immediately resolves its experts
+    to shadow slots (AW-side self-healing); nothing else changes.
+  * ``provision_*`` — background capacity restoration (§5.4).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import selfheal
+from repro.core.checkpoint import CheckpointStore, KVCheckpointer
+from repro.core.refe import RouteState
+from repro.models import get_model
+from repro.serving.kvcache import CacheLayout, SlotManager
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 96
+    num_aw: int = 2
+    num_ew: int = 2
+    tarragon: bool = True          # False = MegaScale-style static binding
+    checkpoint: bool = True
+    checkpoint_reorder: int = 0    # test hook: reorder window for WR arrival
+    greedy: bool = True
+    capacity_factor_decode: float = 0.0  # 0 = use model default
+
+
+@dataclass
+class RequestState:
+    rid: str
+    slot: int
+    prompt: np.ndarray
+    max_new: int
+    tokens: List[int] = field(default_factory=list)  # generated tokens
+    pos: int = 0                  # next position to write
+    done: bool = False
+    ttft: float = -1.0
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def aw(self) -> int:
+        return self._aw
+
+    _aw: int = -1
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, key=None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.api = get_model(cfg, num_aw=ecfg.num_aw, num_ew=ecfg.num_ew,
+                             tarragon=ecfg.tarragon)
+        self.params = self.api.init_params(key)
+        self.route_state: RouteState = self.api.init_route_state()
+        self.cache = self.api.init_cache(ecfg.max_batch, ecfg.max_seq)
+        self.layout = CacheLayout(self.api.init_cache)
+        self.slots = SlotManager(ecfg.max_batch, ecfg.num_aw)
+        self.store = CheckpointStore()
+        self.checkpointers = {
+            a: KVCheckpointer(self.store, a,
+                              reorder_window=ecfg.checkpoint_reorder, seed=a)
+            for a in range(ecfg.num_aw)}
+        self.requests: Dict[str, RequestState] = {}
+        self._extract = self.layout.make_batched_extractor()
+        self._decode = jax.jit(self.api.decode)
+        self._prefill = jax.jit(self.api.prefill,
+                                static_argnames=("max_seq",))
+        self.failed_aws: set = set()
+        self.failed_ews: set = set()
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _healthy_aws(self) -> List[int]:
+        return [a for a in range(self.ecfg.num_aw) if a not in self.failed_aws]
+
+    def choose_aw(self) -> Optional[int]:
+        """Gateway policy: least-loaded healthy AW with a free slot."""
+        best, best_free = None, 0
+        for a in self._healthy_aws():
+            f = self.slots.free_count(a)
+            if f > best_free:
+                best, best_free = a, f
+        return best
+
+    def submit(self, rid: str, prompt: np.ndarray, max_new: int,
+               frames: Optional[np.ndarray] = None) -> bool:
+        aw = self.choose_aw()
+        if aw is None:
+            return False
+        slot = self.slots.alloc(aw)
+        prompt = np.asarray(prompt, np.int32)
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        if self.cfg.is_encdec:
+            if frames is None:
+                frames = np.zeros((self.cfg.encoder_seq, self.cfg.d_model),
+                                  np.float32)
+            batch["frames"] = jnp.asarray(frames[None])
+        # prefill runs on a single healthy AW: other AWs' health must not
+        # mask this request's tokens (EW health still applies)
+        rs_prefill = self.route_state._replace(
+            aw_health=jnp.ones_like(self.route_state.aw_health))
+        last_logits, req_cache = self._prefill(
+            self.params, batch, rs_prefill, max_seq=self.ecfg.max_seq)
+        state = self.layout.request_state(req_cache, 0)
+        self.cache = self.layout.write_request_state(self.cache, slot, state)
+
+        first = int(jnp.argmax(last_logits[0]))
+        st = RequestState(rid=rid, slot=slot, prompt=prompt, max_new=max_new,
+                          tokens=[first], pos=len(prompt),
+                          ttft=time.monotonic())
+        st._aw = aw
+        self.requests[rid] = st
+
+        if self.ecfg.checkpoint:
+            ck = self.checkpointers[aw]
+            ck.register(rid, prompt_len=len(prompt))
+            # bulk-checkpoint the prefill KV (prompt tokens), then stream
+            # incrementally per decoded token (§6.1). One batched gather.
+            n = len(prompt)
+            slots = jnp.full((n,), slot, jnp.int32)
+            toks = jnp.arange(n, dtype=jnp.int32)
+            stacked = [np.asarray(a)
+                       for a in self._extract(self.cache, slots, toks)]
+            for t in range(n):
+                seg = [a[t] for a in stacked]
+                tv = int(prompt[t]) if t + 1 < n else first
+                ck.checkpoint_token(rid, t, seg, token_value=tv)
+            ck.flush()
+        return True
+
+    # ------------------------------------------------------------------
+    # decode step
+    # ------------------------------------------------------------------
+    def active_requests(self) -> List[RequestState]:
+        return [r for r in self.requests.values() if not r.done]
+
+    def step(self) -> Dict[str, int]:
+        """One decode step over all active slots. Returns {rid: new_token}."""
+        act = self.active_requests()
+        if not act:
+            return {}
+        tokens = np.zeros((self.ecfg.max_batch,), np.int32)
+        pos = np.zeros((self.ecfg.max_batch,), np.int32)
+        for r in act:
+            tokens[r.slot] = r.tokens[-1]
+            pos[r.slot] = r.pos
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos), self.cache,
+            self.route_state)
+        logits = np.asarray(logits)
+        out = {}
+        now = time.monotonic()
+        ck_reqs = [r for r in act
+                   if self.ecfg.checkpoint and r.aw not in self.failed_aws]
+        stacked = None
+        if ck_reqs:
+            # single batched device->host gather for all requests' segments
+            slots = jnp.asarray([r.slot for r in ck_reqs], jnp.int32)
+            toks = jnp.asarray([r.pos for r in ck_reqs], jnp.int32)
+            stacked = [np.asarray(a)
+                       for a in self._extract(self.cache, slots, toks)]
+        ck_index = {r.rid: i for i, r in enumerate(ck_reqs)}
+        for r in act:
+            nxt = int(np.argmax(logits[r.slot]))
+            written_pos = r.pos          # decode wrote KV at this position
+            r.pos += 1
+            r.tokens.append(nxt)
+            r.token_times.append(now)
+            out[r.rid] = nxt
+            if r.rid in ck_index:
+                i = ck_index[r.rid]
+                seg = [a[i] for a in stacked]
+                self.checkpointers[r.aw].checkpoint_token(
+                    r.rid, written_pos, seg, token_value=nxt)
+            if len(r.tokens) >= r.max_new or r.pos >= self.ecfg.max_seq - 1:
+                r.done = True
+        for a, ck in self.checkpointers.items():
+            ck.flush()
+        self.steps += 1
+        return out
+
+    # ------------------------------------------------------------------
+    # failure injection & recovery
+    # ------------------------------------------------------------------
+    def fail_ew(self, ew: int):
+        self.failed_ews.add(ew)
+        self.route_state = selfheal.fail_ew(self.route_state, ew)
+
+    def fail_aw(self, aw: int):
+        """AW crash: its slots (and un-checkpointed state) are gone."""
+        self.failed_aws.add(aw)
+        self.route_state = selfheal.fail_aw(self.route_state, aw)
+        self.slots.drop_aw(aw)
+
+    def recover_aw_requests(self) -> List[str]:
+        """Per-request restoration (§6.2): move every affected request to a
+        healthy AW, restore committed KV, resume from the committed token."""
+        recovered = []
+        for aw in sorted(self.failed_aws):
+            for rid in self.store.active_requests_on(aw):
+                r = self.requests.get(rid)
+                if r is None or r.done:
+                    continue
+                target = self.choose_aw()
+                if target is None:
+                    continue  # no capacity until provisioning completes
+                new_slot = self.slots.alloc(target)
+                committed, tok_val, segs = self.store.restore_request(rid)
+                self.cache = self.layout.clear_slot(self.cache, new_slot)
+                for t, seg in segs.items():
+                    self.cache = self.layout.write_token_segment(
+                        self.cache, new_slot, t, seg)
+                # rewind the request to the committed point
+                n_prompt = len(r.prompt)
+                n_gen_committed = max(0, committed + 1 - n_prompt) + 1
+                r.tokens = r.tokens[:n_gen_committed]
+                if tok_val >= 0:
+                    r.tokens[-1] = tok_val
+                r.pos = committed + 1
+                r.slot = new_slot
+                r._aw = target
+                self.store.reassign(rid, target)
+                recovered.append(rid)
+        return recovered
+
+    def provision_aw(self, aw: int):
+        in_use = {r.slot for r in self.active_requests()}
+        self.failed_aws.discard(aw)
+        self.slots.restore_aw(aw, in_use)
+        self.route_state = selfheal.recover_aw(self.route_state, aw)
+
+    def provision_ew(self, ew: int, repoint_protect: Optional[int] = None):
+        self.failed_ews.discard(ew)
+        self.route_state = selfheal.recover_ew(self.route_state, ew)
+        if repoint_protect is not None:
+            self.repoint_shadows(repoint_protect)
+
+    def repoint_shadows(self, protect_ew: int):
+        """Background re-pointing of shadow slots (host-side weight push)."""
+        if self.api.placement is None or \
+                self.api.placement.num_shadow_slots == 0:
+            return
+        new_rs = None
+
+        def walk(node):
+            nonlocal new_rs
+            if isinstance(node, dict):
+                if "experts" in node and "shadow" in node:
+                    rs2, bank = selfheal.repoint_shadows(
+                        self.route_state, self.api.placement,
+                        node["experts"], protect_ew)
+                    new_rs = rs2
+                    node = dict(node)
+                    node["shadow"] = bank
+                    return node
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, tuple):
+                return tuple(walk(v) for v in node)
+            return node
+
+        self.params = walk(self.params)
+        if new_rs is not None:
+            self.route_state = new_rs
+
+    def release_request(self, rid: str):
+        r = self.requests.pop(rid, None)
+        if r is None:
+            return
+        if r.aw not in self.failed_aws:
+            self.cache = self.layout.clear_slot(self.cache, r.slot)
+            self.slots.release(r.slot)
+        self.store.release(rid)
+
+    # ------------------------------------------------------------------
+    def generate(self, rid: str, prompt: np.ndarray, max_new: int
+                 ) -> List[int]:
+        """Convenience: run one request to completion."""
+        assert self.submit(rid, prompt, max_new)
+        r = self.requests[rid]
+        while not r.done:
+            self.step()
+        return r.tokens

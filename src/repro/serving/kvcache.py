@@ -1,0 +1,196 @@
+"""Per-request KV/state slot management over the model cache pytree.
+
+The model families expose caches with different structures (stacked attention
+KV, Mamba states, xLSTM cells, whisper cross-KV). ``CacheLayout`` discovers,
+once per model, (i) the batch axis of every leaf and (ii) which subtrees are
+attention caches ({"k","v","pos"} triples), and then provides generic
+per-request operations:
+
+  * ``token_segment``   — the incremental checkpoint unit (paper §6.1):
+      attention leaves -> the single KV column the decode step just wrote
+      (size C = 2*Hkv*head_dim, App. C); state leaves (SSM/xLSTM/cross-KV)
+      -> the current constant-size snapshot.
+  * ``write_token_segment`` — per-request restoration (§6.2): inject a
+      committed segment into any healthy AW's cache slot.
+  * ``request_state`` / ``write_request_state`` — whole-slot copy (used for
+      request migration and the pause-checkpoint-resume baseline).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+class CacheLayout:
+    def __init__(self, init_cache_fn):
+        c1 = jax.eval_shape(lambda: init_cache_fn(1, 16))
+        c2 = jax.eval_shape(lambda: init_cache_fn(2, 16))
+        l1, self.treedef = jax.tree_util.tree_flatten_with_path(c1)
+        l2, _ = jax.tree_util.tree_flatten_with_path(c2)
+        self.paths: List[str] = []
+        self.batch_axis: List[int] = []
+        for (p1, a1), (_, a2) in zip(l1, l2):
+            diffs = [i for i, (s1, s2) in enumerate(zip(a1.shape, a2.shape))
+                     if s1 != s2]
+            assert len(diffs) == 1, f"ambiguous batch axis at {p1}: {a1.shape}"
+            self.paths.append(_path_str(p1))
+            self.batch_axis.append(diffs[0])
+        # attention nodes: parent paths having exactly k/v/pos children
+        parents: Dict[str, set] = {}
+        for p in self.paths:
+            if "/" in p:
+                par, leaf = p.rsplit("/", 1)
+                parents.setdefault(par, set()).add(leaf)
+        self.attn_parents = {par for par, kids in parents.items()
+                             if {"k", "v", "pos"} <= kids}
+        self.leaf_kind: List[str] = []
+        for p in self.paths:
+            par, _, leaf = p.rpartition("/")
+            if par in self.attn_parents and leaf in ("k", "v", "pos"):
+                self.leaf_kind.append("attn_" + leaf)
+            else:
+                self.leaf_kind.append("state")
+
+    # ------------------------------------------------------------------
+    def _leaves(self, cache):
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        assert len(leaves) == len(self.paths)
+        return leaves, treedef
+
+    @staticmethod
+    def _take(a, axis, idx):
+        return jax.lax.index_in_dim(a, idx, axis, keepdims=False)
+
+    @staticmethod
+    def _put(a, axis, idx, val):
+        return jnp.asarray(a).at[
+            (slice(None),) * axis + (idx,)].set(jnp.asarray(val, a.dtype))
+
+    # ------------------------------------------------------------------
+    def token_segment(self, cache, slot: int, token: int) -> List[Any]:
+        """Incremental checkpoint segment for (request slot, token idx)."""
+        leaves, _ = self._leaves(cache)
+        seg = []
+        for leaf, ax, kind in zip(leaves, self.batch_axis, self.leaf_kind):
+            per_req = self._take(leaf, ax, slot)     # drop batch axis
+            if kind.startswith("attn_"):
+                sc = per_req.shape[ax]  # position axis follows batch axis
+                per_req = self._take(per_req, ax, token % sc)
+            seg.append(np.asarray(per_req))
+        return seg
+
+    def write_token_segment(self, cache, slot: int, token: int,
+                            seg: List[Any]):
+        leaves, treedef = self._leaves(cache)
+        out = []
+        for leaf, ax, kind, s in zip(leaves, self.batch_axis,
+                                     self.leaf_kind, seg):
+            if kind.startswith("attn_"):
+                sc = leaf.shape[ax + 1]
+                idx = (slice(None),) * ax + (slot, token % sc)
+            else:
+                idx = (slice(None),) * ax + (slot,)
+            out.append(jnp.asarray(leaf).at[idx].set(
+                jnp.asarray(s, leaf.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    def make_batched_extractor(self):
+        """One jitted gather for all active (slot, token) pairs — the
+        AW-side analogue of posting all RDMA writes in a single doorbell.
+        Returns fn(cache, slots [n], tokens [n]) -> list of leaves with a
+        leading n axis."""
+        batch_axes = list(self.batch_axis)
+        kinds = list(self.leaf_kind)
+
+        def extract(cache, slots, tokens):
+            leaves, _ = jax.tree_util.tree_flatten(cache)
+            out = []
+            for leaf, ax, kind in zip(leaves, batch_axes, kinds):
+                def one(slot, tok, leaf=leaf, ax=ax, kind=kind):
+                    per = jax.lax.dynamic_index_in_dim(leaf, slot, ax,
+                                                       keepdims=False)
+                    if kind.startswith("attn_"):
+                        sc = per.shape[ax]
+                        per = jax.lax.dynamic_index_in_dim(
+                            per, tok % sc, ax, keepdims=False)
+                    return per
+
+                out.append(jax.vmap(one)(slots, tokens))
+            return out
+
+        return jax.jit(extract)
+
+    # ------------------------------------------------------------------
+    def request_state(self, cache, slot: int) -> List[Any]:
+        leaves, _ = self._leaves(cache)
+        return [np.asarray(self._take(l, ax, slot))
+                for l, ax in zip(leaves, self.batch_axis)]
+
+    def write_request_state(self, cache, slot: int, state: List[Any]):
+        leaves, treedef = self._leaves(cache)
+        out = [self._put(l, ax, slot, s)
+               for l, ax, s in zip(leaves, self.batch_axis, state)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def clear_slot(self, cache, slot: int):
+        """Reset one slot (releases a finished/failed request)."""
+        leaves, treedef = self._leaves(cache)
+        out = []
+        for leaf, ax, kind in zip(leaves, self.batch_axis, self.leaf_kind):
+            per = self._take(leaf, ax, slot)
+            fill = jnp.full_like(per, -1) if kind == "attn_pos" \
+                else jnp.zeros_like(per)
+            out.append(self._put(leaf, ax, slot, fill))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def segment_nbytes(self, seg: List[Any], attn_only: bool = False) -> int:
+        total = 0
+        for s, kind in zip(seg, self.leaf_kind):
+            if attn_only and not kind.startswith("attn_"):
+                continue
+            total += np.asarray(s).nbytes
+        return total
+
+
+class SlotManager:
+    """Free-list of batch slots, partitioned across AWs (data-parallel
+    request ownership: slot // slots_per_aw = AW id)."""
+
+    def __init__(self, max_batch: int, num_aw: int):
+        assert max_batch % num_aw == 0
+        self.max_batch = max_batch
+        self.num_aw = num_aw
+        self.per_aw = max_batch // num_aw
+        self._free: Dict[int, List[int]] = {
+            a: list(range(a * self.per_aw, (a + 1) * self.per_aw))
+            for a in range(num_aw)}
+
+    def aw_of(self, slot: int) -> int:
+        return slot // self.per_aw
+
+    def alloc(self, aw_id: int) -> int:
+        return self._free[aw_id].pop(0)
+
+    def free_count(self, aw_id: int) -> int:
+        return len(self._free[aw_id])
+
+    def release(self, slot: int):
+        self._free[self.aw_of(slot)].insert(0, slot)
+
+    def drop_aw(self, aw_id: int):
+        """A failed AW's slots become unusable until reprovisioning."""
+        self._free[aw_id] = []
+
+    def restore_aw(self, aw_id: int, in_use: set):
+        self._free[aw_id] = [
+            s for s in range(aw_id * self.per_aw, (aw_id + 1) * self.per_aw)
+            if s not in in_use]

@@ -1,0 +1,120 @@
+"""Serving simulation loop: cluster gateway + request scheduler.
+
+Drives an InferenceEngine with a workload trace over a virtual clock,
+coordinating admission (gateway -> least-loaded healthy AW), decode stepping,
+failure injection via the orchestrator, and metric collection (TTFT, TBT,
+output tokens/s) — the measurement harness behind the §7.2/§7.3 benchmarks.
+
+Virtual time: each decode step advances the clock by a configurable step
+time (default: measured wall time of the step, which is meaningful for
+*relative* comparisons on CPU; benchmarks may pass a fixed model-based step
+time for GPU-comparable absolute numbers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import Request
+from repro.serving.engine import InferenceEngine
+
+
+@dataclass
+class TokenRecord:
+    t: float
+    rid: str
+
+
+@dataclass
+class ServeMetrics:
+    token_log: List[TokenRecord] = field(default_factory=list)
+    ttft: Dict[str, float] = field(default_factory=dict)
+    finished: List[str] = field(default_factory=list)
+    duration: float = 0.0
+
+    def throughput(self) -> float:
+        return len(self.token_log) / self.duration if self.duration else 0.0
+
+    def tbt_values(self) -> np.ndarray:
+        by_req: Dict[str, List[float]] = {}
+        for rec in self.token_log:
+            by_req.setdefault(rec.rid, []).append(rec.t)
+        gaps = []
+        for ts in by_req.values():
+            ts = sorted(ts)
+            gaps.extend(np.diff(ts))
+        return np.asarray(gaps) if gaps else np.zeros((0,))
+
+    def max_stall(self) -> float:
+        v = self.tbt_values()
+        return float(v.max()) if v.size else 0.0
+
+    def throughput_timeline(self, dt: float = 0.5):
+        if not self.token_log:
+            return np.zeros((0,)), np.zeros((0,))
+        ts = np.asarray([r.t for r in self.token_log])
+        edges = np.arange(0.0, self.duration + dt, dt)
+        hist, _ = np.histogram(ts, bins=edges)
+        return edges[:-1], hist / dt
+
+
+@dataclass
+class FailurePlan:
+    t: float
+    kind: str      # "aw" | "ew"
+    worker_id: int
+
+
+def run_serving(engine: InferenceEngine, workload: List[Request],
+                duration: float, *,
+                orchestrator: Optional[Orchestrator] = None,
+                failures: List[FailurePlan] = (),
+                step_time: Optional[float] = None,
+                max_steps: int = 100000) -> ServeMetrics:
+    m = ServeMetrics()
+    clock = 0.0
+    pending = sorted(workload, key=lambda r: r.arrival)
+    qi = 0
+    injected = [False] * len(failures)
+    steps = 0
+    while clock < duration and steps < max_steps:
+        # failure injection
+        for i, f in enumerate(failures):
+            if not injected[i] and clock >= f.t:
+                assert orchestrator is not None
+                orchestrator.inject_failure(f.kind, f.worker_id, clock)
+                injected[i] = True
+        if orchestrator is not None:
+            orchestrator.tick(clock)
+        # admission
+        while qi < len(pending) and pending[qi].arrival <= clock:
+            r = pending[qi]
+            ok = engine.submit(r.request_id,
+                               r.prompt_tokens(engine.cfg.vocab_size),
+                               r.max_new_tokens)
+            if not ok:
+                break  # no capacity; retry next tick
+            m.ttft[r.request_id] = clock - r.arrival
+            qi += 1
+        # decode step
+        t0 = time.monotonic()
+        out = engine.step()
+        dt = step_time if step_time is not None else time.monotonic() - t0
+        if not out and qi >= len(pending):
+            break
+        if not out:
+            dt = max(dt, 1e-3)  # idle tick
+        clock += dt
+        for rid in out:
+            m.token_log.append(TokenRecord(clock, rid))
+        for r in list(engine.requests.values()):
+            if r.done and r.rid not in m.finished:
+                m.finished.append(r.rid)
+                engine.release_request(r.rid)
+        steps += 1
+    m.duration = clock
+    return m

@@ -1,0 +1,2 @@
+from repro.training.train import (AdamWState, init_opt_state,  # noqa: F401
+                                  make_train_step)

@@ -1,0 +1,49 @@
+"""Model/optimizer checkpoint I/O (npz-based, dependency-free).
+
+Flattens a params/opt-state pytree to path-keyed arrays. Used by the
+training launcher for periodic snapshots and by serving to load trained
+weights. (KV-cache checkpointing — the paper's contribution — lives in
+core/checkpoint.py; this is the ordinary weights substrate.)
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_params(path: str, params, step: int = 0):
+    arrays = _flatten(params)
+    arrays["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)  # atomic publish
+
+
+def load_params(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else 0
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in p)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,78 @@
+"""Training substrate: cross-entropy LM loss + AdamW (bf16 moments).
+
+The paper is inference-only, but the brief requires the ``train_4k`` shape
+and an end-to-end training example; this is a complete, sharding-friendly
+train step. Moments are kept in bf16 and sharded like the params (with
+optional ZeRO over the pod axis, see launch/sharding.py) so the trillion-
+parameter MoE config stays addressable per device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: any
+    nu: any
+    step: jax.Array
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(  # noqa: E731
+        lambda a: jnp.zeros(a.shape, jnp.bfloat16), t)
+    return AdamWState(zeros(params), zeros(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits, labels):
+    """logits: [B,S,V]; labels: [B,S] -> mean NLL (fp32)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(api, *, lr: float = 3e-4, beta1: float = 0.9,
+                    beta2: float = 0.95, eps: float = 1e-8,
+                    weight_decay: float = 0.1, aux_coef: float = 0.01,
+                    clip: float = 1.0):
+    def loss_fn(params, batch, route_state):
+        logits, aux = api.forward_train(params, batch, route_state)
+        return cross_entropy(logits, batch["labels"]) + aux_coef * aux
+
+    def train_step(params, opt: AdamWState, batch, route_state):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, route_state)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        step = opt.step + 1
+        bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = beta1 * m.astype(jnp.float32) + (1 - beta1) * g
+            v32 = beta2 * v.astype(jnp.float32) + (1 - beta2) * g * g
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = lr * (mh / (jnp.sqrt(vh) + eps) +
+                          weight_decay * p.astype(jnp.float32))
+            return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                    m32.astype(jnp.bfloat16), v32.astype(jnp.bfloat16))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(opt.mu)
+        flat_v = jax.tree_util.tree_leaves(opt.nu)
+        new = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [n[0] for n in new])
+        new_m = jax.tree_util.tree_unflatten(tdef, [n[1] for n in new])
+        new_v = jax.tree_util.tree_unflatten(tdef, [n[2] for n in new])
+        return new_p, AdamWState(new_m, new_v, step), loss
+
+    return train_step

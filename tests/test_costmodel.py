@@ -1,0 +1,105 @@
+"""Recovery cost model (Eq. 1-4) + failover simulator: reproduce the paper's
+quantitative claims (ratios are the scale-free reproduction targets)."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.events import (SimConfig, checkpoint_scheme_throughput,
+                               failover_summary, link_trace,
+                               simulate_megascale_failure,
+                               simulate_tarragon_aw_failure,
+                               simulate_tarragon_ew_failure)
+
+
+def test_eq1_grows_with_failure_point():
+    p = cm.MEGASCALE_PROFILE
+    s1 = cm.stall_monolithic(p, 32, 16, 8)
+    s2 = cm.stall_monolithic(p, 32, 16, 64)
+    s3 = cm.stall_monolithic(p, 32, 16, 512)
+    assert s1 < s2 < s3
+    # linear in i: slope = L * t_dec
+    assert np.isclose((s3 - s2) / (512 - 64), 32 * p.t_dec)
+
+
+def test_eq2_ew_stall_constant_in_i():
+    p = cm.MEGASCALE_PROFILE
+    assert cm.stall_decoupled_ew(p, 32, 1, 1) == \
+        cm.stall_decoupled_ew(p, 32, 31, 4096)
+
+
+def test_decoding_failures_dominate_prefill():
+    """Paper §2.2.2 obs (2): at 64 decoded tokens, decode recovery cost
+    already exceeds a 128-token-prompt prefill failure by ~19x (replay
+    terms, excluding the common T_w)."""
+    p = cm.MEGASCALE_PROFILE
+    L = 32
+    decode_replay = ((64 - 1) * L + L // 2) * p.t_dec
+    prefill_replay = L * p.t_pre * (128 / 128)  # one prompt pass
+    assert decode_replay / prefill_replay > 15
+
+
+def test_tarragon_stall_nearly_flat_in_failure_point():
+    p, t = cm.MEGASCALE_PROFILE, cm.TarragonProfile()
+    s_early = cm.stall_tarragon_aw(p, t, 32, 16, 8, tokens_to_restore=18)
+    s_late = cm.stall_tarragon_aw(p, t, 32, 16, 4096, tokens_to_restore=4106)
+    assert s_late < 2 * s_early  # restoration is ~constant, not linear
+
+
+def test_fig9_headline_ratios():
+    """~64 s baseline stall; 0.3-0.4 s Tarragon stalls; 160-213x range."""
+    s = failover_summary(SimConfig())
+    assert 55 <= s["megascale_stall_s"] <= 75
+    assert 0.25 <= s["tarragon_aw_stall_s"] <= 0.50
+    assert 0.20 <= s["tarragon_ew_stall_s"] <= 0.40
+    assert 120 <= s["aw_improvement_x"] <= 260
+    assert 150 <= s["ew_improvement_x"] <= 320
+
+
+def test_timeline_shapes():
+    c = SimConfig(duration=30.0, fail_time=10.0)
+    for sim in (simulate_megascale_failure, simulate_tarragon_aw_failure,
+                simulate_tarragon_ew_failure):
+        tl = sim(c)
+        assert tl.t.shape == tl.throughput.shape
+        assert tl.stall > 0
+        # throughput drops at failure
+        before = tl.throughput[tl.t < c.fail_time].mean()
+        at = tl.throughput[(tl.t >= c.fail_time) &
+                           (tl.t < c.fail_time + tl.stall)].mean()
+        assert at < before
+
+
+def test_appendix_c_checkpoint_traffic_ratio():
+    """Mixtral-8x7B: KV segment traffic ~12.5% of expert traffic."""
+    r = cm.checkpoint_traffic_ratio(d_model=4096, n_heads=32, n_kv_heads=8,
+                                    top_k=2)
+    assert np.isclose(r, 0.125)
+
+
+def test_checkpoint_schemes_ranking():
+    """§7.4: incremental ~= none; pause-ckpt-resume(8) >= 2x worse."""
+    c = SimConfig()
+    none = checkpoint_scheme_throughput(c, "none")
+    inc = checkpoint_scheme_throughput(c, "incremental")
+    pause = checkpoint_scheme_throughput(c, "pause", interval_tokens=8)
+    assert inc / none > 0.97            # <3% overhead claim
+    assert none / pause >= 1.8          # paper: 2.15x at interval=8
+
+
+def test_link_trace_checkpoint_fits_idle_gap():
+    """Fig. 8: KV segments ride the attention-compute idle gaps."""
+    events, info = link_trace(SimConfig())
+    assert info["ckpt_fits_gap"]
+    kinds = {k for _, _, k in events}
+    assert {"idle", "ckpt", "dispatch", "gather"} <= kinds
+
+
+def test_shadow_memory_budget():
+    """§5.3: shadow bank is a small fraction of expert memory (one EW's
+    worth + rounding)."""
+    from repro.core import ert as ert_lib
+    from repro.core.shadow import shadow_memory_bytes
+    p = ert_lib.default_placement(384, 16)   # kimi-k2 geometry
+    shadow = shadow_memory_bytes(p, 7168, 2048)
+    primary = 384 * 3 * 7168 * 2048 * 2
+    assert shadow / primary < 0.12

@@ -1,0 +1,188 @@
+"""ERT / REFE property tests (hypothesis): routing invariants that must hold
+for ANY placement, health state and token batch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ert as ert_lib
+from repro.core import refe
+
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@st.composite
+def placements(draw):
+    num_ew = draw(st.sampled_from([2, 4, 8]))
+    e = draw(st.integers(2, 24))
+    return ert_lib.default_placement(e, num_ew)
+
+
+@given(placements())
+@settings(**SETTINGS)
+def test_placement_geometry(p):
+    assert p.primary_slots % p.num_ew == 0
+    assert p.primary_slots >= p.num_experts
+    owner = p.slot_owner()
+    assert owner.shape == (p.num_slots,)
+    assert owner.min() >= 0 and owner.max() < p.num_ew
+
+
+@given(placements(), st.integers(0, 7))
+@settings(**SETTINGS)
+def test_shadow_assignment_covers_protected_ew(p, protect):
+    protect = protect % p.num_ew
+    assign = ert_lib.initial_shadow_assignment(p, protect)
+    cand = ert_lib.build_candidates(p, assign)
+    owner = p.slot_owner()
+    protected = [e for e in range(protect * p.experts_per_ew,
+                                  (protect + 1) * p.experts_per_ew)
+                 if e < p.num_experts]
+    for e in protected:
+        s = cand[e, 1]
+        assert s >= 0, f"expert {e} unprotected"
+        assert owner[s] != owner[e], "shadow on same EW as primary"
+
+
+@given(placements(), st.integers(0, 7))
+@settings(**SETTINGS)
+def test_resolve_never_routes_to_dead_ew(p, dead):
+    dead = dead % p.num_ew
+    assign = ert_lib.initial_shadow_assignment(p, dead)
+    cand = ert_lib.build_candidates(p, assign)
+    health = np.ones((p.num_ew,), bool)
+    health[dead] = False
+    owner = p.slot_owner()
+    active, alive = ert_lib.resolve_active_slots(
+        jnp.asarray(cand), jnp.asarray(health), jnp.asarray(owner))
+    active, alive = np.asarray(active), np.asarray(alive)
+    for e in range(p.num_experts):
+        if alive[e]:
+            assert health[owner[active[e]]], \
+                f"expert {e} routed to dead EW {owner[active[e]]}"
+    # with the dead EW protected by shadows, every expert stays reachable
+    assert alive.all()
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(4, 40),
+       st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_dispatch_conservation(e_, k_, t, seed):
+    """Every (token, choice) lands in at most one (slot, cap) cell; combine
+    weights of surviving tokens sum to <= 1 (= 1 when nothing dropped)."""
+    e = max(e_, k_ + 1)
+    p = ert_lib.default_placement(e, 2)
+    rs = refe.RouteState.healthy(p, num_aw=2)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, 8))
+    logits = jax.random.normal(jax.random.fold_in(key, 1), (t, e))
+    r = refe.route(x, logits, rs, p, top_k=k_, capacity_factor=2.0, batch=t)
+    disp_j, comb_j = refe.routing_onehots(r)
+    disp = np.asarray(disp_j)
+    comb = np.asarray(comb_j)
+    assert disp.min() >= 0 and disp.max() <= 1
+    # each capacity cell used by at most one token
+    assert (disp.sum(axis=0) <= 1 + 1e-6).all()
+    # combine weight per token bounded by 1 (renormalized top-k)
+    per_tok = comb.sum(axis=(1, 2))
+    assert (per_tok <= 1 + 1e-5).all()
+
+
+def test_masked_aw_equals_healthy_subset():
+    """EW-side self-healing: the expert batch with AW0 dead equals the dense
+    batch computed over only AW1's tokens (the 'sufficient subset')."""
+    e, k, t = 4, 2, 8
+    p = ert_lib.default_placement(e, 2)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (t, 16))
+    logits = jax.random.normal(jax.random.fold_in(key, 1), (t, e))
+
+    rs_healthy = refe.RouteState.healthy(p, num_aw=2)
+    rs_fail = rs_healthy._replace(
+        aw_health=jnp.asarray([False, True]))
+
+    cap = 16
+    r_fail = refe.route(x, logits, rs_fail, p, top_k=k, capacity_factor=2.0,
+                        capacity=cap, batch=t)
+    d_fail, _ = refe.routing_onehots(r_fail)
+    expert_in_fail = jnp.einsum("tpc,td->pcd", d_fail.astype(x.dtype), x)
+    # dense run over only the healthy half's tokens
+    xh = x[t // 2:]
+    r_h = refe.route(xh, logits[t // 2:], rs_healthy, p, top_k=k,
+                     capacity_factor=2.0, capacity=cap, batch=t // 2)
+    d_h, _ = refe.routing_onehots(r_h)
+    expert_in_h = jnp.einsum("tpc,td->pcd", d_h.astype(xh.dtype), xh)
+    # same token multisets per slot: compare per-slot sums (order-free)
+    np.testing.assert_allclose(np.asarray(expert_in_fail.sum(axis=1)),
+                               np.asarray(expert_in_h.sum(axis=1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 8), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_grouped_path_equals_flat_path(n_groups, seed):
+    """§Perf iteration 1: GShard-style grouped dispatch must equal the flat
+    one-hot path when capacity is ample (drop policy differs per group, so
+    equivalence is tested drop-free)."""
+    import repro.core.refe as refe_mod
+    e, k, s_g = 4, 2, 8
+    t = n_groups * s_g
+    p = ert_lib.default_placement(e, 2)
+    rs = refe.RouteState.healthy(p, num_aw=2)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, 16))
+    logits = jax.random.normal(jax.random.fold_in(key, 1), (t, e))
+
+    def expert_fn(expert_in):
+        return expert_in * 2.0
+
+    # flat path (t <= ONEHOT_MAX_TOKENS), ample capacity
+    r_flat = refe.route(x, logits, rs, p, top_k=k, capacity_factor=1.0,
+                        capacity=t, batch=t)
+    assert not r_flat["grouped"]
+    y_flat = refe.expert_io(x, r_flat, expert_fn)
+
+    # force grouping at the same small scale
+    old_max, old_gs = refe_mod.ONEHOT_MAX_TOKENS, refe_mod.GROUP_SIZE
+    refe_mod.ONEHOT_MAX_TOKENS, refe_mod.GROUP_SIZE = 0, s_g
+    try:
+        r_g = refe.route(x, logits, rs, p, top_k=k, capacity_factor=1.0,
+                         capacity=s_g, batch=t)
+        assert r_g["grouped"] and r_g["groups"] == n_groups
+        y_g = refe.expert_io(x, r_g, expert_fn)
+    finally:
+        refe_mod.ONEHOT_MAX_TOKENS, refe_mod.GROUP_SIZE = old_max, old_gs
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_flat),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_expert_io_reroutes_to_shadow_exactly():
+    """Shadow slot holds identical weights -> identical outputs after an EW
+    failure (for covered experts)."""
+    from repro.core import shadow as shadow_lib
+    e, k, t, d = 4, 2, 6, 16
+    p = ert_lib.default_placement(e, 2)
+    rs = refe.RouteState.healthy(p, num_aw=1)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (t, d))
+    logits = jax.random.normal(jax.random.fold_in(key, 3), (t, e))
+    w = jax.random.normal(jax.random.fold_in(key, 4), (e, d, d)) * 0.1
+    bank_w = shadow_lib.full_slot_bank(
+        {"w": w}, shadow_lib.sync_shadow_bank(
+            {"w": w}, rs.shadow_assignment), p.primary_slots)["w"]
+
+    def expert_fn(expert_in):
+        return jnp.einsum("pcd,pde->pce", expert_in, bank_w)
+
+    r0 = refe.route(x, logits, rs, p, top_k=k, capacity_factor=4.0, batch=t)
+    y0 = refe.expert_io(x, r0, expert_fn)
+    rs_f = rs._replace(ew_health=jnp.asarray([False, True]))
+    r1 = refe.route(x, logits, rs_f, p, top_k=k, capacity_factor=4.0,
+                    capacity=r0["capacity"], batch=t)
+    y1 = refe.expert_io(x, r1, expert_fn)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)

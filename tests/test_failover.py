@@ -1,0 +1,178 @@
+"""End-to-end failover tests on the real engine (the paper's §7.2 claims at
+functional level): exact-output recovery for both failure domains, EW-side
+graceful degradation, orchestrator-driven detection/provisioning, and the
+MegaScale-style baseline's behaviour for contrast."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.configs import get_config
+from repro.core.orchestrator import Orchestrator
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(arch="mixtral_8x7b", tarragon=True, **kw):
+    cfg = reduced(arch, cap_factor=4.0)
+    ecfg = EngineConfig(max_batch=8, max_seq=48, num_aw=2, num_ew=2,
+                        tarragon=tarragon, **kw)
+    return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def ref_tokens():
+    eng = make_engine()
+    return eng.generate("r0", PROMPT, 14)
+
+
+def test_ew_failure_shadow_failover_exact(ref_tokens):
+    eng = make_engine()
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    eng.fail_ew(0)  # EW0's experts are covered by shadows on EW1
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref_tokens
+
+
+def test_aw_failure_restore_exact(ref_tokens):
+    eng = make_engine()
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    assert eng.requests["r0"].aw == 0
+    eng.fail_aw(0)
+    assert eng.recover_aw_requests() == ["r0"]
+    assert eng.requests["r0"].aw == 1
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref_tokens
+    assert eng.store.stats.restores == 1
+
+
+def test_aw_failure_multi_request_only_affected_move(ref_tokens):
+    eng = make_engine()
+    eng.submit("a", PROMPT, 14)      # -> AW0
+    eng.submit("b", PROMPT + 1, 14)  # -> AW1
+    for _ in range(4):
+        eng.step()
+    slot_b = eng.requests["b"].slot
+    eng.fail_aw(0)
+    eng.recover_aw_requests()
+    # unaffected request keeps its slot; affected one moved to AW1
+    assert eng.requests["b"].slot == slot_b
+    assert eng.requests["a"].aw == 1
+    while eng.active_requests():
+        eng.step()
+    assert eng.requests["a"].tokens == ref_tokens
+
+
+def test_ew_failure_without_shadow_degrades_not_crashes():
+    """EW1's experts have no shadows by default -> tokens to them are
+    dropped (reduced capacity), but decoding continues NaN-free."""
+    eng = make_engine()
+    eng.submit("r0", PROMPT, 12)
+    eng.fail_ew(1)
+    while not eng.requests["r0"].done:
+        out = eng.step()
+    toks = eng.requests["r0"].tokens
+    assert len(toks) == 12
+    assert all(0 <= t < eng.cfg.vocab_size for t in toks)
+
+
+def test_megascale_baseline_has_no_shadow_slots():
+    eng = make_engine(tarragon=False)
+    assert eng.api.placement.num_shadow_slots == 0
+    toks = eng.generate("r0", PROMPT, 10)
+    assert len(toks) == 10
+
+
+def test_orchestrator_detection_and_provisioning(ref_tokens):
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    orch.inject_failure("ew", 0, now=10.0)
+    # before detection latency nothing fires
+    assert orch.tick(10.01) == []
+    assert 0 not in eng.failed_ews
+    fired = orch.tick(10.0 + orch.detection_latency() + 1e-6)
+    assert [e.kind for e in fired] == ["detected"]
+    assert 0 in eng.failed_ews
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref_tokens
+    # background provisioning restores the EW and re-points shadows
+    fired = orch.tick(12.0)
+    assert any(e.kind == "provisioned" for e in fired)
+    assert 0 not in eng.failed_ews
+
+
+def test_orchestrator_aw_flow(ref_tokens):
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    orch.inject_failure("aw", 0, now=5.0)
+    fired = orch.tick(5.1)
+    assert any("restored 1 requests" in e.detail for e in fired)
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref_tokens
+
+
+def test_repoint_shadows_protects_other_ew(ref_tokens):
+    """After re-pointing shadows to protect EW1, failing EW1 is exact."""
+    eng = make_engine()
+    eng.repoint_shadows(1)
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    eng.fail_ew(1)
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref_tokens
+
+
+def test_dense_arch_aw_failover_exact():
+    """AW-side restoration is architecture-agnostic: dense GQA arch."""
+    cfg = reduced("qwen2_1_5b")
+    ecfg = EngineConfig(max_batch=4, max_seq=40, num_aw=2, num_ew=1)
+    ref = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(3)).generate(
+        "r", PROMPT, 10)
+    eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(3))
+    eng.submit("r", PROMPT, 10)
+    for _ in range(3):
+        eng.step()
+    eng.fail_aw(0)
+    eng.recover_aw_requests()
+    while not eng.requests["r"].done:
+        eng.step()
+    assert eng.requests["r"].tokens == ref
+
+
+@pytest.mark.parametrize("arch", ["zamba2_7b", "xlstm_350m"])
+def test_ssm_arch_aw_failover_exact(arch):
+    """Recurrent-state archs: the 'segment' is a state snapshot; restoration
+    must resume the recurrence exactly."""
+    cfg = reduced(arch)
+    ecfg = EngineConfig(max_batch=4, max_seq=40, num_aw=2, num_ew=1)
+    ref = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(5)).generate(
+        "r", PROMPT, 8)
+    eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(5))
+    eng.submit("r", PROMPT, 8)
+    for _ in range(3):
+        eng.step()
+    eng.fail_aw(0)
+    eng.recover_aw_requests()
+    while not eng.requests["r"].done:
+        eng.step()
+    assert eng.requests["r"].tokens == ref

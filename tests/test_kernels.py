@@ -1,0 +1,194 @@
+"""Pallas kernel validation: interpret=True execution of the TPU kernel body
+vs the pure-jnp oracle in ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref as kref
+from repro.kernels.decode_attention import decode_attention_partial
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def _tols(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,dh,sc", [
+    (1, 4, 1, 64, 128),
+    (2, 8, 2, 64, 256),
+    (3, 6, 6, 32, 96),     # MHA (no grouping), non-pow2 batch
+    (2, 8, 1, 128, 512),   # MQA, granite-style
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0), (0, 30.0)])
+def test_decode_attention_kernel(b, h, hkv, dh, sc, dtype, window, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(b * 1000 + h), 6)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    ck = jax.random.normal(ks[1], (b, sc, hkv, dh), dtype)
+    cv = jax.random.normal(ks[2], (b, sc, hkv, dh), dtype)
+    pos = jnp.arange(b) * 7 + sc // 2
+    cpos = jnp.where(jnp.arange(sc)[None] <= pos[:, None],
+                     jnp.arange(sc)[None], -1).astype(jnp.int32)
+    k1 = jax.random.normal(ks[3], (b, hkv, dh), dtype)
+    v1 = jax.random.normal(ks[4], (b, hkv, dh), dtype)
+    want = kref.decode_attention_ref(q, ck, cv, cpos, k1, v1, pos,
+                                     window=window, softcap=softcap)
+    m, l, acc = decode_attention_partial(q, ck, cv, cpos, pos, window=window,
+                                         softcap=softcap, block_k=64,
+                                         interpret=True)
+    got = ops.combine_decode_partials(q, m, l, acc, k1, v1, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("p,c,d,f", [
+    (4, 64, 128, 256),
+    (6, 32, 96, 160),      # non-pow2 everything
+    (1, 128, 64, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act,gated", [("silu", True), ("gelu", False)])
+def test_moe_gemm_kernel(p, c, d, f, dtype, act, gated):
+    ks = jax.random.split(jax.random.PRNGKey(p * 100 + c), 4)
+    x = jax.random.normal(ks[0], (p, c, d), dtype)
+    wg = (jax.random.normal(ks[1], (p, d, f), dtype) * 0.05) if gated else None
+    wu = jax.random.normal(ks[2], (p, d, f), dtype) * 0.05
+    wd = jax.random.normal(ks[3], (p, f, d), dtype) * 0.05
+    want = kref.moe_gemm_ref(x, wg, wu, wd, act=act)
+    got = moe_gemm(x, wg, wu, wd, act=act, block_c=32, block_f=64,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+def test_moe_gemm_empty_slot_skip():
+    """Inactive shadow / pad slots (count=0) produce zeros and skip MXU
+    work; active slots are unaffected (paper §5.3 / App. D)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    p, c, d, f = 4, 32, 64, 128
+    x = jax.random.normal(ks[0], (p, c, d))
+    wg = jax.random.normal(ks[1], (p, d, f)) * 0.05
+    wu = jax.random.normal(ks[2], (p, d, f)) * 0.05
+    wd = jax.random.normal(ks[3], (p, f, d)) * 0.05
+    want = kref.moe_gemm_ref(x, wg, wu, wd)
+    counts = jnp.array([3, 0, 5, 0], jnp.int32)
+    got = moe_gemm(x, wg, wu, wd, counts=counts, block_c=16, block_f=32,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               rtol=2e-5, atol=2e-5)
+    assert float(jnp.abs(got[1]).max()) == 0.0
+    assert float(jnp.abs(got[3]).max()) == 0.0
+
+
+@pytest.mark.parametrize("bs,s,h,p,n,chunk", [
+    (2, 128, 3, 16, 32, 32),
+    (1, 64, 2, 8, 16, 64),    # single chunk
+    (2, 96, 1, 4, 8, 16),     # non-pow2 length
+])
+def test_ssm_scan_kernel(bs, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (bs, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b = jax.random.normal(ks[3], (bs, s, n)) * 0.3
+    c = jax.random.normal(ks[4], (bs, s, n)) * 0.3
+    y_want, h_want = kref.ssm_scan_ref(x, dt, a, b, c)
+    y_got, h_got = ssm_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_chunk_invariance():
+    """Chunk size must not change the result (the chunked reformulation is
+    exact, not an approximation)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    bs, s, h, p, n = 1, 64, 2, 8, 16
+    x = jax.random.normal(ks[0], (bs, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b = jax.random.normal(ks[3], (bs, s, n)) * 0.3
+    c = jax.random.normal(ks[4], (bs, s, n)) * 0.3
+    outs = [np.asarray(ssm_scan(x, dt, a, b, c, chunk=ch, interpret=True)[0])
+            for ch in (8, 16, 64)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,dh", [
+    (2, 128, 4, 2, 64),
+    (1, 96, 6, 6, 32),     # MHA, non-pow2 seq
+    (2, 64, 8, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap,causal", [
+    (0, 0.0, True), (16, 0.0, True), (0, 50.0, True), (0, 0.0, False)])
+def test_flash_attention_kernel(b, s, h, hkv, dh, dtype, window, softcap,
+                                causal):
+    """Prefill flash kernel vs the blockwise-jnp oracle."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    want = blockwise_attention(q, k, v, pos, pos, window=window,
+                               softcap=softcap, causal=causal)
+    got = flash_attention(q, k, v, pos, pos, window=window, softcap=softcap,
+                          causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("chunk", [8, 32, 96])
+def test_mlstm_chunked_equals_recurrent(chunk):
+    """§Perf iteration 4: chunkwise-parallel mLSTM must match the
+    sequential recurrence exactly (incl. stabilizer and final state)."""
+    from repro.configs import get_config
+    from repro.models import xlstm as xl
+    cfg = get_config("xlstm_350m").reduced()
+    key = jax.random.PRNGKey(0)
+    p = xl.mlstm_init(key, cfg)
+    b, s = 2, 96
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, cfg.d_model))
+    q, k, v, ig, fg = xl._mlstm_projections(cfg, p, x)
+    st0 = xl.mlstm_state(cfg, b)
+    h_rec, st_rec = xl._mlstm_recurrent(q, k, v, ig, fg, st0)
+    h_chk, st_chk = xl._mlstm_chunked(q, k, v, ig, fg, st0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_rec),
+                               rtol=1e-4, atol=1e-4)
+    for kk in ("c", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_chk[kk]),
+                                   np.asarray(st_rec[kk]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_attention_vs_dense():
+    """The pure-JAX flash-style prefill attention matches naive softmax."""
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, s, h, hkv, dh = 2, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    got = blockwise_attention(q, k, v, pos, pos, block_q=16, block_k=16)
+
+    # naive reference
+    g = h // hkv
+    qq = q.reshape(b, s, hkv, g, dh) / np.sqrt(dh)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qq, k)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    want = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v).reshape(b, s, h, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

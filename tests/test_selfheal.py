@@ -1,0 +1,78 @@
+"""Self-healing policy unit tests (paper §5.2): EW-side sufficient-subset
+batching and health-transition helpers."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ert as ert_lib
+from repro.core import selfheal
+from repro.core.refe import RouteState
+
+
+def test_ew_starts_when_all_healthy_delivered():
+    received = np.array([True, True, False])
+    healthy = np.array([True, True, False])   # AW2 already declared dead
+    assert selfheal.ew_should_start(received, healthy, batch_tokens=10,
+                                    min_batch=256, probe_expired=False)
+
+
+def test_ew_waits_for_healthy_straggler():
+    received = np.array([True, False, True])
+    healthy = np.array([True, True, True])
+    assert not selfheal.ew_should_start(received, healthy, batch_tokens=10,
+                                        min_batch=256, probe_expired=False)
+
+
+def test_ew_starts_at_batch_knee_despite_missing_aw():
+    """GPU-efficiency knee (App. B): a sufficiently large buffered batch
+    starts without the straggler."""
+    received = np.array([True, False, True])
+    healthy = np.array([True, True, True])
+    assert selfheal.ew_should_start(received, healthy, batch_tokens=300,
+                                    min_batch=256, probe_expired=False)
+
+
+def test_ew_starts_after_probe_window():
+    received = np.array([True, False, True])
+    healthy = np.array([True, True, True])
+    assert selfheal.ew_should_start(received, healthy, batch_tokens=10,
+                                    min_batch=256, probe_expired=True)
+
+
+def test_health_transitions_roundtrip():
+    p = ert_lib.default_placement(8, 4)
+    rs = RouteState.healthy(p, num_aw=4)
+    rs = selfheal.fail_ew(rs, 2)
+    rs = selfheal.fail_aw(rs, 1)
+    assert not bool(rs.ew_health[2]) and not bool(rs.aw_health[1])
+    assert bool(rs.ew_health[0]) and bool(rs.aw_health[0])
+    rs = selfheal.recover_ew(rs, 2)
+    rs = selfheal.recover_aw(rs, 1)
+    assert bool(rs.ew_health.all()) and bool(rs.aw_health.all())
+
+
+def test_experts_without_replica_reported():
+    p = ert_lib.default_placement(8, 4)
+    rs = RouteState.healthy(p, num_aw=1)  # shadows protect EW0 by default
+    assert selfheal.experts_without_healthy_replica(rs, p).size == 0
+    rs = selfheal.fail_ew(rs, 1)          # EW1 has no shadows
+    lost = selfheal.experts_without_healthy_replica(rs, p)
+    owner = p.slot_owner()
+    assert all(owner[e] == 1 for e in lost)
+    assert lost.size == 2                 # EW1's two experts
+
+
+def test_repoint_shadow_bank_contents():
+    import jax
+    p = ert_lib.default_placement(8, 4)
+    rs = RouteState.healthy(p, num_aw=1)
+    w = jax.random.normal(jax.random.PRNGKey(0), (p.primary_slots, 4, 4))
+    rs2, bank = selfheal.repoint_shadows(rs, p, {"w": w}, protect_ew=3)
+    assign = np.asarray(rs2.shadow_assignment)
+    np.testing.assert_array_equal(np.asarray(bank["w"]),
+                                  np.asarray(w[assign]))
+    # every protected expert now has an off-EW candidate
+    cand = np.asarray(rs2.candidates)
+    owner = p.slot_owner()
+    for e in range(3 * p.experts_per_ew, 4 * p.experts_per_ew):
+        if e < p.num_experts:
+            assert cand[e, 1] >= 0 and owner[cand[e, 1]] != 3

@@ -1,0 +1,100 @@
+"""Serving loop integration: arrivals, continuous batching, metrics, and
+failure injection through the scheduler."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import lm_batches, make_workload, poisson_arrivals
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.scheduler import FailurePlan, run_serving
+
+
+def small_workload(n=5, prompt=6, out=8):
+    wl = make_workload("random", rate_rps=3.0, duration=3.0, seed=2)
+    wl = [dataclasses.replace(w, prompt_len=prompt, max_new_tokens=out)
+          for w in wl]
+    return wl[:n]
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    ecfg = EngineConfig(max_batch=8, max_seq=64, num_aw=2, num_ew=2, **kw)
+    return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
+
+
+def test_serving_completes_all_requests():
+    eng = make_engine()
+    wl = small_workload()
+    m = run_serving(eng, wl, duration=100.0, step_time=0.05)
+    assert len(m.finished) == len(wl)
+    assert len(m.token_log) >= len(wl) * 7   # first token comes via prefill
+    assert m.throughput() > 0
+    # slots all released
+    assert sum(eng.slots.free_count(a) for a in range(2)) == 8
+
+
+def test_serving_with_ew_failure_finishes():
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=0.5)
+    wl = small_workload()
+    m = run_serving(eng, wl, duration=100.0, orchestrator=orch,
+                    failures=[FailurePlan(0.3, "ew", 0)], step_time=0.05)
+    assert len(m.finished) == len(wl)
+    assert any(e.kind == "detected" for e in orch.events)
+    assert any(e.kind == "provisioned" for e in orch.events)
+
+
+def test_serving_with_aw_failure_finishes():
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=0.5)
+    wl = [dataclasses.replace(w, arrival=0.0)
+          for w in small_workload(out=40)]  # still running at failure time
+    m = run_serving(eng, wl, duration=100.0, orchestrator=orch,
+                    failures=[FailurePlan(0.15, "aw", 0)], step_time=0.05)
+    assert len(m.finished) == len(wl)
+    assert eng.store.stats.restores >= 1
+
+
+def test_gateway_least_loaded_assignment():
+    eng = make_engine()
+    p = np.arange(1, 7, dtype=np.int32)
+    eng.submit("a", p, 4)
+    eng.submit("b", p, 4)
+    eng.submit("c", p, 4)
+    eng.submit("d", p, 4)
+    aws = [eng.requests[r].aw for r in "abcd"]
+    assert sorted(aws) == [0, 0, 1, 1]  # balanced across AWs
+
+
+def test_metrics_tbt_and_timeline():
+    eng = make_engine()
+    wl = small_workload(3)
+    m = run_serving(eng, wl, duration=100.0, step_time=0.05)
+    tbt = m.tbt_values()
+    assert tbt.size > 0 and np.all(tbt >= 0)
+    t, thr = m.throughput_timeline(dt=0.5)
+    assert t.shape == thr.shape and thr.max() > 0
+
+
+def test_poisson_and_workload_kinds():
+    rng = np.random.default_rng(0)
+    arr = poisson_arrivals(10.0, 5.0, rng)
+    assert np.all(np.diff(arr) >= 0)
+    assert 20 <= len(arr) <= 90
+    for kind, plen in (("random", 10), ("sharegpt", None)):
+        wl = make_workload(kind, 5.0, 4.0, seed=1)
+        assert wl
+        if plen:
+            assert all(w.prompt_len == plen for w in wl)
+
+
+def test_lm_batches_deterministic():
+    a = list(lm_batches(100, 2, 8, 3, seed=5))
+    b = list(lm_batches(100, 2, 8, 3, seed=5))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        np.testing.assert_array_equal(x["labels"], y["labels"])
