@@ -1,7 +1,12 @@
-"""Failover demo (paper §7.2 at functional scale): inject an EW failure and
-an AW failure mid-decode and show that the token streams are EXACTLY the
-ones a failure-free run produces — shadow-expert rerouting and per-request
-KV restoration are lossless.
+"""Failover demo (paper §7.2 at functional scale) on the layered serving
+stack: inject an EW failure and an AW failure mid-decode and show that the
+token streams are EXACTLY the ones a failure-free run produces —
+shadow-expert rerouting and per-request KV restoration are lossless.
+
+The demo drives the layers explicitly: requests enter through the Gateway's
+FIFO queue, the ContinuousBatchScheduler prefills them in one bucketed
+batch, and failures are worker methods whose blast radius is the worker's
+own state.
 
     PYTHONPATH=src python examples/failover_demo.py
 """
@@ -14,53 +19,84 @@ from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
 from repro.serving.engine import EngineConfig, InferenceEngine
 
-PROMPT = np.arange(1, 9, dtype=np.int32)
+PROMPTS = [np.arange(1, 9, dtype=np.int32),
+           np.arange(3, 14, dtype=np.int32),
+           np.arange(5, 11, dtype=np.int32)]
 N_NEW = 16
 
 
-def build():
+def build(policy="least_loaded"):
     cfg = get_config("mixtral_8x7b").reduced()
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
-    ecfg = EngineConfig(max_batch=8, max_seq=64, num_aw=2, num_ew=2)
+    ecfg = EngineConfig(max_batch=8, max_seq=64, num_aw=2, num_ew=2,
+                        placement=policy)
     return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(7))
+
+
+def admit_all(eng, now=0.0):
+    for i, p in enumerate(PROMPTS):
+        eng.gateway.enqueue(f"req-{i}", p, N_NEW, now=now)
+    eng.scheduler.admit(now)
+    st = eng.scheduler.stats
+    print(f"  admitted {st.requests} requests in {st.calls} batched "
+          f"prefill call(s), occupancy={st.occupancy():.2f}")
+    for i in range(len(PROMPTS)):
+        r = eng.requests[f"req-{i}"]
+        print(f"    req-{i} -> AW{r.aw} slot {r.slot}")
+
+
+def decode_all(eng):
+    while eng.active_requests():
+        eng.step()
+    return {r.rid: r.tokens for r in eng.requests.values()}
 
 
 def main():
     print("=== reference (no failure) ===")
-    ref = build().generate("r", PROMPT, N_NEW)
-    print("tokens:", ref)
+    eng = build()
+    admit_all(eng)
+    ref = decode_all(eng)
+    print("tokens:", {k: v[:6] for k, v in sorted(ref.items())}, "...")
 
     print("\n=== EW failure at step 5 -> shadow-expert failover ===")
     eng = build()
-    eng.submit("r", PROMPT, N_NEW)
+    admit_all(eng)
     for _ in range(5):
         eng.step()
-    print("killing EW0 (its experts are pre-loaded as shadows on EW1)")
+    print("killing EW0 (its experts are pre-loaded as shadows on EW1):",
+          eng.ews[0])
     eng.fail_ew(0)
-    while not eng.requests["r"].done:
-        eng.step()
-    print("tokens:", eng.requests["r"].tokens)
-    print("exact match:", eng.requests["r"].tokens == ref)
+    print("after fail:", eng.ews[0])
+    out = decode_all(eng)
+    print("exact match:", out == ref)
 
     print("\n=== AW failure at step 5 -> per-request KV restoration ===")
     eng = build()
     orch = Orchestrator(eng, worker_init_time=2.0)
-    eng.submit("r", PROMPT, N_NEW)
+    admit_all(eng)
     for _ in range(5):
         eng.step()
-    print(f"request lives on AW{eng.requests['r'].aw}; killing it")
+    victims = [r.rid for r in eng.requests.values() if r.aw == 0]
+    print(f"requests {victims} live on {eng.aws[0]}; killing it")
     orch.inject_failure("aw", 0, now=1.0)
     orch.tick(1.0 + orch.detection_latency())
-    print(f"restored onto AW{eng.requests['r'].aw} "
-          f"(slot {eng.requests['r'].slot}); "
-          f"{eng.store.stats.bytes_restored}B restored")
-    while not eng.requests["r"].done:
-        eng.step()
-    print("tokens:", eng.requests["r"].tokens)
-    print("exact match:", eng.requests["r"].tokens == ref)
+    for rid in victims:
+        r = eng.requests[rid]
+        print(f"  {rid} restored onto AW{r.aw} (slot {r.slot})")
+    print(f"  {eng.store.stats.bytes_restored}B restored; "
+          f"gateway requeued={eng.gateway.stats.requeued}")
+    out = decode_all(eng)
+    print("exact match:", out == ref)
     orch.tick(5.0)
     print("events:", [(round(e.t, 2), e.kind, e.worker) for e in orch.events])
+
+    print("\n=== session-affinity placement (same session -> same AW) ===")
+    eng = build(policy="session_affinity")
+    for i in range(3):
+        eng.gateway.enqueue(f"sess42-{i}", PROMPTS[i], 4, now=0.0)
+    eng.scheduler.admit(0.0)
+    print("placements:", {r.rid: r.aw for r in eng.requests.values()})
 
 
 if __name__ == "__main__":

@@ -57,7 +57,16 @@ def main():
               f"max_stall={m.max_stall()*1e3:.1f}ms")
     if m.ttft:
         t = np.asarray(list(m.ttft.values()))
-        print(f"TTFT: median={np.median(t)*1e3:.1f}ms")
+        print(f"TTFT (virtual, from arrival): median={np.median(t)*1e3:.1f}ms")
+    qd = m.queue_delay_values()
+    if qd.size:
+        print(f"queue delay: p50={np.percentile(qd,50)*1e3:.1f}ms "
+              f"p99={np.percentile(qd,99)*1e3:.1f}ms "
+              f"blocked_ticks={eng.gateway.stats.blocked_ticks}")
+    if m.prefill:
+        print(f"prefill: {m.prefill['calls']} batched calls for "
+              f"{m.prefill['requests']} requests "
+              f"(occupancy={m.prefill['occupancy']:.2f})")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}s] {e.kind} {e.worker} {e.detail}")
 

@@ -76,10 +76,14 @@ class Orchestrator:
                 ev.detail = "ERT remap -> shadow experts"
             else:
                 # EW-side self-healing: health mask drops the AW's slots;
-                # per-request restoration moves its requests.
+                # per-request restoration re-admits its requests through
+                # the Gateway (unplaceable ones stay queued and retry).
                 self.engine.fail_aw(f.worker_id)
-                n = len(self.engine.recover_aw_requests())
+                n = len(self.engine.recover_aw_requests(now=now))
                 ev.detail = f"restored {n} requests"
+                waiting = self.engine.gateway.depth()
+                if waiting:
+                    ev.detail += f" ({waiting} queued for retry)"
             self._provisions.append(
                 _PendingProvision(f.kind, f.worker_id, now + self.T_w))
             self.events.append(ev)
@@ -97,6 +101,9 @@ class Orchestrator:
                 self.engine.provision_ew(p.worker_id, repoint_protect=nxt)
             else:
                 self.engine.provision_aw(p.worker_id)
+                # freshly provisioned capacity drains the waiting queue
+                # (recovery entries sit at the front)
+                self.engine.scheduler.admit(now)
             ev = WorkerEvent(now, "provisioned", f"{p.kind}{p.worker_id}")
             self.events.append(ev)
             fired.append(ev)

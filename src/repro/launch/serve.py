@@ -41,6 +41,10 @@ def main():
     ap.add_argument("--num-aw", type=int, default=2)
     ap.add_argument("--num-ew", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--placement", default="least_loaded",
+                    choices=("least_loaded", "round_robin",
+                             "session_affinity"),
+                    help="Gateway AW placement policy")
     ap.add_argument("--no-tarragon", action="store_true")
     ap.add_argument("--fail", type=str, action="append", default=[],
                     help="kind:worker@time, e.g. ew:0@0.5")
@@ -53,7 +57,8 @@ def main():
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=96,
                         num_aw=args.num_aw, num_ew=args.num_ew,
-                        tarragon=not args.no_tarragon)
+                        tarragon=not args.no_tarragon,
+                        placement=args.placement)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0)
 
@@ -65,7 +70,7 @@ def main():
 
     tbt = m.tbt_values()
     print(f"[serve] {cfg.name} tarragon={not args.no_tarragon} "
-          f"AW={args.num_aw} EW={args.num_ew}")
+          f"AW={args.num_aw} EW={args.num_ew} placement={args.placement}")
     print(f"  requests finished: {len(m.finished)}/{len(wl)}")
     print(f"  tokens: {len(m.token_log)}  "
           f"throughput: {m.throughput():.1f} tok/s")
@@ -73,6 +78,14 @@ def main():
         print(f"  TBT p50={np.median(tbt)*1e3:.1f}ms "
               f"p95={np.percentile(tbt,95)*1e3:.1f}ms "
               f"max_stall={m.max_stall()*1e3:.1f}ms")
+    qd = m.queue_delay_values()
+    if qd.size:
+        print(f"  queue delay p50={np.percentile(qd,50)*1e3:.1f}ms "
+              f"p99={np.percentile(qd,99)*1e3:.1f}ms")
+    if m.prefill:
+        print(f"  prefill: {m.prefill['calls']} calls / "
+              f"{m.prefill['requests']} reqs "
+              f"occupancy={m.prefill['occupancy']:.2f}")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
 

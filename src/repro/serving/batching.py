@@ -1,0 +1,303 @@
+"""Continuous-batching scheduler: batched prefill + interleaved decode.
+
+Sits between the Gateway (admission) and the InferenceEngine facade (device
+arrays + jitted step functions). Each tick it:
+
+  1. pulls admitted requests from the Gateway's FIFO queue,
+  2. runs prefill for them in *length-bucketed padded batches* — one jitted
+     call per bucket instead of one exact-shape call per request, so prompt
+     lengths 6/9/12 share a single compilation keyed on (rows, bucket_len),
+  3. restores preempted requests (``recovery=True``) from the checkpoint
+     store instead of re-prefilling (paper §6.2 per-request restoration),
+  4. runs one decode step over all active slots (``step``).
+
+Two prefill schemes, chosen per model from the cache layout:
+
+  * padded (pure full-attention caches) — prefill ``prompt[:-1]`` padded to
+    the bucket length; pad entries are scrubbed from the merged slot by
+    setting their cache ``pos`` to -1 (the decode kernels mask ``pos < 0``),
+    and the prompt's last token is fed through the next *decode* step, which
+    naturally interleaves the first generated token with ongoing decodes.
+  * exact (ring-buffer / SSM / xLSTM / enc-dec caches, and 1-token prompts)
+    — requests of identical prompt length share one unpadded call; the
+    first token comes from the prefill's last-position logits. Padding is
+    unsafe here because pad tokens would pollute recurrent state or evict
+    ring-buffer entries.
+
+Batch rows are padded up to the next power of two (row 0 repeated) so jit
+compilations are keyed on O(log max_batch) row counts per bucket length
+rather than every batch size ever seen.
+
+Invariant note: "batch composition never changes results" holds when MoE
+expert capacity is ample (capacity >= tokens any expert actually
+receives), because the capacity-based dispatch gives every kept token its
+own (slot, rank) cell. Under a *tight* capacity factor, co-batched tokens
+— including pads — compete for per-expert ranks and can evict each other,
+exactly as co-batched decode slots always could; the serving configs used
+for exactness claims run with generous capacity (cf=4.0), matching the
+failover tests. See ROADMAP "Open items" for pad-free dispatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.gateway import Gateway, QueuedRequest
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class PrefillStats:
+    calls: int = 0                 # jitted prefill invocations
+    requests: int = 0              # real requests prefilled
+    rows: int = 0                  # batch rows launched (incl. row padding)
+    real_tokens: int = 0           # true prompt tokens processed
+    padded_tokens: int = 0         # rows * bucket_len launched
+    batch_sizes: List[int] = field(default_factory=list)
+
+    def occupancy(self) -> float:
+        """Fraction of launched prefill FLOPs spent on real prompt tokens."""
+        return self.real_tokens / self.padded_tokens if self.padded_tokens \
+            else 0.0
+
+    def mean_batch(self) -> float:
+        return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
+
+    def snapshot(self) -> dict:
+        return {"calls": self.calls, "requests": self.requests,
+                "occupancy": self.occupancy(),
+                "mean_batch": self.mean_batch()}
+
+
+class ContinuousBatchScheduler:
+    """Drives admission, bucketed prefill, restoration, and decode over the
+    engine's shared device state."""
+
+    def __init__(self, engine, gateway: Gateway, bucket: int = 16):
+        self.engine = engine
+        self.gateway = gateway
+        self.bucket = max(1, bucket)
+        self.stats = PrefillStats()
+
+    # ------------------------------------------------------------------
+    # admission: gateway pop -> prefill/restore -> installed RequestState
+    # ------------------------------------------------------------------
+    def admit(self, now: float = 0.0) -> List[str]:
+        """Admit as many queued requests as placement allows. Returns the
+        rids installed this tick (fresh and recovered)."""
+        eng = self.engine
+        admitted = self.gateway.admit(now)
+        fresh: List[Tuple[QueuedRequest, int, int]] = []
+        installed: List[str] = []
+        for q, aw, slot in admitted:
+            if q.recovery:
+                self._install_recovery(q, aw, slot, now)
+            else:
+                fresh.append((q, aw, slot))
+            installed.append(q.rid)
+        for group in self._bucket_groups(fresh):
+            self._prefill_group(group, now)
+        return installed
+
+    # -- grouping -----------------------------------------------------------
+    def _bucket_groups(self, fresh):
+        """Split fresh admissions into prefill groups: (padded, bucket_len)
+        for the padded scheme, (exact, prompt_len) otherwise. Groups are
+        capped at max_batch rows."""
+        eng = self.engine
+        groups: Dict[Tuple[bool, int], list] = {}
+        for q, aw, slot in fresh:
+            n = len(q.prompt)
+            if eng.prefill_paddable and n >= 2:
+                lb = -((n - 1) // -self.bucket) * self.bucket  # ceil bucket
+                key = (True, lb)
+            else:
+                key = (False, n)
+            groups.setdefault(key, []).append((q, aw, slot))
+        out = []
+        cap = eng.ecfg.max_batch
+        for key, entries in sorted(groups.items(), key=lambda kv: kv[0]):
+            for i in range(0, len(entries), cap):
+                out.append((key, entries[i:i + cap]))
+        return out
+
+    # -- prefill ------------------------------------------------------------
+    def _prefill_group(self, group, now: float):
+        (padded, length), entries = group
+        eng = self.engine
+        n_real = len(entries)
+        rows = _next_pow2(n_real)
+        toks = np.zeros((rows, length), np.int32)
+        pre_lens = []
+        for i, (q, _, _) in enumerate(entries):
+            pre = q.prompt[:-1] if padded else q.prompt
+            toks[i, :len(pre)] = pre
+            pre_lens.append(len(pre))
+        for i in range(n_real, rows):           # row padding: repeat row 0
+            toks[i] = toks[0]
+
+        batch = {"tokens": jnp.asarray(toks)}
+        if eng.cfg.is_encdec:
+            frames = []
+            for q, _, _ in entries:
+                f = q.frames if q.frames is not None else np.zeros(
+                    (eng.cfg.encoder_seq, eng.cfg.d_model), np.float32)
+                frames.append(f)
+            for _ in range(n_real, rows):
+                frames.append(frames[0])
+            batch["frames"] = jnp.asarray(np.stack(frames))
+
+        # prefill runs on the request's own (healthy) AW: other AWs' health
+        # must not mask its tokens; EW health still applies (shadow reroute)
+        rs_pre = eng.route_state._replace(
+            aw_health=jnp.ones_like(eng.route_state.aw_health))
+        last_logits, req_cache = eng._prefill(
+            eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq)
+        last_logits = np.asarray(last_logits)
+
+        self.stats.calls += 1
+        self.stats.requests += n_real
+        self.stats.rows += rows
+        self.stats.real_tokens += sum(pre_lens)
+        self.stats.padded_tokens += rows * length
+        self.stats.batch_sizes.append(n_real)
+
+        for i, (q, aw, slot) in enumerate(entries):
+            state = eng.layout.request_state(req_cache, i)
+            if padded and pre_lens[i] < length:
+                state = eng.layout.scrub_request_state(state, pre_lens[i])
+            eng.cache = eng.layout.write_request_state(eng.cache, slot, state)
+            first = eng.sample_token(last_logits[i]) if not padded else None
+            self._install_fresh(q, aw, slot, now, padded=padded, first=first,
+                                n_prefilled=pre_lens[i])
+
+    def _install_fresh(self, q: QueuedRequest, aw: int, slot: int,
+                       now: float, *, padded: bool, first: Optional[int],
+                       n_prefilled: int):
+        eng = self.engine
+        n = len(q.prompt)
+        st = eng.make_request_state(q, slot)
+        st._aw = aw
+        st.t_admit = now
+        if padded:
+            # prompt's last token rides the next decode step; the first
+            # generated token is sampled there (true continuous batching)
+            st.pos = n - 1
+            st.next_input = int(q.prompt[-1])
+        else:
+            st.tokens = [int(first)]
+            st.pos = n
+            st.next_input = int(first)
+            st.t_first_token = now
+            if len(st.tokens) >= st.max_new:   # max_new=1: done at prefill
+                st.done = True
+        eng.requests[q.rid] = st
+
+        if eng.ecfg.checkpoint:
+            ck = eng.aws[aw].checkpointer
+            ck.register(q.rid, prompt_len=n)
+            if n_prefilled > 0:
+                slots = jnp.full((n_prefilled,), slot, jnp.int32)
+                tk = jnp.arange(n_prefilled, dtype=jnp.int32)
+                stacked = [np.asarray(a)
+                           for a in eng._extract(eng.cache, slots, tk)]
+                for t in range(n_prefilled):
+                    seg = [a[t] for a in stacked]
+                    # token_value = next decode input after position t
+                    tv = int(q.prompt[t + 1]) if t + 1 < n else int(first)
+                    ck.checkpoint_token(q.rid, t, seg, token_value=tv)
+            ck.flush()
+
+    # -- per-request restoration (recovery admissions) ----------------------
+    def _install_recovery(self, q: QueuedRequest, aw: int, slot: int,
+                          now: float):
+        """§6.2: inject the committed KV prefix into the new slot and rewind
+        the request to the committed token."""
+        eng = self.engine
+        r = eng.requests.get(q.rid)
+        if r is None:              # released while waiting for recovery
+            eng.aws[aw].slots.release(slot)
+            return
+        committed, tok_val, segs = eng.store.restore_request(q.rid)
+        cache = eng.layout.clear_slot(eng.cache, slot)
+        for t, seg in segs.items():
+            cache = eng.layout.write_token_segment(cache, slot, t, seg)
+        eng.cache = cache
+
+        n_prompt = len(r.prompt)
+        n_gen = max(0, committed + 2 - n_prompt)
+        r.tokens = r.tokens[:n_gen]
+        r.pos = committed + 1
+        if committed + 1 < n_prompt:
+            r.next_input = int(r.prompt[committed + 1])
+        elif tok_val >= 0:
+            r.next_input = int(tok_val)
+        elif r.tokens:
+            r.next_input = int(r.tokens[-1])
+        r.slot = slot
+        r._aw = aw
+        r.paused = False
+        r.queued_for_recovery = False
+        r.t_admit = now
+        eng.store.reassign(q.rid, aw)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> Dict[str, int]:
+        """One decode step over all active slots. Returns {rid: new_token}."""
+        eng = self.engine
+        act = eng.active_requests()
+        if not act:
+            return {}
+        tokens = np.zeros((eng.ecfg.max_batch,), np.int32)
+        pos = np.zeros((eng.ecfg.max_batch,), np.int32)
+        for r in act:
+            tokens[r.slot] = r.next_input
+            pos[r.slot] = r.pos
+        logits, eng.cache = eng._decode(
+            eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
+            eng.route_state, capacity=eng.decode_capacity)
+        logits = np.asarray(logits)
+
+        ck_reqs = [r for r in act
+                   if eng.ecfg.checkpoint and eng.aws[r.aw].alive]
+        stacked = None
+        if ck_reqs:
+            # single batched device->host gather for all requests' segments
+            slots = jnp.asarray([r.slot for r in ck_reqs], jnp.int32)
+            tk = jnp.asarray([r.pos for r in ck_reqs], jnp.int32)
+            stacked = [np.asarray(a) for a in eng._extract(eng.cache,
+                                                           slots, tk)]
+        ck_index = {r.rid: i for i, r in enumerate(ck_reqs)}
+
+        out: Dict[str, int] = {}
+        t_log = now if now is not None else float(eng.steps)
+        for r in act:
+            nxt = eng.sample_token(logits[r.slot])
+            written_pos = r.pos          # decode wrote KV at this position
+            r.pos += 1
+            r.tokens.append(nxt)
+            r.next_input = nxt
+            if r.t_first_token < 0:
+                r.t_first_token = t_log
+            out[r.rid] = nxt
+            if r.rid in ck_index:
+                seg = [a[ck_index[r.rid]] for a in stacked]
+                eng.aws[r.aw].checkpointer.checkpoint_token(
+                    r.rid, written_pos, seg, token_value=nxt)
+            if len(r.tokens) >= r.max_new or r.pos >= eng.ecfg.max_seq - 1:
+                r.done = True
+        for w in eng.aws:
+            w.checkpointer.flush()
+        eng.steps += 1
+        return out

@@ -1,22 +1,32 @@
-"""Tarragon inference engine: continuous batching over a slot-based cache,
-decoupled AW/EW roles via mesh-partitioned routing, per-token incremental
-KV checkpointing, and worker-granularity failure injection/recovery.
+"""Tarragon inference engine — a thin facade over the layered serving stack.
 
-The engine is the AW-side "Compute Engine" of Fig. 5, generalized to all ten
-assigned architectures. One jitted decode step serves every active slot;
-prefill runs per request (exact prompt length) and the resulting cache slice
-is merged into the global slot cache.
+Layers (paper Fig. 5; see ARCHITECTURE.md for the full map):
+
+  * ``Gateway``        (serving/gateway.py)  — admission, FIFO waiting
+    queue, pluggable AW placement policy.
+  * ``AttentionWorker`` / ``ExpertWorker`` (serving/workers.py) — per-worker
+    failure domains: each AW owns its slot partition + checkpoint stream,
+    each EW its liveness; ``fail``/``provision`` are worker methods.
+  * ``ContinuousBatchScheduler`` (serving/batching.py) — length-bucketed
+    batched prefill, per-request restoration for recovery re-admissions,
+    and the shared decode step.
+
+The engine itself owns only the *device-side* arrays of the single-process
+simulation (params, route state, the slot-partitioned cache pytree) plus
+the jitted step functions, and re-exports the historical API
+(``submit``/``step``/``generate``/``fail_*``/``provision_*``) so tests,
+benchmarks, and the orchestrator keep working unchanged.
 
 Failure API (used by the orchestrator and by tests):
-  * ``fail_aw(a)``   — drop AW a: its slots are lost; requests recover via
-    per-request restoration from the checkpoint store onto healthy AWs.
-  * ``fail_ew(e)``   — drop EW e: the ERT immediately resolves its experts
-    to shadow slots (AW-side self-healing); nothing else changes.
+  * ``fail_aw(a)``   — AW a crashes: its slots are lost and its requests
+    pause; they re-enter through the Gateway and restore from the
+    checkpoint store onto healthy AWs (per-request restoration, §6.2).
+  * ``fail_ew(e)``   — EW e crashes: the ERT immediately resolves its
+    experts to shadow slots (AW-side self-healing); nothing else changes.
   * ``provision_*`` — background capacity restoration (§5.4).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -26,10 +36,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import selfheal
-from repro.core.checkpoint import CheckpointStore, KVCheckpointer
+from repro.core.checkpoint import CheckpointStore
 from repro.core.refe import RouteState
 from repro.models import get_model
-from repro.serving.kvcache import CacheLayout, SlotManager
+from repro.serving.batching import ContinuousBatchScheduler
+from repro.serving.gateway import Gateway, QueuedRequest
+from repro.serving.kvcache import CacheLayout
+from repro.serving.workers import (AttentionWorker, ClusterSlotView,
+                                   ExpertWorker)
 
 
 @dataclass
@@ -42,7 +56,12 @@ class EngineConfig:
     checkpoint: bool = True
     checkpoint_reorder: int = 0    # test hook: reorder window for WR arrival
     greedy: bool = True
+    temperature: float = 1.0       # sampling temperature (greedy=False)
+    top_k: int = 0                 # 0 = full distribution (greedy=False)
+    sample_seed: int = 0
     capacity_factor_decode: float = 0.0  # 0 = use model default
+    placement: str = "least_loaded"      # Gateway placement policy
+    prefill_bucket: int = 16             # padded-prefill length bucket
 
 
 @dataclass
@@ -53,15 +72,26 @@ class RequestState:
     max_new: int
     tokens: List[int] = field(default_factory=list)  # generated tokens
     pos: int = 0                  # next position to write
+    next_input: int = -1          # token id the next decode step consumes
     done: bool = False
-    ttft: float = -1.0
-    token_times: List[float] = field(default_factory=list)
+    paused: bool = False          # owning AW died; awaiting re-admission
+    queued_for_recovery: bool = False
+    # virtual-clock timeline (all on the serving loop's clock)
+    t_enqueue: float = 0.0
+    t_admit: float = -1.0
+    t_first_token: float = -1.0
+
+    _aw: int = -1
 
     @property
     def aw(self) -> int:
         return self._aw
 
-    _aw: int = -1
+    @property
+    def ttft(self) -> float:
+        """Virtual-clock time-to-first-token (enqueue -> first token)."""
+        return self.t_first_token - self.t_enqueue \
+            if self.t_first_token >= 0 else -1.0
 
 
 class InferenceEngine:
@@ -75,186 +105,166 @@ class InferenceEngine:
         self.route_state: RouteState = self.api.init_route_state()
         self.cache = self.api.init_cache(ecfg.max_batch, ecfg.max_seq)
         self.layout = CacheLayout(self.api.init_cache)
-        self.slots = SlotManager(ecfg.max_batch, ecfg.num_aw)
         self.store = CheckpointStore()
-        self.checkpointers = {
-            a: KVCheckpointer(self.store, a,
-                              reorder_window=ecfg.checkpoint_reorder, seed=a)
-            for a in range(ecfg.num_aw)}
+
+        # ---- worker pool: per-worker failure domains ----------------------
+        assert ecfg.max_batch % ecfg.num_aw == 0
+        per_aw = ecfg.max_batch // ecfg.num_aw
+        self.aws = [AttentionWorker(a, a * per_aw, (a + 1) * per_aw,
+                                    self.store,
+                                    reorder_window=ecfg.checkpoint_reorder)
+                    for a in range(ecfg.num_aw)]
+        self.ews = [ExpertWorker(e) for e in range(ecfg.num_ew)]
+        self.slots = ClusterSlotView(self.aws, ecfg.max_batch)
+
+        # ---- request plane ------------------------------------------------
+        self.gateway = Gateway(self.aws, policy=ecfg.placement)
+        self.scheduler = ContinuousBatchScheduler(
+            self, self.gateway, bucket=ecfg.prefill_bucket)
         self.requests: Dict[str, RequestState] = {}
+
+        # ---- jitted step functions ---------------------------------------
         self._extract = self.layout.make_batched_extractor()
-        self._decode = jax.jit(self.api.decode)
+        self._decode = jax.jit(self.api.decode,
+                               static_argnames=("capacity",))
         self._prefill = jax.jit(self.api.prefill,
                                 static_argnames=("max_seq",))
-        self.failed_aws: set = set()
-        self.failed_ews: set = set()
+        self._sample_rng = np.random.default_rng(ecfg.sample_seed)
         self.steps = 0
 
-    # ------------------------------------------------------------------
-    # admission
-    # ------------------------------------------------------------------
-    def _healthy_aws(self) -> List[int]:
-        return [a for a in range(self.ecfg.num_aw) if a not in self.failed_aws]
+        # padded prefill is only sound for pure full-attention caches:
+        # recurrent-state leaves or ring buffers must never see pad tokens
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        self.prefill_paddable = all(
+            k.startswith("attn_") for k in self.layout.leaf_kind) and all(
+            leaf.shape[ax + 1] >= ecfg.max_seq
+            for leaf, ax, k in zip(leaves, self.layout.batch_axis,
+                                   self.layout.leaf_kind)
+            if k == "attn_k")
 
+    # ------------------------------------------------------------------
+    # decode routing capacity (§5.2): the decode path may run at a tighter
+    # capacity factor than prefill — fewer tokens per step means the
+    # default (prefill-sized) factor over-provisions slot capacity
+    # ------------------------------------------------------------------
+    @property
+    def decode_capacity(self) -> Optional[int]:
+        cf = self.ecfg.capacity_factor_decode
+        if not cf or not self.cfg.moe.enabled:
+            return None
+        return int(max(1, round(cf * self.cfg.moe.top_k *
+                                self.ecfg.max_batch /
+                                self.cfg.moe.num_experts)))
+
+    # ------------------------------------------------------------------
+    # sampling (the decode head): greedy argmax or temperature/top-k
+    # ------------------------------------------------------------------
+    def sample_token(self, row_logits: np.ndarray) -> int:
+        if self.ecfg.greedy:
+            return int(np.argmax(row_logits))
+        logits = np.asarray(row_logits, np.float64) / max(
+            self.ecfg.temperature, 1e-6)
+        if self.ecfg.top_k:
+            kth = np.partition(logits, -self.ecfg.top_k)[-self.ecfg.top_k]
+            logits = np.where(logits < kth, -np.inf, logits)
+        logits -= logits.max()
+        p = np.exp(logits)
+        p /= p.sum()
+        return int(self._sample_rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    # admission (delegates to Gateway + ContinuousBatchScheduler)
+    # ------------------------------------------------------------------
     def choose_aw(self) -> Optional[int]:
-        """Gateway policy: least-loaded healthy AW with a free slot."""
-        best, best_free = None, 0
-        for a in self._healthy_aws():
-            f = self.slots.free_count(a)
-            if f > best_free:
-                best, best_free = a, f
-        return best
+        return self.gateway.choose_aw()
+
+    def make_request_state(self, q: QueuedRequest, slot: int
+                           ) -> RequestState:
+        return RequestState(rid=q.rid, slot=slot, prompt=q.prompt,
+                            max_new=q.max_new, t_enqueue=q.t_enqueue)
 
     def submit(self, rid: str, prompt: np.ndarray, max_new: int,
-               frames: Optional[np.ndarray] = None) -> bool:
-        aw = self.choose_aw()
-        if aw is None:
-            return False
-        slot = self.slots.alloc(aw)
-        prompt = np.asarray(prompt, np.int32)
-        batch = {"tokens": jnp.asarray(prompt[None, :])}
-        if self.cfg.is_encdec:
-            if frames is None:
-                frames = np.zeros((self.cfg.encoder_seq, self.cfg.d_model),
-                                  np.float32)
-            batch["frames"] = jnp.asarray(frames[None])
-        # prefill runs on a single healthy AW: other AWs' health must not
-        # mask this request's tokens (EW health still applies)
-        rs_prefill = self.route_state._replace(
-            aw_health=jnp.ones_like(self.route_state.aw_health))
-        last_logits, req_cache = self._prefill(
-            self.params, batch, rs_prefill, max_seq=self.ecfg.max_seq)
-        state = self.layout.request_state(req_cache, 0)
-        self.cache = self.layout.write_request_state(self.cache, slot, state)
-
-        first = int(jnp.argmax(last_logits[0]))
-        st = RequestState(rid=rid, slot=slot, prompt=prompt, max_new=max_new,
-                          tokens=[first], pos=len(prompt),
-                          ttft=time.monotonic())
-        st._aw = aw
-        self.requests[rid] = st
-
-        if self.ecfg.checkpoint:
-            ck = self.checkpointers[aw]
-            ck.register(rid, prompt_len=len(prompt))
-            # bulk-checkpoint the prefill KV (prompt tokens), then stream
-            # incrementally per decoded token (§6.1). One batched gather.
-            n = len(prompt)
-            slots = jnp.full((n,), slot, jnp.int32)
-            toks = jnp.arange(n, dtype=jnp.int32)
-            stacked = [np.asarray(a)
-                       for a in self._extract(self.cache, slots, toks)]
-            for t in range(n):
-                seg = [a[t] for a in stacked]
-                tv = int(prompt[t]) if t + 1 < n else first
-                ck.checkpoint_token(rid, t, seg, token_value=tv)
-            ck.flush()
-        return True
+               frames: Optional[np.ndarray] = None,
+               now: float = 0.0) -> bool:
+        """Synchronous admission: enqueue and admit immediately; refuse
+        (rather than queue) when no AW has capacity — the waiting-queue
+        path is the serving loop's (run_serving drives the Gateway
+        directly)."""
+        self.gateway.enqueue(rid, prompt, max_new, now=now, frames=frames)
+        admitted = self.scheduler.admit(now)
+        if rid in admitted:
+            return True
+        self.gateway.drop(rid)
+        return False
 
     # ------------------------------------------------------------------
-    # decode step
+    # decode step (delegates to the scheduler)
     # ------------------------------------------------------------------
     def active_requests(self) -> List[RequestState]:
-        return [r for r in self.requests.values() if not r.done]
+        return [r for r in self.requests.values()
+                if not r.done and not r.paused]
 
-    def step(self) -> Dict[str, int]:
+    def step(self, now: Optional[float] = None) -> Dict[str, int]:
         """One decode step over all active slots. Returns {rid: new_token}."""
-        act = self.active_requests()
-        if not act:
-            return {}
-        tokens = np.zeros((self.ecfg.max_batch,), np.int32)
-        pos = np.zeros((self.ecfg.max_batch,), np.int32)
-        for r in act:
-            tokens[r.slot] = r.tokens[-1]
-            pos[r.slot] = r.pos
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), jnp.asarray(pos), self.cache,
-            self.route_state)
-        logits = np.asarray(logits)
-        out = {}
-        now = time.monotonic()
-        ck_reqs = [r for r in act
-                   if self.ecfg.checkpoint and r.aw not in self.failed_aws]
-        stacked = None
-        if ck_reqs:
-            # single batched device->host gather for all requests' segments
-            slots = jnp.asarray([r.slot for r in ck_reqs], jnp.int32)
-            toks = jnp.asarray([r.pos for r in ck_reqs], jnp.int32)
-            stacked = [np.asarray(a)
-                       for a in self._extract(self.cache, slots, toks)]
-        ck_index = {r.rid: i for i, r in enumerate(ck_reqs)}
-        for r in act:
-            nxt = int(np.argmax(logits[r.slot]))
-            written_pos = r.pos          # decode wrote KV at this position
-            r.pos += 1
-            r.tokens.append(nxt)
-            r.token_times.append(now)
-            out[r.rid] = nxt
-            if r.rid in ck_index:
-                i = ck_index[r.rid]
-                seg = [a[i] for a in stacked]
-                self.checkpointers[r.aw].checkpoint_token(
-                    r.rid, written_pos, seg, token_value=nxt)
-            if len(r.tokens) >= r.max_new or r.pos >= self.ecfg.max_seq - 1:
-                r.done = True
-        for a, ck in self.checkpointers.items():
-            ck.flush()
-        self.steps += 1
-        return out
+        return self.scheduler.step(now)
 
     # ------------------------------------------------------------------
-    # failure injection & recovery
+    # failure injection & recovery (delegates to the worker objects)
     # ------------------------------------------------------------------
+    @property
+    def failed_aws(self) -> set:
+        return {w.aw_id for w in self.aws if not w.alive}
+
+    @property
+    def failed_ews(self) -> set:
+        return {w.ew_id for w in self.ews if not w.alive}
+
+    @property
+    def checkpointers(self) -> dict:
+        return {w.aw_id: w.checkpointer for w in self.aws}
+
     def fail_ew(self, ew: int):
-        self.failed_ews.add(ew)
-        self.route_state = selfheal.fail_ew(self.route_state, ew)
+        self.route_state = self.ews[ew].fail(self.route_state)
 
     def fail_aw(self, aw: int):
-        """AW crash: its slots (and un-checkpointed state) are gone."""
-        self.failed_aws.add(aw)
-        self.route_state = selfheal.fail_aw(self.route_state, aw)
-        self.slots.drop_aw(aw)
+        """AW crash: its slots (and un-checkpointed state) are gone; its
+        requests pause until re-admitted through the Gateway. Requests
+        with no checkpoint record (checkpoint=False) cannot be restored:
+        they keep decoding against the dead worker's slot — the simulated
+        data loss of a system without Tarragon's store — instead of being
+        stranded in a paused state forever."""
+        self.route_state = self.aws[aw].fail(self.route_state)
+        recoverable = set(self.store.active_requests_on(aw))
+        for r in self.requests.values():
+            if r._aw == aw and not r.done and r.rid in recoverable:
+                r.paused = True
 
-    def recover_aw_requests(self) -> List[str]:
-        """Per-request restoration (§6.2): move every affected request to a
-        healthy AW, restore committed KV, resume from the committed token."""
-        recovered = []
+    def recover_aw_requests(self, now: float = 0.0) -> List[str]:
+        """Per-request restoration (§6.2): requeue every affected request
+        through the Gateway (front of the FIFO — they are the oldest work)
+        and admit as many as current capacity allows; the rest stay queued
+        and retry on subsequent ticks instead of being dropped. Returns the
+        rids restored *now*."""
+        entries = []
         for aw in sorted(self.failed_aws):
             for rid in self.store.active_requests_on(aw):
                 r = self.requests.get(rid)
-                if r is None or r.done:
+                if r is None or r.done or r.queued_for_recovery:
                     continue
-                target = self.choose_aw()
-                if target is None:
-                    continue  # no capacity until provisioning completes
-                new_slot = self.slots.alloc(target)
-                committed, tok_val, segs = self.store.restore_request(rid)
-                self.cache = self.layout.clear_slot(self.cache, new_slot)
-                for t, seg in segs.items():
-                    self.cache = self.layout.write_token_segment(
-                        self.cache, new_slot, t, seg)
-                # rewind the request to the committed point
-                n_prompt = len(r.prompt)
-                n_gen_committed = max(0, committed + 1 - n_prompt) + 1
-                r.tokens = r.tokens[:n_gen_committed]
-                if tok_val >= 0:
-                    r.tokens[-1] = tok_val
-                r.pos = committed + 1
-                r.slot = new_slot
-                r._aw = target
-                self.store.reassign(rid, target)
-                recovered.append(rid)
-        return recovered
+                r.queued_for_recovery = True
+                # the recovery waiting spell starts now, not at arrival
+                entries.append(QueuedRequest(
+                    rid, r.prompt, r.max_new, t_enqueue=now))
+        self.gateway.requeue_recovery(entries)
+        admitted = set(self.scheduler.admit(now))
+        return [q.rid for q in entries if q.rid in admitted]
 
     def provision_aw(self, aw: int):
         in_use = {r.slot for r in self.active_requests()}
-        self.failed_aws.discard(aw)
-        self.slots.restore_aw(aw, in_use)
-        self.route_state = selfheal.recover_aw(self.route_state, aw)
+        self.route_state = self.aws[aw].provision(self.route_state, in_use)
 
     def provision_ew(self, ew: int, repoint_protect: Optional[int] = None):
-        self.failed_ews.discard(ew)
-        self.route_state = selfheal.recover_ew(self.route_state, ew)
+        self.route_state = self.ews[ew].provision(self.route_state)
         if repoint_protect is not None:
             self.repoint_shadows(repoint_protect)
 
@@ -289,9 +299,13 @@ class InferenceEngine:
         r = self.requests.pop(rid, None)
         if r is None:
             return
-        if r.aw not in self.failed_aws:
+        if r.queued_for_recovery:
+            # cancel the pending re-admission: a stale recovery entry must
+            # not reach the scheduler after the request is gone
+            self.gateway.drop(rid)
+        if r._aw >= 0 and not r.paused and self.aws[r._aw].alive:
             self.cache = self.layout.clear_slot(self.cache, r.slot)
-            self.slots.release(r.slot)
+            self.aws[r._aw].slots.release(r.slot)
         self.store.release(rid)
 
     # ------------------------------------------------------------------

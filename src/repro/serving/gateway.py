@@ -1,0 +1,182 @@
+"""Cluster Gateway: admission control, the waiting queue, and AW placement.
+
+The Gateway is the front door of the serving stack (paper Fig. 5's cluster
+coordinator, request-plane half): every request — fresh arrivals and
+requests preempted by an AW failure alike — enters a FIFO waiting queue and
+is admitted onto an AttentionWorker by a pluggable placement policy. A
+request that cannot be placed (no healthy AW with a free slot) stays at the
+head of the queue and is retried on the next scheduler tick; it is never
+dropped.
+
+Placement policies (select a healthy AW with free capacity, or None):
+  * ``least_loaded``     — most free slots wins (default; ties -> lowest id)
+  * ``round_robin``      — cycle over healthy AWs, skipping full ones
+  * ``session_affinity`` — stable hash of the session prefix of the request
+    id (``rid.rsplit('-', 1)[0]``), falling back to least-loaded when the
+    home AW is dead or full. Keeps a session's requests co-located so later
+    PRs can exploit prefix-cache locality.
+
+Recovery entries (``recovery=True``) carry no prompt work to redo: the
+scheduler restores their committed KV from the checkpoint store instead of
+re-prefilling. They re-enter at the *front* of the queue (they are older
+than anything waiting behind them).
+"""
+from __future__ import annotations
+
+import zlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.workers import AttentionWorker
+
+
+@dataclass
+class QueuedRequest:
+    rid: str
+    prompt: np.ndarray
+    max_new: int
+    frames: Optional[np.ndarray] = None
+    t_enqueue: float = 0.0
+    recovery: bool = False          # re-admission of a preempted request
+    retries: int = 0                # ticks spent blocked at the queue head
+
+
+# --------------------------------------------------------------------------
+# placement policies
+# --------------------------------------------------------------------------
+
+class LeastLoadedPolicy:
+    """Most free slots wins; ties break toward the lowest AW id (matches the
+    original engine's admission behaviour)."""
+
+    def __call__(self, workers: List[AttentionWorker],
+                 rid: str) -> Optional[int]:
+        best, best_free = None, 0
+        for w in workers:
+            f = w.free_slots()
+            if f > best_free:
+                best, best_free = w.aw_id, f
+        return best
+
+
+class RoundRobinPolicy:
+    """Cycle over AWs regardless of load, skipping dead/full ones."""
+
+    def __init__(self):
+        self._next = 0
+
+    def __call__(self, workers: List[AttentionWorker],
+                 rid: str) -> Optional[int]:
+        n = len(workers)
+        for i in range(n):
+            w = workers[(self._next + i) % n]
+            if w.has_capacity():
+                self._next = (w.aw_id + 1) % n
+                return w.aw_id
+        return None
+
+
+class SessionAffinityPolicy:
+    """Stable-hash the session prefix of the rid onto the AW ring; fall back
+    to least-loaded when the home AW cannot take the request."""
+
+    def __init__(self):
+        self._fallback = LeastLoadedPolicy()
+
+    @staticmethod
+    def session_key(rid: str) -> str:
+        return rid.rsplit("-", 1)[0]
+
+    def __call__(self, workers: List[AttentionWorker],
+                 rid: str) -> Optional[int]:
+        home = zlib.crc32(self.session_key(rid).encode()) % len(workers)
+        if workers[home].has_capacity():
+            return home
+        return self._fallback(workers, rid)
+
+
+PLACEMENT_POLICIES = {
+    "least_loaded": LeastLoadedPolicy,
+    "round_robin": RoundRobinPolicy,
+    "session_affinity": SessionAffinityPolicy,
+}
+
+
+@dataclass
+class GatewayStats:
+    enqueued: int = 0
+    admitted: int = 0
+    requeued: int = 0               # recovery re-admissions queued
+    blocked_ticks: int = 0          # head-of-queue retries
+    queue_delay: Dict[str, float] = field(default_factory=dict)
+
+
+class Gateway:
+    """Admission + waiting queue + placement over the AW pool."""
+
+    def __init__(self, workers: List[AttentionWorker],
+                 policy="least_loaded"):
+        self.workers = workers
+        if isinstance(policy, str):
+            policy = PLACEMENT_POLICIES[policy]()
+        self.policy = policy
+        self.queue: Deque[QueuedRequest] = deque()
+        self.stats = GatewayStats()
+
+    # -- queue management ---------------------------------------------------
+    def enqueue(self, rid: str, prompt: np.ndarray, max_new: int, *,
+                now: float = 0.0, frames: Optional[np.ndarray] = None):
+        self.queue.append(QueuedRequest(
+            rid, np.asarray(prompt, np.int32), max_new, frames, now))
+        self.stats.enqueued += 1
+
+    def requeue_recovery(self, entries: List[QueuedRequest]):
+        """Preempted/recovered requests re-enter at the FRONT of the queue
+        (they are older than everything waiting behind them)."""
+        for q in reversed(entries):
+            q.recovery = True
+            self.queue.appendleft(q)
+            self.stats.requeued += 1
+
+    def depth(self) -> int:
+        return len(self.queue)
+
+    def drop(self, rid: str) -> bool:
+        """Remove a still-queued request (admission refused by the caller)."""
+        for q in list(self.queue):
+            if q.rid == rid:
+                self.queue.remove(q)
+                return True
+        return False
+
+    # -- placement ----------------------------------------------------------
+    def choose_aw(self, rid: str = "") -> Optional[int]:
+        return self.policy(self.workers, rid)
+
+    def admit(self, now: float = 0.0
+              ) -> List[Tuple[QueuedRequest, int, int]]:
+        """Pop FIFO while placement succeeds, reserving a slot on the
+        chosen AW per admission (so the policy sees live free counts).
+        Head-of-line blocking is deliberate: a request is never overtaken,
+        only retried. Returns (entry, aw_id, slot) triples."""
+        admitted = []
+        while self.queue:
+            head = self.queue[0]
+            aw = self.choose_aw(head.rid)
+            if aw is None:
+                head.retries += 1
+                self.stats.blocked_ticks += 1
+                break
+            self.queue.popleft()
+            slot = self.workers[aw].slots.alloc()
+            self.stats.admitted += 1
+            # total time spent waiting at the gateway, summed over spells
+            # (a recovery re-admission is a second spell for the same rid)
+            self.stats.queue_delay[head.rid] = \
+                self.stats.queue_delay.get(head.rid, 0.0) + \
+                (now - head.t_enqueue)
+            admitted.append((head, aw, slot))
+        return admitted

@@ -141,6 +141,21 @@ class CacheLayout:
                for l, ax, s in zip(leaves, self.batch_axis, state)]
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    def scrub_request_state(self, state: List[Any], valid_len: int
+                            ) -> List[Any]:
+        """Invalidate pad entries of a batched-prefill request state: any
+        attention-cache entry holding a position >= ``valid_len`` gets
+        ``pos`` = -1, which the decode kernels mask out. K/V payloads can
+        stay — they are unreachable once the position is invalid. Only
+        meaningful for pure attention caches (state leaves are recurrent
+        summaries that padding must not reach in the first place)."""
+        out = []
+        for s, kind in zip(state, self.leaf_kind):
+            if kind == "attn_pos":
+                s = np.where(np.asarray(s) >= valid_len, -1, s)
+            out.append(s)
+        return out
+
     def clear_slot(self, cache, slot: int):
         """Reset one slot (releases a finished/failed request)."""
         leaves, treedef = self._leaves(cache)
@@ -161,36 +176,5 @@ class CacheLayout:
         return total
 
 
-class SlotManager:
-    """Free-list of batch slots, partitioned across AWs (data-parallel
-    request ownership: slot // slots_per_aw = AW id)."""
-
-    def __init__(self, max_batch: int, num_aw: int):
-        assert max_batch % num_aw == 0
-        self.max_batch = max_batch
-        self.num_aw = num_aw
-        self.per_aw = max_batch // num_aw
-        self._free: Dict[int, List[int]] = {
-            a: list(range(a * self.per_aw, (a + 1) * self.per_aw))
-            for a in range(num_aw)}
-
-    def aw_of(self, slot: int) -> int:
-        return slot // self.per_aw
-
-    def alloc(self, aw_id: int) -> int:
-        return self._free[aw_id].pop(0)
-
-    def free_count(self, aw_id: int) -> int:
-        return len(self._free[aw_id])
-
-    def release(self, slot: int):
-        self._free[self.aw_of(slot)].insert(0, slot)
-
-    def drop_aw(self, aw_id: int):
-        """A failed AW's slots become unusable until reprovisioning."""
-        self._free[aw_id] = []
-
-    def restore_aw(self, aw_id: int, in_use: set):
-        self._free[aw_id] = [
-            s for s in range(aw_id * self.per_aw, (aw_id + 1) * self.per_aw)
-            if s not in in_use]
+# Slot allocation lives with the workers that own the partitions:
+# see serving/workers.py (SlotPartition / AttentionWorker / ClusterSlotView).

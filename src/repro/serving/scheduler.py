@@ -1,9 +1,14 @@
-"""Serving simulation loop: cluster gateway + request scheduler.
+"""Serving simulation loop over the layered stack.
 
-Drives an InferenceEngine with a workload trace over a virtual clock,
-coordinating admission (gateway -> least-loaded healthy AW), decode stepping,
-failure injection via the orchestrator, and metric collection (TTFT, TBT,
-output tokens/s) — the measurement harness behind the §7.2/§7.3 benchmarks.
+Drives the Gateway (admission + FIFO waiting queue), the
+ContinuousBatchScheduler (bucketed prefill + decode), and the Orchestrator
+(failure detection/provisioning) with a workload trace over a virtual
+clock, collecting the §7.2/§7.3 measurement set: TTFT, TBT, queueing delay,
+output tokens/s, and prefill-batch occupancy.
+
+All request timestamps live on the virtual clock — TTFT is
+(first token time - arrival), queueing delay is (admission - arrival) —
+so benchmark numbers are internally consistent regardless of host speed.
 
 Virtual time: each decode step advances the clock by a configurable step
 time (default: measured wall time of the step, which is meaningful for
@@ -33,8 +38,11 @@ class TokenRecord:
 class ServeMetrics:
     token_log: List[TokenRecord] = field(default_factory=list)
     ttft: Dict[str, float] = field(default_factory=dict)
+    queue_delay: Dict[str, float] = field(default_factory=dict)
+    outputs: Dict[str, List[int]] = field(default_factory=dict)
     finished: List[str] = field(default_factory=list)
     duration: float = 0.0
+    prefill: dict = field(default_factory=dict)  # scheduler PrefillStats
 
     def throughput(self) -> float:
         return len(self.token_log) / self.duration if self.duration else 0.0
@@ -52,6 +60,10 @@ class ServeMetrics:
     def max_stall(self) -> float:
         v = self.tbt_values()
         return float(v.max()) if v.size else 0.0
+
+    def queue_delay_values(self) -> np.ndarray:
+        return np.asarray(list(self.queue_delay.values())) \
+            if self.queue_delay else np.zeros((0,))
 
     def throughput_timeline(self, dt: float = 0.5):
         if not self.token_log:
@@ -76,11 +88,13 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 step_time: Optional[float] = None,
                 max_steps: int = 100000) -> ServeMetrics:
     m = ServeMetrics()
+    gw, sched = engine.gateway, engine.scheduler
     clock = 0.0
     pending = sorted(workload, key=lambda r: r.arrival)
     qi = 0
     injected = [False] * len(failures)
     steps = 0
+    seen_first = set()
     while clock < duration and steps < max_steps:
         # failure injection
         for i, f in enumerate(failures):
@@ -90,31 +104,51 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 injected[i] = True
         if orchestrator is not None:
             orchestrator.tick(clock)
-        # admission
+        # arrivals enter the Gateway's FIFO queue (never dropped);
+        # admission + bucketed prefill happen in one scheduler pass
         while qi < len(pending) and pending[qi].arrival <= clock:
             r = pending[qi]
-            ok = engine.submit(r.request_id,
-                               r.prompt_tokens(engine.cfg.vocab_size),
-                               r.max_new_tokens)
-            if not ok:
-                break  # no capacity; retry next tick
-            m.ttft[r.request_id] = clock - r.arrival
+            # enqueue stamped with the true arrival: queueing delay and
+            # TTFT are measured from arrival, not from the tick the loop
+            # first noticed the request
+            gw.enqueue(r.request_id, r.prompt_tokens(engine.cfg.vocab_size),
+                       r.max_new_tokens, now=r.arrival)
             qi += 1
+        sched.admit(clock)
         # decode step
         t0 = time.monotonic()
-        out = engine.step()
+        out = engine.step(now=clock)
         dt = step_time if step_time is not None else time.monotonic() - t0
-        if not out and qi >= len(pending):
-            break
         if not out:
-            dt = max(dt, 1e-3)  # idle tick
+            # idle tick: quit once nothing can ever make progress again
+            if qi >= len(pending) and not engine.active_requests() and \
+                    (orchestrator is None or orchestrator.outstanding == 0):
+                break
+            dt = max(dt, 1e-3)
         clock += dt
         for rid in out:
             m.token_log.append(TokenRecord(clock, rid))
+            if rid not in seen_first:
+                seen_first.add(rid)
+                r = engine.requests.get(rid)
+                if r is not None:
+                    # padded-prefill requests emit their first token
+                    # through the decode step: stamp TTFT at the step's
+                    # *end* time (exact-scheme requests got theirs at
+                    # admission). Record immediately so still-running
+                    # requests at the duration cutoff are not excluded
+                    # from the TTFT distribution.
+                    if len(r.tokens) == 1:
+                        r.t_first_token = clock
+                    m.ttft[rid] = r.ttft
         for r in list(engine.requests.values()):
             if r.done and r.rid not in m.finished:
                 m.finished.append(r.rid)
+                m.ttft[r.rid] = r.ttft
+                m.outputs[r.rid] = list(r.tokens)
                 engine.release_request(r.rid)
         steps += 1
     m.duration = clock
+    m.queue_delay = dict(gw.stats.queue_delay)
+    m.prefill = sched.stats.snapshot()
     return m

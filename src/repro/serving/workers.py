@@ -1,0 +1,151 @@
+"""Worker objects for the layered serving stack (paper Fig. 5).
+
+The paper's central claim is that Attention Workers and Expert Workers are
+*distinct failure domains* behind a reconfigurable datapath. This module
+makes that structural: each worker object owns exactly the state that dies
+with it, and `fail()` / `provision()` are methods on the worker — the blast
+radius of a failure is the worker's own attributes, not a flag on a global
+engine.
+
+  * ``AttentionWorker`` — owns its slice of the slot space (a
+    ``SlotPartition`` over the shared cache pytree), its ``KVCheckpointer``
+    stream into the checkpoint store, and its liveness bit. Killing it
+    drops the slots and stops the checkpoint stream; everything else in the
+    cluster keeps running.
+  * ``ExpertWorker`` — owns its liveness bit; its experts' reachability is
+    carried in-band by the RouteState health mask (core/selfheal.py), so
+    `fail()`/`provision()` are pure RouteState transitions.
+
+Workers never talk to each other: the Gateway places requests onto AWs, the
+ContinuousBatchScheduler drives the shared jitted step, and the
+InferenceEngine facade owns the device-side arrays (single-process
+simulation of the multi-host datapath).
+"""
+from __future__ import annotations
+
+from typing import List, Set
+
+from repro.core import selfheal
+from repro.core.checkpoint import CheckpointStore, KVCheckpointer
+from repro.core.refe import RouteState
+
+
+class SlotPartition:
+    """Free-list over one AW's contiguous slot range [lo, hi) of the shared
+    batch dimension (data-parallel request ownership)."""
+
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+        self._free: List[int] = list(range(lo, hi))
+
+    @property
+    def capacity(self) -> int:
+        return self.hi - self.lo
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def owns(self, slot: int) -> bool:
+        return self.lo <= slot < self.hi
+
+    def alloc(self) -> int:
+        return self._free.pop(0)
+
+    def release(self, slot: int):
+        assert self.owns(slot)
+        self._free.insert(0, slot)
+
+    def drop(self):
+        """The partition's slots become unusable (worker crash)."""
+        self._free = []
+
+    def restore(self, in_use: Set[int]):
+        self._free = [s for s in range(self.lo, self.hi) if s not in in_use]
+
+
+class AttentionWorker:
+    """One AW: cache partition + checkpoint stream + liveness.
+
+    RouteState is the cluster-wide routing array consumed by the jitted
+    step; transitions return the updated state for the engine to install
+    (the device arrays themselves are shared in this single-process
+    simulation).
+    """
+
+    def __init__(self, aw_id: int, lo: int, hi: int, store: CheckpointStore,
+                 reorder_window: int = 0):
+        self.aw_id = aw_id
+        self.slots = SlotPartition(lo, hi)
+        self.checkpointer = KVCheckpointer(store, aw_id,
+                                           reorder_window=reorder_window,
+                                           seed=aw_id)
+        self.alive = True
+
+    # -- placement view -----------------------------------------------------
+    def free_slots(self) -> int:
+        return self.slots.free_count() if self.alive else 0
+
+    def has_capacity(self) -> bool:
+        return self.alive and self.slots.free_count() > 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def fail(self, route_state: RouteState) -> RouteState:
+        """Crash: slots (and any un-checkpointed KV) are gone."""
+        self.alive = False
+        self.slots.drop()
+        return selfheal.fail_aw(route_state, self.aw_id)
+
+    def provision(self, route_state: RouteState,
+                  in_use: Set[int]) -> RouteState:
+        """Background re-provisioning (§5.4): fresh slots join the pool."""
+        self.alive = True
+        self.slots.restore(in_use)
+        return selfheal.recover_aw(route_state, self.aw_id)
+
+    def __repr__(self):
+        return (f"AW{self.aw_id}(alive={self.alive}, "
+                f"free={self.slots.free_count()}/{self.slots.capacity})")
+
+
+class ExpertWorker:
+    """One EW: liveness only — expert reachability lives in the RouteState
+    (ERT candidates + ew_health), which the AW-side routing consumes on the
+    next step without recompilation."""
+
+    def __init__(self, ew_id: int):
+        self.ew_id = ew_id
+        self.alive = True
+
+    def fail(self, route_state: RouteState) -> RouteState:
+        self.alive = False
+        return selfheal.fail_ew(route_state, self.ew_id)
+
+    def provision(self, route_state: RouteState) -> RouteState:
+        self.alive = True
+        return selfheal.recover_ew(route_state, self.ew_id)
+
+    def __repr__(self):
+        return f"EW{self.ew_id}(alive={self.alive})"
+
+
+class ClusterSlotView:
+    """Back-compat facade with the old engine-owned SlotManager API, backed
+    by the per-worker partitions (tests/benchmarks read free counts)."""
+
+    def __init__(self, workers: List[AttentionWorker], max_batch: int):
+        self._workers = workers
+        self.max_batch = max_batch
+        self.num_aw = len(workers)
+        self.per_aw = max_batch // len(workers)
+
+    def aw_of(self, slot: int) -> int:
+        return slot // self.per_aw
+
+    def free_count(self, aw_id: int) -> int:
+        return self._workers[aw_id].slots.free_count()
+
+    def alloc(self, aw_id: int) -> int:
+        return self._workers[aw_id].slots.alloc()
+
+    def release(self, slot: int):
+        self._workers[self.aw_of(slot)].slots.release(slot)

@@ -7,7 +7,8 @@ import pytest
 
 from conftest import make_batch, reduced
 from repro.models import get_model
-from repro.serving.kvcache import CacheLayout, SlotManager
+from repro.serving.kvcache import CacheLayout
+from repro.serving.workers import AttentionWorker, ClusterSlotView
 
 
 @pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma2_2b", "mixtral_8x7b",
@@ -80,13 +81,24 @@ def test_segment_nbytes_matches_appendix_c():
     assert attn_bytes - pos_bytes == cfg.num_layers * per_layer
 
 
-def test_slot_manager_partitions_and_failure():
-    sm = SlotManager(8, 2)
+def test_slot_partitions_and_failure():
+    from repro.core.checkpoint import CheckpointStore
+    import jax.numpy as _jnp
+    from repro.core.refe import RouteState
+    store = CheckpointStore()
+    aws = [AttentionWorker(a, a * 4, (a + 1) * 4, store) for a in range(2)]
+    sm = ClusterSlotView(aws, 8)
     s0 = sm.alloc(0)
     s1 = sm.alloc(1)
     assert sm.aw_of(s0) == 0 and sm.aw_of(s1) == 1
-    sm.drop_aw(0)
+    rs = RouteState(candidates=_jnp.zeros((0, 2), _jnp.int32),
+                    ew_health=_jnp.ones((2,), bool),
+                    aw_health=_jnp.ones((2,), bool),
+                    shadow_assignment=_jnp.zeros((0,), _jnp.int32))
+    rs = aws[0].fail(rs)
+    assert not bool(rs.aw_health[0])
     assert sm.free_count(0) == 0
     assert sm.free_count(1) == 3
-    sm.restore_aw(0, in_use=set())
+    rs = aws[0].provision(rs, in_use=set())
+    assert bool(rs.aw_health[0])
     assert sm.free_count(0) == 4

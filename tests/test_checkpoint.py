@@ -3,7 +3,9 @@ sequence numbers, out-of-order tolerance, commit-watermark prefix rule,
 per-request restoration."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis (CI)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.checkpoint import CheckpointStore, KVCheckpointer
 

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis (CI)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ert as ert_lib
 from repro.core import refe

@@ -1,0 +1,146 @@
+"""Gateway unit tests: FIFO queue semantics, retry-not-drop, queueing-delay
+metrics, and the pluggable placement policies — plus an engine-level check
+that two policies produce different (but both correct) placements."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.checkpoint import CheckpointStore
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.gateway import (Gateway, LeastLoadedPolicy,
+                                   RoundRobinPolicy, SessionAffinityPolicy)
+from repro.serving.workers import AttentionWorker
+
+PROMPT = np.arange(1, 7, dtype=np.int32)
+
+
+def make_pool(num_aw=2, per_aw=2):
+    store = CheckpointStore()
+    return [AttentionWorker(a, a * per_aw, (a + 1) * per_aw, store)
+            for a in range(num_aw)]
+
+
+def test_fifo_admission_and_retry_not_drop():
+    aws = make_pool(num_aw=2, per_aw=2)   # 4 slots total
+    gw = Gateway(aws)
+    for i in range(6):
+        gw.enqueue(f"r{i}", PROMPT, 4, now=float(i))
+    admitted = gw.admit(now=10.0)
+    assert [q.rid for q, _, _ in admitted] == ["r0", "r1", "r2", "r3"]
+    # the two overflow requests stay queued in order, not dropped
+    assert [q.rid for q in gw.queue] == ["r4", "r5"]
+    assert gw.queue[0].retries == 1
+    assert gw.stats.blocked_ticks == 1
+    # queue delay is measured on the virtual clock
+    assert gw.stats.queue_delay["r0"] == 10.0
+    assert gw.stats.queue_delay["r3"] == 7.0
+    # capacity frees -> FIFO head admitted on retry
+    aws[0].slots.release(0)
+    admitted = gw.admit(now=12.0)
+    assert [q.rid for q, _, _ in admitted] == ["r4"]
+    assert gw.stats.queue_delay["r4"] == 8.0
+
+
+def test_recovery_entries_jump_the_queue():
+    aws = make_pool()
+    gw = Gateway(aws)
+    gw.enqueue("fresh", PROMPT, 4, now=5.0)
+    from repro.serving.gateway import QueuedRequest
+    gw.requeue_recovery([QueuedRequest("old-a", PROMPT, 4, t_enqueue=1.0),
+                         QueuedRequest("old-b", PROMPT, 4, t_enqueue=2.0)])
+    assert [q.rid for q in gw.queue] == ["old-a", "old-b", "fresh"]
+    assert all(q.recovery for q in list(gw.queue)[:2])
+    assert gw.stats.requeued == 2
+
+
+def test_least_loaded_skips_dead_and_full():
+    aws = make_pool(num_aw=3, per_aw=2)
+    pol = LeastLoadedPolicy()
+    aws[1].fail(route_state=_dummy_rs(3))
+    aws[0].slots.alloc()
+    assert pol(aws, "x") == 2          # most free among alive
+    aws[2].slots.alloc()
+    aws[2].slots.alloc()
+    assert pol(aws, "x") == 0          # AW2 full, AW1 dead
+    aws[0].slots.alloc()
+    assert pol(aws, "x") is None
+
+
+def test_round_robin_cycles_over_healthy():
+    aws = make_pool(num_aw=3, per_aw=4)
+    pol = RoundRobinPolicy()
+    assert [pol(aws, "x") for _ in range(4)] == [0, 1, 2, 0]
+    aws[1].fail(route_state=_dummy_rs(3))
+    assert [pol(aws, "x") for _ in range(3)] == [2, 0, 2]
+
+
+def test_session_affinity_colocates_and_falls_back():
+    aws = make_pool(num_aw=2, per_aw=2)
+    pol = SessionAffinityPolicy()
+    rids = ["sess7-0", "sess7-1", "sess7-2"]
+    homes = [pol(aws, r) for r in rids]
+    assert len(set(homes)) == 1        # same session -> same AW
+    home = homes[0]
+    aws[home].slots.alloc()
+    aws[home].slots.alloc()            # home full -> least-loaded fallback
+    assert pol(aws, rids[0]) == 1 - home
+
+
+def _dummy_rs(num_aw):
+    from repro.core.refe import RouteState
+    import jax.numpy as jnp
+    return RouteState(candidates=jnp.zeros((0, 2), jnp.int32),
+                      ew_health=jnp.ones((2,), bool),
+                      aw_health=jnp.ones((num_aw,), bool),
+                      shadow_assignment=jnp.zeros((0,), jnp.int32))
+
+
+def test_fail_aw_without_checkpoint_does_not_strand_requests():
+    """checkpoint=False means no restoration is possible: requests on the
+    failed AW must keep decoding (simulated data loss) rather than being
+    paused forever — generate() must terminate."""
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    ecfg = EngineConfig(max_batch=4, max_seq=48, num_aw=2, num_ew=2,
+                        checkpoint=False)
+    eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(4))
+    assert eng.submit("r", PROMPT, 8)
+    aw = eng.requests["r"].aw
+    for _ in range(2):
+        eng.step()
+    eng.fail_aw(aw)
+    assert not eng.requests["r"].paused
+    assert eng.recover_aw_requests() == []   # nothing to restore
+    while not eng.requests["r"].done:        # must terminate
+        eng.step()
+    assert len(eng.requests["r"].tokens) == 8
+
+
+def test_policies_differ_but_both_decode_correctly():
+    """Acceptance: two Gateway policies yield different placements; decode
+    is correct (and identical) under both — placement is pure control
+    plane."""
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+
+    def build(policy):
+        ecfg = EngineConfig(max_batch=8, max_seq=48, num_aw=2, num_ew=2,
+                            placement=policy)
+        return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(3))
+
+    outs = {}
+    placements = {}
+    for policy in ("least_loaded", "session_affinity"):
+        eng = build(policy)
+        for i in range(3):
+            assert eng.submit(f"sess1-{i}", PROMPT + i, 6)
+        placements[policy] = tuple(eng.requests[f"sess1-{i}"].aw
+                                   for i in range(3))
+        while eng.active_requests():
+            eng.step()
+        outs[policy] = {r: eng.requests[r].tokens for r in eng.requests}
+    # least-loaded spreads; session affinity pins the session to one AW
+    assert len(set(placements["session_affinity"])) == 1
+    assert len(set(placements["least_loaded"])) == 2
+    assert placements["least_loaded"] != placements["session_affinity"]
+    # same tokens either way: placement never changes results
+    assert outs["least_loaded"] == outs["session_affinity"]
