@@ -6,9 +6,13 @@ delta.
 
 Also reports the serving-plane metrics of the layered stack — queueing
 delay p50/p99 at the Gateway and prefill-batch occupancy from the
-ContinuousBatchScheduler — and dumps everything as JSON
+ContinuousBatchScheduler — plus the chunked-prefill plane's TBT isolation
+under a long-prompt burst (chunked vs whole-prompt prefill on the same
+workload and virtual clock) — and dumps everything as JSON
 (benchmarks/results/steady_state.json) so the perf trajectory accumulates
-across PRs."""
+across PRs.
+
+``BENCH_SMOKE=1`` shrinks every section for the CI smoke step."""
 from __future__ import annotations
 
 import dataclasses
@@ -23,6 +27,8 @@ from repro.serving.scheduler import run_serving
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
                             "steady_state.json")
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 
 
 def _workload(kind, n=6, out=10):
@@ -43,7 +49,7 @@ def _measure(tarragon: bool, checkpoint: bool, kind: str):
     for _ in range(3):  # warmup (compile)
         eng.step()
     ts = []
-    for _ in range(15):
+    for _ in range(4 if SMOKE else 15):
         t0 = time.monotonic()
         eng.step()
         ts.append(time.monotonic() - t0)
@@ -60,7 +66,8 @@ def _measure_serving(kind: str):
     eng = reduced_engine(seed=0, max_batch=8)
     wl = make_workload(kind, rate_rps=40.0, duration=0.5, seed=4)
     wl = [dataclasses.replace(w, prompt_len=min(w.prompt_len, 14),
-                              max_new_tokens=8) for w in wl][:16]
+                              max_new_tokens=8) for w in wl][:8 if SMOKE
+                                                            else 16]
     m = run_serving(eng, wl, duration=400.0, step_time=0.02)
     qd = m.queue_delay_values()
     return {
@@ -76,9 +83,50 @@ def _measure_serving(kind: str):
     }
 
 
+def _measure_chunked_prefill():
+    """Long-prompt burst: identical workload and virtual clock, whole-prompt
+    prefill vs the chunked plane. Prefill work is charged to the clock per
+    real token, so a whole-prompt prefill of a long prompt is the TBT stall
+    it would be on hardware; the chunked plane bounds it at
+    chunk_token_budget tokens per tick."""
+    n_req = 8 if SMOKE else 14
+    max_new = 6 if SMOKE else 10
+    wl = make_workload("long_prompt_burst", rate_rps=30.0, duration=1.0,
+                       seed=5, max_prompt=72, max_new=max_new)
+    wl = [dataclasses.replace(w, max_new_tokens=max_new)
+          for w in wl][:n_req]
+    out = {"workload": "long_prompt_burst", "requests": len(wl)}
+    for label, budget in (("whole", 0), ("chunked", 16)):
+        eng = reduced_engine(seed=0, max_batch=8, max_seq=96,
+                             chunk_token_budget=budget,
+                             prefill_token_cap=8 * budget)
+        m = run_serving(eng, wl, duration=600.0, step_time=0.02,
+                        prefill_token_time=0.002)
+        tbt = m.tbt_values()
+        out[label] = {
+            "finished": len(m.finished),
+            "tbt_p50_s": float(np.percentile(tbt, 50)) if tbt.size else 0.0,
+            "tbt_p99_s": float(np.percentile(tbt, 99)) if tbt.size else 0.0,
+            "max_stall_s": m.max_stall(),
+            "ttft_p50_s": float(np.median(list(m.ttft.values())))
+            if m.ttft else 0.0,
+            "prefill": m.prefill,
+        }
+    return out
+
+
 def run():
     rows = []
-    payload = {"bench": "steady_state", "serving": [], "decode_path": []}
+    payload = {"bench": "steady_state", "serving": [], "decode_path": [],
+               "chunked_prefill": None}
+    c = _measure_chunked_prefill()
+    payload["chunked_prefill"] = c
+    rows.append(Row(
+        "serving/long_prompt_burst/tbt_p99/chunked",
+        c["chunked"]["tbt_p99_s"] * 1e6,
+        f"whole={c['whole']['tbt_p99_s']*1e3:.1f}ms "
+        f"max_stall chunked={c['chunked']['max_stall_s']*1e3:.1f}ms "
+        f"whole={c['whole']['max_stall_s']*1e3:.1f}ms"))
     for kind in ("random", "sharegpt"):
         s = _measure_serving(kind)
         payload["serving"].append(s)

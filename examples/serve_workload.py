@@ -20,32 +20,40 @@ from repro.serving.scheduler import FailurePlan, run_serving
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("random", "sharegpt"),
+    ap.add_argument("--workload",
+                    choices=("random", "sharegpt", "long_prompt_burst"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
     ap.add_argument("--fail-at", type=float, default=0.5)
     ap.add_argument("--fail-kind", choices=("ew", "aw", "none"),
                     default="ew")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="chunked-prefill token budget per tick "
+                         "(0 = whole-prompt prefill)")
     args = ap.parse_args()
 
     cfg = get_config("mixtral_8x7b").reduced()
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
-    ecfg = EngineConfig(max_batch=8, max_seq=96, num_aw=2, num_ew=2)
+    ecfg = EngineConfig(max_batch=8, max_seq=96, num_aw=2, num_ew=2,
+                        chunk_token_budget=args.chunk_budget,
+                        prefill_token_cap=8 * args.chunk_budget)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0)
 
+    max_prompt = 64 if args.workload == "long_prompt_burst" else 16
     wl = make_workload(args.workload, args.rps, args.duration, seed=1,
-                       max_prompt=16, max_new=24)
-    wl = [dataclasses.replace(w, prompt_len=min(w.prompt_len, 16),
+                       max_prompt=max_prompt, max_new=24)
+    wl = [dataclasses.replace(w, prompt_len=min(w.prompt_len, max_prompt),
                               max_new_tokens=min(w.max_new_tokens, 24))
           for w in wl]
     failures = [] if args.fail_kind == "none" else \
         [FailurePlan(args.fail_at, args.fail_kind, 0)]
 
     m = run_serving(eng, wl, duration=600.0, orchestrator=orch,
-                    failures=failures, step_time=0.05)
+                    failures=failures, step_time=0.05,
+                    prefill_token_time=0.002)
 
     tbt = m.tbt_values()
     print(f"requests: {len(wl)} submitted, {len(m.finished)} finished")
@@ -67,6 +75,11 @@ def main():
         print(f"prefill: {m.prefill['calls']} batched calls for "
               f"{m.prefill['requests']} requests "
               f"(occupancy={m.prefill['occupancy']:.2f})")
+        ch = m.prefill.get("chunked")
+        if ch:
+            print(f"chunked prefill: {ch['chunks']} chunks in "
+                  f"{ch['calls']} calls for {ch['requests']} streams "
+                  f"(shapes={ch['shapes']}, resumed={ch['resumed']})")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}s] {e.kind} {e.worker} {e.detail}")
 

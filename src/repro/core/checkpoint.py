@@ -128,13 +128,26 @@ class CheckpointStore:
         idx, {token_idx: segment}).
 
         Only segments within the committed prefix are returned — segments
-        beyond a sequence gap are unusable for recovery (§6.1)."""
+        beyond a sequence gap are unusable for recovery (§6.1).
+
+        Restoration also truncates the log to the commit record: WRs past
+        the watermark either died with the failed AW (dropped pending) or
+        describe state the restored request is about to recompute, so the
+        new owner's stream restarts at ``committed_seq + 1``. Without this
+        a dropped WR's sequence number would leave a permanent gap and no
+        later write could ever commit."""
         log = self._logs[request_id]
         c = log.committed_token
         committed_tokens = {log.seq_to_token[s]
                             for s in range(log.committed_seq + 1)}
         segs = {t: log.segments[t] for t in sorted(committed_tokens)
                 if t in log.segments}
+        log.seq_to_token = {s: t for s, t in log.seq_to_token.items()
+                            if s <= log.committed_seq}
+        log.segments = dict(segs)
+        log.token_values = {t: v for t, v in log.token_values.items()
+                            if t in committed_tokens}
+        log.next_seq = log.committed_seq + 1
         self.stats.restores += 1
         self.stats.bytes_restored += sum(_seg_nbytes(s)
                                          for s in segs.values())
@@ -176,6 +189,30 @@ class KVCheckpointer:
                               token_value))
         if len(self._pending) > self.reorder_window:
             self.flush()
+
+    def checkpoint_range(self, request_id: str, start: int,
+                         seg_stack: List[np.ndarray],
+                         token_values: List[int]):
+        """Bulk chunk-boundary path (§6.1 extended to prefill): stream the
+        ``len(token_values)`` contiguous token segments a prefill chunk
+        just produced, starting at token index ``start``. ``seg_stack`` is
+        one array per cache leaf with a leading per-token axis (the output
+        of CacheLayout.make_slot_range_extractor). Each token still gets
+        its own sequence number, so the store's contiguous-prefix commit
+        watermark applies unchanged; delivery rides the same reorder/flush
+        policy as decode-time segments."""
+        for i, tv in enumerate(token_values):
+            self.checkpoint_token(request_id, start + i,
+                                  [leaf[i] for leaf in seg_stack],
+                                  token_value=int(tv))
+
+    def drop_pending(self) -> int:
+        """Crash path: WRs not yet handed to the store die with the AW.
+        Returns the number of segments lost (they stay uncommitted, so
+        recovery resumes from the last committed token)."""
+        n = len(self._pending)
+        self._pending = []
+        return n
 
     def flush(self):
         pending = self._pending

@@ -91,12 +91,17 @@ def intra_slot_positions(slot_idx, valid, num_slots: int):
 def route(x, router_logits, route_state: RouteState,
           placement: ert_lib.ExpertPlacement, *, top_k: int,
           capacity_factor: float, capacity: Optional[int] = None,
-          batch: int = 0):
+          batch: int = 0, token_mask=None):
     """Full REFE routing decision for a flat token batch.
 
     x: [T, D]; router_logits: [T, E]. Returns routing metadata (slot ids,
     intra-slot positions, gate weights, aux loss); ``expert_io`` turns it
     into the AW->EW datapath.
+
+    ``token_mask`` ([T] bool, optional) marks which tokens are real work:
+    pad tokens (prefill length/row padding, inactive chunk rows) get
+    ``False`` and are excluded from intra-slot ranking, so they never
+    compete with real tokens for per-expert capacity cells.
     """
     t, e = router_logits.shape
     slot_owner = jnp.asarray(placement.slot_owner())
@@ -113,9 +118,12 @@ def route(x, router_logits, route_state: RouteState,
 
     slot_idx = active_slot[topk_idx]                          # [T, K]
 
-    # EW-side self-healing: drop tokens from failed AWs
+    # EW-side self-healing: drop tokens from failed AWs; pad-free dispatch:
+    # drop pad tokens before they claim capacity ranks
     owner = token_aw_owner(t, route_state.aw_health.shape[0], batch=batch)
     token_valid = route_state.aw_health[owner]
+    if token_mask is not None:
+        token_valid = token_valid & token_mask
 
     grouped = t > ONEHOT_MAX_TOKENS
     if grouped:

@@ -5,6 +5,10 @@
   the dataset itself is not redistributable offline).
 * ``random``    — the paper's synthetic decode-heavy workload: fixed
   10-token prompts, 128 generated tokens.
+* ``long_prompt_burst`` — the chunked-prefill stress case: bimodal prompt
+  lengths (mostly short chat turns, a long-document minority) arriving in
+  Poisson *bursts*, so several long prompts can land on the same tick and
+  stall co-resident decodes unless prefill is budgeted.
 * Arrivals follow a Poisson process of configurable rate.
 
 Also provides a token-stream iterator for the training example (synthetic
@@ -38,11 +42,26 @@ def poisson_arrivals(rate_rps: float, duration: float,
     return np.sort(rng.uniform(0.0, duration, size=n))
 
 
+def burst_arrivals(rate_rps: float, duration: float,
+                   rng: np.random.Generator, burst_size: int = 3,
+                   burst_spread: float = 0.02) -> np.ndarray:
+    """Poisson process over burst *centers* (rate preserved overall): each
+    center spawns ``burst_size`` arrivals jittered by ``burst_spread``."""
+    centers = poisson_arrivals(rate_rps / burst_size, duration, rng)
+    ts = (centers[:, None] +
+          rng.uniform(0.0, burst_spread, size=(len(centers), burst_size)))
+    return np.sort(np.clip(ts.reshape(-1), 0.0, duration))
+
+
 def make_workload(kind: str, rate_rps: float, duration: float,
                   seed: int = 0, max_prompt: int = 1024,
-                  max_new: int = 256) -> List[Request]:
+                  max_new: int = 256, long_frac: float = 0.3) -> \
+        List[Request]:
     rng = np.random.default_rng(seed)
-    arrivals = poisson_arrivals(rate_rps, duration, rng)
+    if kind == "long_prompt_burst":
+        arrivals = burst_arrivals(rate_rps, duration, rng)
+    else:
+        arrivals = poisson_arrivals(rate_rps, duration, rng)
     reqs = []
     for i, t in enumerate(arrivals):
         if kind == "random":
@@ -51,6 +70,14 @@ def make_workload(kind: str, rate_rps: float, duration: float,
             # log-normal prompt (~median 160 tok) and completion (~median 90)
             p_len = int(np.clip(rng.lognormal(5.0, 1.0), 4, max_prompt))
             n_new = int(np.clip(rng.lognormal(4.5, 0.8), 4, max_new))
+        elif kind == "long_prompt_burst":
+            # bimodal: short chat turns vs long documents near max_prompt
+            if rng.uniform() < long_frac:
+                p_len = int(rng.integers(max(5, max_prompt // 2),
+                                         max_prompt + 1))
+            else:
+                p_len = int(rng.integers(4, max(5, max_prompt // 8)))
+            n_new = int(np.clip(rng.lognormal(3.0, 0.6), 4, max_new))
         else:
             raise ValueError(kind)
         reqs.append(Request(f"{kind}-{i}", float(t), p_len, n_new,

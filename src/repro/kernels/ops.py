@@ -79,9 +79,14 @@ def decode_attention(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
 
 
 def full_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
-                   window: int = 0, softcap: float = 0.0):
+                   window: int = 0, softcap: float = 0.0,
+                   block_k: int = 0):
     """Full-sequence (train/prefill) attention: Pallas flash kernel on TPU
-    (scores stay in VMEM), blockwise-jnp elsewhere."""
+    (scores stay in VMEM), blockwise-jnp elsewhere. ``block_k`` pins the
+    KV block size of the online softmax (0 = auto): prefill/chunk callers
+    use it to keep the accumulation order — and hence the float result —
+    independent of the padded KV extent. The Pallas kernel has its own
+    fixed tiling (already extent-independent)."""
     if use_pallas():
         from repro.kernels.flash_attention import flash_attention
         return flash_attention(q, k, v, q_pos, k_pos, causal=causal,
@@ -89,7 +94,8 @@ def full_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
                                interpret=_interpret())
     from repro.models.attention import blockwise_attention
     return blockwise_attention(q, k, v, q_pos, k_pos, window=window,
-                               softcap=softcap, causal=causal)
+                               softcap=softcap, causal=causal,
+                               block_k=block_k)
 
 
 # --------------------------------------------------------------------------

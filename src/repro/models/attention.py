@@ -20,6 +20,14 @@ from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, apply_rope
 
 NEG_INF = -1e30
 
+# Cached (prefill/chunk) attention pins the KV block size of the online
+# softmax: a fully-masked KV block is an exact no-op (m/l/acc unchanged),
+# so with a common block size the accumulation order — and therefore the
+# float result — is identical whether a token's prefix is scanned inside a
+# bucket-padded whole-prompt prefill or inside a full-cache chunk call.
+# This is what makes chunked prefill bit-identical to whole-prompt prefill.
+PREFILL_BLOCK_K = 16
+
 
 # --------------------------------------------------------------------------
 # params
@@ -179,14 +187,41 @@ def cache_write_prefill(cache, k, v, positions):
     return {"k": ck, "v": cv, "pos": cp}
 
 
+def cache_write_chunk(cache, k, v, positions):
+    """Write a prefill chunk's K/V [B,C,...] at absolute ``positions``
+    [B,C] into an existing cache. Entries with position -1 (chunk padding
+    or rows not participating in this chunk call) are left untouched, so
+    the same call can extend some rows' prompts while other rows hold live
+    decode state."""
+    sc = cache["k"].shape[1]
+    valid = positions >= 0
+    # invalid entries scatter out of bounds and are dropped, so they can
+    # never collide with a real write targeting the same slot
+    slots = jnp.where(valid, positions % sc, sc)
+    bidx = jnp.arange(k.shape[0])[:, None]
+    ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype),
+                                        mode="drop")
+    cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype),
+                                        mode="drop")
+    cp = cache["pos"].at[bidx, slots].set(positions.astype(jnp.int32),
+                                          mode="drop")
+    return {"k": ck, "v": cv, "pos": cp}
+
+
 def cache_write_token(cache, k1, v1, pos, window: int = 0):
-    """Write one token's K/V [B,1,...] at absolute position pos [B]."""
+    """Write one token's K/V [B,1,...] at absolute position pos [B].
+    Rows with pos < 0 (slots not decoding this step — empty, or still
+    mid-chunked-prefill) scatter out of bounds and are dropped, so a
+    shared decode step never scribbles into a slot it does not own."""
     sc = cache["k"].shape[1]
     slot = (pos % sc) if window else jnp.minimum(pos, sc - 1)
+    slot = jnp.where(pos >= 0, slot, sc)
     bidx = jnp.arange(k1.shape[0])
-    ck = cache["k"].at[bidx, slot].set(k1[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, slot].set(v1[:, 0].astype(cache["v"].dtype))
-    cp = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    ck = cache["k"].at[bidx, slot].set(k1[:, 0].astype(cache["k"].dtype),
+                                       mode="drop")
+    cv = cache["v"].at[bidx, slot].set(v1[:, 0].astype(cache["v"].dtype),
+                                       mode="drop")
+    cp = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32), mode="drop")
     return {"k": ck, "v": cv, "pos": cp}
 
 
@@ -196,19 +231,46 @@ def cache_write_token(cache, k1, v1, pos, window: int = 0):
 
 def attn_full(cfg: ModelConfig, params, x, positions, *, window: int = 0,
               causal: bool = True, cache: Optional[dict] = None):
-    """Train / prefill path. Returns (out [B,S,D], updated cache or None)."""
+    """Train / prefill path. Returns (out [B,S,D], updated cache or None).
+
+    Prefill (cache is not None) pins the KV block size so its accumulation
+    order matches the chunked path exactly; train keeps the auto-sized
+    blocks."""
     q = _project_q(cfg, params, x)
     k, v = _project_kv(cfg, params, x)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     from repro.kernels import ops as kops
+    bk = _pick_block(k.shape[1], PREFILL_BLOCK_K) if cache is not None else 0
     out = kops.full_attention(
         q, k, v, positions, positions, window=window,
-        softcap=cfg.attn_softcap, causal=causal)
+        softcap=cfg.attn_softcap, causal=causal, block_k=bk)
     out = out.reshape(*x.shape[:2], -1) @ params["wo"]
     new_cache = None
     if cache is not None:
         new_cache = cache_write_prefill(cache, k, v, positions)
+    return out, new_cache
+
+
+def attn_chunk(cfg: ModelConfig, params, x, cache, positions, *,
+               window: int = 0):
+    """Chunked-prefill path: x [B,C,D] extends each row's sequence at
+    absolute ``positions`` [B,C] (-1 = chunk padding / row not in this
+    chunk). The chunk's K/V are written into the cache first, then the
+    chunk queries attend over the whole updated cache — causal masking by
+    stored position covers both the committed prefix and the chunk itself.
+    Returns (out [B,C,D], new_cache)."""
+    q = _project_q(cfg, params, x)
+    k, v = _project_kv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = cache_write_chunk(cache, k, v, positions)
+    from repro.kernels import ops as kops
+    out = kops.full_attention(
+        q, new_cache["k"], new_cache["v"], positions, new_cache["pos"],
+        window=window, softcap=cfg.attn_softcap, causal=True,
+        block_k=_pick_block(new_cache["k"].shape[1], PREFILL_BLOCK_K))
+    out = out.reshape(*x.shape[:2], -1) @ params["wo"]
     return out, new_cache
 
 

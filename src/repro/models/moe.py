@@ -61,11 +61,13 @@ def moe_init(key, cfg: ModelConfig, placement: ert_lib.ExpertPlacement):
 
 def moe_apply(cfg: ModelConfig, params, x, route_state: refe.RouteState,
               placement: ert_lib.ExpertPlacement,
-              capacity: Optional[int] = None):
+              capacity: Optional[int] = None, token_mask=None):
     """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
 
     The flattened [T, D] token batch is what flows over the AW->EW datapath;
-    B is data-parallel over AWs, the slot dim over EWs.
+    B is data-parallel over AWs, the slot dim over EWs. ``token_mask``
+    ([B, S] bool, optional) flags real tokens; pads are excluded from
+    expert-capacity competition (pad-free dispatch).
     """
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
@@ -74,7 +76,9 @@ def moe_apply(cfg: ModelConfig, params, x, route_state: refe.RouteState,
     routing = refe.route(
         xt, logits, route_state, placement,
         top_k=cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor,
-        capacity=capacity, batch=b)
+        capacity=capacity, batch=b,
+        token_mask=None if token_mask is None
+        else token_mask.reshape(b * s))
 
     bank = params["experts"]  # stored pre-padded to primary_slots
     if placement.num_shadow_slots:

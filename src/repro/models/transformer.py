@@ -34,6 +34,10 @@ class ModelApi(NamedTuple):
     prefill: Callable[..., Any]         # -> (last_logits, cache)
     decode: Callable[..., Any]          # -> (logits, cache)
     init_route_state: Callable[..., refe.RouteState]
+    # chunked prefill: (params, tokens [B,C], positions [B,C], caches, rs)
+    # -> caches. None for families without a resumable prefill path
+    # (recurrent state / ring buffers / enc-dec).
+    prefill_chunk: Optional[Callable[..., Any]] = None
 
 
 # --------------------------------------------------------------------------
@@ -84,12 +88,15 @@ def _layer_init(key, cfg: ModelConfig, use_moe: bool, placement):
 
 def _layer_apply(cfg: ModelConfig, p, x, *, window: int, mode: str,
                  positions=None, pos=None, cache=None, route_state=None,
-                 placement=None, capacity=None):
-    """mode: 'train' | 'prefill' | 'decode'."""
+                 placement=None, capacity=None, token_mask=None):
+    """mode: 'train' | 'prefill' | 'chunk' | 'decode'."""
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if mode == "decode":
         a, new_cache = attn.attn_decode(cfg, p["attn"], h, cache, pos,
                                         window=window)
+    elif mode == "chunk":
+        a, new_cache = attn.attn_chunk(cfg, p["attn"], h, cache, positions,
+                                       window=window)
     else:
         a, new_cache = attn.attn_full(cfg, p["attn"], h, positions,
                                       window=window, cache=cache)
@@ -98,7 +105,7 @@ def _layer_apply(cfg: ModelConfig, p, x, *, window: int, mode: str,
     aux = jnp.zeros((), jnp.float32)
     if "moe" in p:
         f, aux = moe_mod.moe_apply(cfg, p["moe"], h, route_state, placement,
-                                   capacity=capacity)
+                                   capacity=capacity, token_mask=token_mask)
     else:
         f = mlp(p["mlp"], h, cfg.act)
     return x + f, new_cache, aux
@@ -162,7 +169,7 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
         return params["embed"].astype(dtype)[tokens]
 
     def _run_stack(params, x, mode, positions=None, pos=None, caches=None,
-                   route_state=None, capacity=None):
+                   route_state=None, capacity=None, token_mask=None):
         aux_total = jnp.zeros((), jnp.float32)
         new_caches = {} if caches is not None else None
         for i in range(n_first):
@@ -171,7 +178,7 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                 cfg, params[f"dense{i}"], x, window=windows[0], mode=mode,
                 positions=positions, pos=pos, cache=c,
                 route_state=route_state, placement=placement,
-                capacity=capacity)
+                capacity=capacity, token_mask=token_mask)
             aux_total += aux
             if caches is not None:
                 new_caches[f"dense{i}"] = nc
@@ -186,7 +193,7 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                     cfg, unit_params[i], h, window=windows[i], mode=mode,
                     positions=positions, pos=pos, cache=c,
                     route_state=route_state, placement=placement,
-                    capacity=capacity)
+                    capacity=capacity, token_mask=token_mask)
                 auxc += aux
                 ncs.append(nc)
             ncs = tuple(ncs) if caches is not None else None
@@ -214,15 +221,34 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                                route_state=route_state)
         return unembed(cfg, params, x), aux
 
-    def prefill(params, batch, route_state, max_seq: int):
+    def prefill(params, batch, route_state, max_seq: int, capacity=None):
+        """batch may carry a ``mask`` ([B, S] bool) flagging real tokens;
+        pads then never compete for expert capacity (pad-free dispatch)."""
         tokens = batch["tokens"]
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         caches = init_cache(b, max_seq)
         x = _embed(params, tokens)
         x, caches, _ = _run_stack(params, x, "prefill", positions=positions,
-                                  caches=caches, route_state=route_state)
+                                  caches=caches, route_state=route_state,
+                                  capacity=capacity,
+                                  token_mask=batch.get("mask"))
         return unembed(cfg, params, x[:, -1]), caches
+
+    def prefill_chunk(params, tokens, positions, caches, route_state,
+                      capacity=None):
+        """One budgeted prefill chunk over the shared slot-partitioned
+        cache. tokens: [B, C] int32; positions: [B, C] absolute prompt
+        positions (-1 = chunk padding or a row not in this chunk call —
+        such rows, including live decode slots, are untouched). Returns
+        the updated caches; logits are not needed mid-prompt (the first
+        generated token rides the decode step, like the padded scheme)."""
+        x = _embed(params, tokens)
+        mask = positions >= 0
+        x, caches, _ = _run_stack(params, x, "chunk", positions=positions,
+                                  caches=caches, route_state=route_state,
+                                  capacity=capacity, token_mask=mask)
+        return caches
 
     def decode(params, tokens, pos, caches, route_state, capacity=None):
         """tokens: [B] int32; pos: [B] absolute positions."""
@@ -242,4 +268,5 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
         return refe.RouteState.healthy(placement, num_aw)
 
     return ModelApi(cfg, placement, num_aw, num_ew, init_params, init_cache,
-                    forward_train, prefill, decode, init_route_state)
+                    forward_train, prefill, decode, init_route_state,
+                    prefill_chunk=prefill_chunk)

@@ -28,14 +28,19 @@ Batch rows are padded up to the next power of two (row 0 repeated) so jit
 compilations are keyed on O(log max_batch) row counts per bucket length
 rather than every batch size ever seen.
 
-Invariant note: "batch composition never changes results" holds when MoE
-expert capacity is ample (capacity >= tokens any expert actually
-receives), because the capacity-based dispatch gives every kept token its
-own (slot, rank) cell. Under a *tight* capacity factor, co-batched tokens
-— including pads — compete for per-expert ranks and can evict each other,
-exactly as co-batched decode slots always could; the serving configs used
-for exactness claims run with generous capacity (cf=4.0), matching the
-failover tests. See ROADMAP "Open items" for pad-free dispatch.
+When the chunked-prefill plane is enabled (``chunk_token_budget`` > 0,
+serving/chunked.py), fresh paddable admissions bypass the whole-prompt
+path entirely: their prompts stream through budgeted chunks interleaved
+with decode, and recovery of a request preempted *mid-prefill* resumes
+the stream from its committed cursor instead of re-prefilling.
+
+Invariant note: pad tokens (length padding and repeated-row padding) are
+flagged by a validity mask threaded through ``refe.route``, so they never
+compete with real tokens for per-expert capacity ranks, and the prefill
+capacity is derived from the REAL token count — a request's routing is
+therefore independent of how much padding its batch carries, at any
+capacity factor. Co-batched *real* tokens still share capacity cells under
+a tight factor, exactly as co-batched decode slots always could.
 """
 from __future__ import annotations
 
@@ -101,6 +106,11 @@ class ContinuousBatchScheduler:
         for q, aw, slot in admitted:
             if q.recovery:
                 self._install_recovery(q, aw, slot, now)
+            elif eng.chunked is not None and eng.prefill_paddable and \
+                    len(q.prompt) >= 2:
+                # chunked-prefill plane: the prompt streams through
+                # budgeted chunks on subsequent ticks
+                eng.chunked.start(q, aw, slot, now)
             else:
                 fresh.append((q, aw, slot))
             installed.append(q.rid)
@@ -146,6 +156,16 @@ class ContinuousBatchScheduler:
             toks[i] = toks[0]
 
         batch = {"tokens": jnp.asarray(toks)}
+        capacity = None
+        if eng.prefill_masked:
+            # pad-free dispatch: flag real tokens (length pads AND repeated
+            # row pads are excluded from expert-capacity competition) and
+            # size capacity from the real token count
+            mask = np.zeros((rows, length), bool)
+            for i, n_pre in enumerate(pre_lens):
+                mask[i, :n_pre] = True
+            batch["mask"] = jnp.asarray(mask)
+            capacity = eng.prefill_capacity(sum(pre_lens))
         if eng.cfg.is_encdec:
             frames = []
             for q, _, _ in entries:
@@ -160,8 +180,13 @@ class ContinuousBatchScheduler:
         # must not mask its tokens; EW health still applies (shadow reroute)
         rs_pre = eng.route_state._replace(
             aw_health=jnp.ones_like(eng.route_state.aw_health))
-        last_logits, req_cache = eng._prefill(
-            eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq)
+        if eng.prefill_masked:
+            last_logits, req_cache = eng._prefill(
+                eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq,
+                capacity=capacity)
+        else:
+            last_logits, req_cache = eng._prefill(
+                eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq)
         last_logits = np.asarray(last_logits)
 
         self.stats.calls += 1
@@ -221,7 +246,10 @@ class ContinuousBatchScheduler:
     def _install_recovery(self, q: QueuedRequest, aw: int, slot: int,
                           now: float):
         """§6.2: inject the committed KV prefix into the new slot and rewind
-        the request to the committed token."""
+        the request to the committed token. A request preempted mid-prefill
+        re-enters the chunked plane with its cursor at the commit watermark
+        — only the uncommitted tail of the prompt is recomputed, never the
+        whole prompt."""
         eng = self.engine
         r = eng.requests.get(q.rid)
         if r is None:              # released while waiting for recovery
@@ -233,6 +261,23 @@ class ContinuousBatchScheduler:
             cache = eng.layout.write_token_segment(cache, slot, t, seg)
         eng.cache = cache
 
+        r.slot = slot
+        r._aw = aw
+        r.paused = False
+        r.queued_for_recovery = False
+        r.t_admit = now
+        eng.store.reassign(q.rid, aw)
+
+        if r.prefilling:
+            # mid-prefill preemption: resume the chunk stream after the
+            # restored prefix (cursor = committed + 1; committed may be -1
+            # when the failure hit before any chunk was committed)
+            assert eng.chunked is not None
+            eng.chunked.stats.restored_tokens[q.rid] = \
+                eng.chunked.stats.restored_tokens.get(q.rid, 0) + len(segs)
+            eng.chunked.resume(r, aw, slot, committed + 1, now)
+            return
+
         n_prompt = len(r.prompt)
         n_gen = max(0, committed + 2 - n_prompt)
         r.tokens = r.tokens[:n_gen]
@@ -243,24 +288,24 @@ class ContinuousBatchScheduler:
             r.next_input = int(tok_val)
         elif r.tokens:
             r.next_input = int(r.tokens[-1])
-        r.slot = slot
-        r._aw = aw
-        r.paused = False
-        r.queued_for_recovery = False
-        r.t_admit = now
-        eng.store.reassign(q.rid, aw)
 
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> Dict[str, int]:
-        """One decode step over all active slots. Returns {rid: new_token}."""
+        """One iteration: a budgeted slice of chunked prefill (when the
+        plane is on), then one decode step over all active slots. Returns
+        {rid: new_token}."""
         eng = self.engine
+        if eng.chunked is not None:
+            eng.chunked.tick(now if now is not None else float(eng.steps))
         act = eng.active_requests()
         if not act:
             return {}
         tokens = np.zeros((eng.ecfg.max_batch,), np.int32)
-        pos = np.zeros((eng.ecfg.max_batch,), np.int32)
+        # inactive rows carry pos -1: their cache writes are dropped, so a
+        # decode step can never clobber a slot that is mid-chunked-prefill
+        pos = np.full((eng.ecfg.max_batch,), -1, np.int32)
         for r in act:
             tokens[r.slot] = r.next_input
             pos[r.slot] = r.pos

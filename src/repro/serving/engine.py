@@ -40,6 +40,7 @@ from repro.core.checkpoint import CheckpointStore
 from repro.core.refe import RouteState
 from repro.models import get_model
 from repro.serving.batching import ContinuousBatchScheduler
+from repro.serving.chunked import ChunkedPrefillPlane
 from repro.serving.gateway import Gateway, QueuedRequest
 from repro.serving.kvcache import CacheLayout
 from repro.serving.workers import (AttentionWorker, ClusterSlotView,
@@ -62,6 +63,14 @@ class EngineConfig:
     capacity_factor_decode: float = 0.0  # 0 = use model default
     placement: str = "least_loaded"      # Gateway placement policy
     prefill_bucket: int = 16             # padded-prefill length bucket
+    # ---- chunked-prefill plane (serving/chunked.py) ----------------------
+    chunk_token_budget: int = 0          # real prefill tokens per tick
+    #                                      (0 = whole-prompt prefill path)
+    chunk_min: int = 8                   # smallest chunk shape; shapes are
+    #                                      chunk_min * 2^i (O(log) jit keys)
+    prefill_token_cap: int = 0           # Gateway admission cap on
+    #                                      outstanding prefill tokens (0 =
+    #                                      slot-bound admission only)
 
 
 @dataclass
@@ -76,6 +85,9 @@ class RequestState:
     done: bool = False
     paused: bool = False          # owning AW died; awaiting re-admission
     queued_for_recovery: bool = False
+    prefilling: bool = False      # prompt still streaming through the
+    #                               chunked-prefill plane (no decode yet)
+    prefill_cursor: int = 0       # prompt tokens already written to cache
     # virtual-clock timeline (all on the serving loop's clock)
     t_enqueue: float = 0.0
     t_admit: float = -1.0
@@ -127,8 +139,12 @@ class InferenceEngine:
         self._extract = self.layout.make_batched_extractor()
         self._decode = jax.jit(self.api.decode,
                                static_argnames=("capacity",))
-        self._prefill = jax.jit(self.api.prefill,
-                                static_argnames=("max_seq",))
+        # pad-free dispatch (batch["mask"] + real-token capacity) is a
+        # transformer-family extension, marked by the prefill_chunk entry
+        self.prefill_masked = self.api.prefill_chunk is not None
+        pre_static = ("max_seq", "capacity") if self.prefill_masked \
+            else ("max_seq",)
+        self._prefill = jax.jit(self.api.prefill, static_argnames=pre_static)
         self._sample_rng = np.random.default_rng(ecfg.sample_seed)
         self.steps = 0
 
@@ -141,6 +157,30 @@ class InferenceEngine:
             for leaf, ax, k in zip(leaves, self.layout.batch_axis,
                                    self.layout.leaf_kind)
             if k == "attn_k")
+
+        # ---- chunked-prefill plane (serving/chunked.py) -------------------
+        # chunked streams need slot == absolute position, i.e. the padded
+        # (full-attention) cache family; others keep the whole-prompt path
+        self.chunked: Optional[ChunkedPrefillPlane] = None
+        if ecfg.chunk_token_budget > 0 and self.prefill_paddable and \
+                self.api.prefill_chunk is not None:
+            # chunked == whole-prompt bit-identity relies on a common
+            # online-softmax KV block partition: both the cache extent and
+            # the padded bucket lengths must be PREFILL_BLOCK_K-aligned,
+            # or _pick_block silently degrades to mismatched block sizes
+            from repro.models.attention import PREFILL_BLOCK_K
+            assert ecfg.max_seq % PREFILL_BLOCK_K == 0 and \
+                ecfg.prefill_bucket % PREFILL_BLOCK_K == 0, (
+                    f"chunked prefill requires max_seq and prefill_bucket "
+                    f"to be multiples of PREFILL_BLOCK_K="
+                    f"{PREFILL_BLOCK_K} (got max_seq={ecfg.max_seq}, "
+                    f"prefill_bucket={ecfg.prefill_bucket})")
+            self._prefill_chunk = jax.jit(self.api.prefill_chunk,
+                                          static_argnames=("capacity",))
+            self.chunked = ChunkedPrefillPlane(
+                self, ecfg.chunk_token_budget, min_chunk=ecfg.chunk_min)
+            self.gateway.prefill_load = self.chunked.outstanding_tokens
+        self.gateway.prefill_token_cap = ecfg.prefill_token_cap
 
     # ------------------------------------------------------------------
     # decode routing capacity (§5.2): the decode path may run at a tighter
@@ -155,6 +195,22 @@ class InferenceEngine:
         return int(max(1, round(cf * self.cfg.moe.top_k *
                                 self.ecfg.max_batch /
                                 self.cfg.moe.num_experts)))
+
+    def prefill_capacity(self, n_real_tokens: int) -> Optional[int]:
+        """Expert capacity for a prefill/chunk call, computed from the
+        REAL token count (pads are excluded from rank competition by the
+        dispatch mask) and rounded up to a power of two — jit keys stay
+        bounded, and a request's routing no longer depends on how much
+        padding its batch happens to carry."""
+        if not self.prefill_masked or not self.cfg.moe.enabled:
+            return None
+        cap = int(max(1, round(self.cfg.moe.capacity_factor *
+                               self.cfg.moe.top_k * n_real_tokens /
+                               self.cfg.moe.num_experts)))
+        p = 1
+        while p < cap:
+            p *= 2
+        return p
 
     # ------------------------------------------------------------------
     # sampling (the decode head): greedy argmax or temperature/top-k
@@ -202,11 +258,34 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def active_requests(self) -> List[RequestState]:
         return [r for r in self.requests.values()
-                if not r.done and not r.paused]
+                if not r.done and not r.paused and not r.prefilling]
+
+    def prefilling_requests(self) -> List[RequestState]:
+        return [r for r in self.requests.values()
+                if r.prefilling and not r.done and not r.paused]
 
     def step(self, now: Optional[float] = None) -> Dict[str, int]:
-        """One decode step over all active slots. Returns {rid: new_token}."""
+        """One iteration: a budgeted slice of chunked prefill (when the
+        plane is on) followed by one decode step over all active slots.
+        Returns {rid: new_token}."""
         return self.scheduler.step(now)
+
+    # ------------------------------------------------------------------
+    # prefill accounting (virtual-clock work charging + metrics)
+    # ------------------------------------------------------------------
+    def prefill_tokens_done(self) -> int:
+        """Total real prompt tokens prefilled so far, across the
+        whole-prompt path and the chunked plane."""
+        n = self.scheduler.stats.real_tokens
+        if self.chunked is not None:
+            n += self.chunked.stats.real_tokens
+        return n
+
+    def prefill_snapshot(self) -> dict:
+        snap = self.scheduler.stats.snapshot()
+        if self.chunked is not None:
+            snap["chunked"] = self.chunked.stats.snapshot()
+        return snap
 
     # ------------------------------------------------------------------
     # failure injection & recovery (delegates to the worker objects)
@@ -232,9 +311,13 @@ class InferenceEngine:
         with no checkpoint record (checkpoint=False) cannot be restored:
         they keep decoding against the dead worker's slot — the simulated
         data loss of a system without Tarragon's store — instead of being
-        stranded in a paused state forever."""
+        stranded in a paused state forever. Requests caught mid-prefill are
+        preempted the same way: their chunk stream stops and recovery will
+        resume it from the committed cursor."""
         self.route_state = self.aws[aw].fail(self.route_state)
         recoverable = set(self.store.active_requests_on(aw))
+        if self.chunked is not None and self.ecfg.checkpoint:
+            self.chunked.drop_aw(aw)
         for r in self.requests.values():
             if r._aw == aw and not r.done and r.rid in recoverable:
                 r.paused = True
@@ -299,6 +382,8 @@ class InferenceEngine:
         r = self.requests.pop(rid, None)
         if r is None:
             return
+        if self.chunked is not None:
+            self.chunked.drop(rid)
         if r.queued_for_recovery:
             # cancel the pending re-admission: a stale recovery entry must
             # not reach the scheduler after the request is gone

@@ -125,6 +125,12 @@ class Gateway:
         self.policy = policy
         self.queue: Deque[QueuedRequest] = deque()
         self.stats = GatewayStats()
+        # token-based admission (chunked-prefill plane): cap on prompt
+        # tokens admitted but not yet prefilled. ``prefill_load`` is a
+        # probe supplied by the engine (the plane's outstanding_tokens);
+        # cap 0 = slot-bound admission only.
+        self.prefill_token_cap: int = 0
+        self.prefill_load = None
 
     # -- queue management ---------------------------------------------------
     def enqueue(self, rid: str, prompt: np.ndarray, max_new: int, *,
@@ -163,14 +169,31 @@ class Gateway:
         Head-of-line blocking is deliberate: a request is never overtaken,
         only retried. Returns (entry, aw_id, slot) triples."""
         admitted = []
+        new_tokens = 0                 # fresh prompt tokens admitted now
         while self.queue:
             head = self.queue[0]
+            # admission is token-aware, not just slot-aware: a free slot
+            # is not enough if the prefill plane is already saturated with
+            # outstanding prompt tokens. Recovery entries bypass the cap —
+            # their committed prefix restores from the store. The first
+            # admission is always allowed so an over-cap prompt cannot
+            # deadlock the queue.
+            if self.prefill_token_cap and not head.recovery:
+                load = new_tokens + \
+                    (self.prefill_load() if self.prefill_load else 0)
+                if load > 0 and \
+                        load + len(head.prompt) > self.prefill_token_cap:
+                    head.retries += 1
+                    self.stats.blocked_ticks += 1
+                    break
             aw = self.choose_aw(head.rid)
             if aw is None:
                 head.retries += 1
                 self.stats.blocked_ticks += 1
                 break
             self.queue.popleft()
+            if not head.recovery:
+                new_tokens += len(head.prompt)
             slot = self.workers[aw].slots.alloc()
             self.stats.admitted += 1
             # total time spent waiting at the gateway, summed over spells

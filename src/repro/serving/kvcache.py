@@ -130,6 +130,36 @@ class CacheLayout:
         return jax.jit(extract)
 
     # ------------------------------------------------------------------
+    def make_slot_range_extractor(self):
+        """Bulk-segment gather for chunked prefill: one jitted call pulls
+        the ``count`` contiguous token segments a chunk just wrote for one
+        slot. Returns fn(cache, slot, start, count=<static>) -> list of
+        leaves with a leading count axis (attention leaves: the KV columns
+        at token indices [start, start+count); state leaves: the current
+        snapshot repeated). ``count`` is static, so jit keys track the
+        O(log) chunk-shape set, not every chunk length ever seen."""
+        batch_axes = list(self.batch_axis)
+        kinds = list(self.leaf_kind)
+
+        def extract(cache, slot, start, *, count: int):
+            leaves, _ = jax.tree_util.tree_flatten(cache)
+            out = []
+            for leaf, ax, kind in zip(leaves, batch_axes, kinds):
+                per = jax.lax.dynamic_index_in_dim(leaf, slot, ax,
+                                                   keepdims=False)
+                if kind.startswith("attn_"):
+                    sc = per.shape[ax]
+                    sl = jax.lax.dynamic_slice_in_dim(
+                        per, start % sc, count, axis=ax)
+                    out.append(jnp.moveaxis(sl, ax, 0))
+                else:
+                    out.append(jnp.broadcast_to(
+                        per[None], (count,) + per.shape))
+            return out
+
+        return jax.jit(extract, static_argnames=("count",))
+
+    # ------------------------------------------------------------------
     def request_state(self, cache, slot: int) -> List[Any]:
         leaves, _ = self._leaves(cache)
         return [np.asarray(self._take(l, ax, slot))

@@ -86,7 +86,13 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 orchestrator: Optional[Orchestrator] = None,
                 failures: List[FailurePlan] = (),
                 step_time: Optional[float] = None,
+                prefill_token_time: Optional[float] = None,
                 max_steps: int = 100000) -> ServeMetrics:
+    """``prefill_token_time`` charges prefill work to the virtual clock
+    (seconds per real prompt token prefilled in the tick, on top of the
+    decode step time) — whole-prompt prefill of a long prompt then shows
+    up as the TBT stall it is for co-resident decodes, and the chunked
+    plane's per-tick token budget bounds that stall."""
     m = ServeMetrics()
     gw, sched = engine.gateway, engine.scheduler
     clock = 0.0
@@ -114,14 +120,19 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
             gw.enqueue(r.request_id, r.prompt_tokens(engine.cfg.vocab_size),
                        r.max_new_tokens, now=r.arrival)
             qi += 1
+        pf0 = engine.prefill_tokens_done()
         sched.admit(clock)
-        # decode step
+        # decode step (preceded by a budgeted chunked-prefill slice when
+        # the plane is on)
         t0 = time.monotonic()
         out = engine.step(now=clock)
         dt = step_time if step_time is not None else time.monotonic() - t0
+        if prefill_token_time is not None:
+            dt += (engine.prefill_tokens_done() - pf0) * prefill_token_time
         if not out:
             # idle tick: quit once nothing can ever make progress again
             if qi >= len(pending) and not engine.active_requests() and \
+                    not engine.prefilling_requests() and \
                     (orchestrator is None or orchestrator.outstanding == 0):
                 break
             dt = max(dt, 1e-3)
@@ -150,5 +161,5 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
         steps += 1
     m.duration = clock
     m.queue_delay = dict(gw.stats.queue_delay)
-    m.prefill = sched.stats.snapshot()
+    m.prefill = engine.prefill_snapshot()
     return m

@@ -79,6 +79,10 @@ class AttentionWorker:
         self.checkpointer = KVCheckpointer(store, aw_id,
                                            reorder_window=reorder_window,
                                            seed=aw_id)
+        # in-flight chunked-prefill streams this AW owns: rid ->
+        # prefill_cursor (prompt tokens already written to its slot).
+        # Dies with the worker like the slot partition does.
+        self.prefills: dict = {}
         self.alive = True
 
     # -- placement view -----------------------------------------------------
@@ -90,9 +94,13 @@ class AttentionWorker:
 
     # -- lifecycle ----------------------------------------------------------
     def fail(self, route_state: RouteState) -> RouteState:
-        """Crash: slots (and any un-checkpointed KV) are gone."""
+        """Crash: slots (and any un-checkpointed KV) are gone — checkpoint
+        WRs still pending on the AW side never reach the store, so the
+        commit watermark freezes at the last delivered contiguous prefix."""
         self.alive = False
         self.slots.drop()
+        self.prefills.clear()
+        self.checkpointer.drop_pending()
         return selfheal.fail_aw(route_state, self.aw_id)
 
     def provision(self, route_state: RouteState,

@@ -1,0 +1,369 @@
+"""Chunked-prefill plane (serving/chunked.py): token-budget scheduling,
+exactness vs whole-prompt prefill, pad-free dispatch, and mid-prefill
+failure recovery.
+
+Acceptance:
+  * chunked generation is bit-identical to the whole-prompt path across
+    chunk budgets, including a budget smaller than one prompt;
+  * a failure injected mid-prefill recovers by resuming from the last
+    committed chunk — never re-prefilling from token 0 — with both the
+    output match and the recomputed-token count asserted via the plane's
+    token accounting;
+  * admission is token-aware: the Gateway stops admitting when the plane
+    holds too many outstanding prefill tokens, even with free slots.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core import ert as ert_lib
+from repro.core import refe
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import make_workload
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.scheduler import FailurePlan, run_serving
+
+
+def make_engine(budget=0, **kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    ecfg = EngineConfig(max_batch=8, max_seq=64, num_aw=2, num_ew=2,
+                        chunk_token_budget=budget, **kw)
+    return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
+
+
+def prompts(lens, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 200, size=(n,)).astype(np.int32) for n in lens]
+
+
+def drain(eng, limit=500):
+    """Minimal serving loop: admit (as run_serving does each tick), then
+    step, until nothing is queued, prefilling, or decoding."""
+    n = 0
+    while (eng.active_requests() or eng.prefilling_requests()
+           or eng.gateway.depth()) and n < limit:
+        eng.scheduler.admit(float(n))
+        eng.step()
+        n += 1
+    assert n < limit, "engine did not drain"
+
+
+# --------------------------------------------------------------------------
+# exactness
+# --------------------------------------------------------------------------
+
+def test_chunked_matches_whole_prefill_across_budgets():
+    """Same prompts, same decode: the chunk stream must reproduce the
+    whole-prompt path bit-for-bit. Budget 6 is smaller than two of the
+    prompts, so they take multiple chunks (and chunk shapes stay a small
+    power-of-two set -> bounded jit keys)."""
+    lens = [6, 20, 33]
+    ps = prompts(lens)
+    eng_w = make_engine()
+    for i, p in enumerate(ps):
+        assert eng_w.submit(f"r{i}", p, 5)
+    drain(eng_w)
+    ref = {f"r{i}": eng_w.requests[f"r{i}"].tokens for i in range(3)}
+
+    for budget in (6, 16):
+        eng_c = make_engine(budget)
+        assert eng_c.chunked is not None
+        for i, p in enumerate(ps):
+            assert eng_c.submit(f"r{i}", p, 5)
+        drain(eng_c)
+        for i in range(3):
+            assert eng_c.requests[f"r{i}"].tokens == ref[f"r{i}"], \
+                (budget, i)
+        st = eng_c.chunked.stats
+        assert st.requests == 3
+        assert st.real_tokens == sum(n - 1 for n in lens)
+        # shapes are powers of two bounded by the budget's pow2 ceiling
+        assert all(s & (s - 1) == 0 for s in st.shapes)
+        assert max(st.shapes) <= 2 * budget
+
+
+def test_decode_interleaves_with_prefill():
+    """A short request admitted together with a long one starts decoding
+    while the long prompt is still streaming chunks — the point of
+    bounding per-tick prefill work."""
+    eng = make_engine(budget=4)
+    short, long_ = prompts([4, 40])
+    assert eng.submit("s", short, 8)
+    assert eng.submit("l", long_, 4)
+    eng.step()
+    rs, rl = eng.requests["s"], eng.requests["l"]
+    assert rl.prefilling and rl.prefill_cursor > 0
+    assert len(rs.tokens) >= 1          # short decoded during long prefill
+    drain(eng)
+    assert len(rl.tokens) == 4
+
+
+# --------------------------------------------------------------------------
+# pad-free dispatch (satellite)
+# --------------------------------------------------------------------------
+
+def test_route_token_mask_excludes_pads_from_capacity():
+    """Appending masked pad tokens must not change any real token's rank
+    or keep decision, at the same capacity."""
+    e, k, t = 8, 2, 12
+    placement = ert_lib.default_placement(e, num_ew=2, num_shadow_slots=0)
+    rs = refe.RouteState.healthy(placement, num_aw=1)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(t, 16)).astype(np.float32)
+    logits = rng.normal(size=(t, e)).astype(np.float32)
+
+    r_real = refe.route(jnp.asarray(x), jnp.asarray(logits), rs, placement,
+                        top_k=k, capacity_factor=1.0, capacity=2, batch=t)
+
+    n_pad = 12
+    xp = np.concatenate([x, rng.normal(size=(n_pad, 16)).astype(np.float32)])
+    lp = np.concatenate([logits,
+                         rng.normal(size=(n_pad, e)).astype(np.float32)])
+    mask = np.concatenate([np.ones(t, bool), np.zeros(n_pad, bool)])
+    r_pad = refe.route(jnp.asarray(xp), jnp.asarray(lp), rs, placement,
+                       top_k=k, capacity_factor=1.0, capacity=2,
+                       batch=t + n_pad, token_mask=jnp.asarray(mask))
+
+    np.testing.assert_array_equal(np.asarray(r_real["pos"]),
+                                  np.asarray(r_pad["pos"])[:t])
+    np.testing.assert_array_equal(np.asarray(r_real["keep"]),
+                                  np.asarray(r_pad["keep"])[:t])
+    # pads themselves are never kept
+    assert not np.asarray(r_pad["keep"])[t:].any()
+
+
+def test_padded_prefill_matches_exact_at_tight_capacity():
+    """With the validity mask and real-token-derived capacity, the padded
+    scheme is exact even at a tight capacity factor: bucket padding cannot
+    evict (or re-rank) real tokens."""
+    cfg = reduced("mixtral_8x7b", cap_factor=1.0)      # tight
+    p = prompts([21], seed=3)[0]
+
+    def run(bucket):
+        ecfg = EngineConfig(max_batch=4, max_seq=64, num_aw=2, num_ew=2,
+                            prefill_bucket=bucket)
+        eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
+        assert eng.submit("r", p, 6)
+        drain(eng)
+        return eng.requests["r"].tokens
+
+    padded = run(16)        # bucket 32: 12 pad columns
+    exact = run(20)         # bucket 20: no padding (n-1 == 20)
+    assert padded == exact
+
+
+# --------------------------------------------------------------------------
+# mid-prefill failure recovery
+# --------------------------------------------------------------------------
+
+def test_mid_prefill_failure_resumes_from_cursor():
+    """AW dies after two chunks: recovery restores the committed prefix
+    and resumes from the cursor. All chunk segments were flushed, so
+    nothing is recomputed and the output matches the failure-free run."""
+    p = prompts([40], seed=7)[0]
+    n_pre = len(p) - 1
+
+    eng0 = make_engine(budget=8)
+    assert eng0.submit("r", p, 5)
+    drain(eng0)
+    ref = eng0.requests["r"].tokens
+
+    eng = make_engine(budget=8)
+    assert eng.submit("r", p, 5)
+    r = eng.requests["r"]
+    aw0 = r.aw
+    for _ in range(2):
+        eng.step()
+    cursor_at_fail = r.prefill_cursor
+    assert 0 < cursor_at_fail < n_pre          # genuinely mid-prefill
+    eng.fail_aw(aw0)
+    assert r.paused
+    committed = eng.store.committed_token("r")
+    assert committed == cursor_at_fail - 1     # every chunk was committed
+    assert eng.recover_aw_requests(now=1.0) == ["r"]
+    assert r.aw != aw0 and r.prefilling
+    assert r.prefill_cursor == committed + 1   # resumed, NOT from token 0
+    drain(eng)
+    assert eng.requests["r"].tokens == ref
+
+    st = eng.chunked.stats
+    assert st.resumed == 1
+    assert st.restored_tokens["r"] == cursor_at_fail
+    # zero recompute: total prefilled work == the prompt prefix, exactly
+    assert st.prefilled_tokens["r"] == n_pre
+
+
+def test_mid_prefill_failure_recomputes_only_uncommitted_tail():
+    """With a WR reorder window, the last chunk's segments are still
+    pending on the AW when it dies; they never commit, and exactly that
+    tail is recomputed after recovery."""
+    p = prompts([40], seed=7)[0]
+    n_pre = len(p) - 1
+
+    eng0 = make_engine(budget=8)
+    assert eng0.submit("r", p, 5)
+    drain(eng0)
+    ref = eng0.requests["r"].tokens
+
+    eng = make_engine(budget=8, checkpoint_reorder=6)
+    assert eng.submit("r", p, 5)
+    r = eng.requests["r"]
+    aw0 = r.aw
+    # drive the plane directly: no decode step, so no end-of-step flush
+    eng.chunked.tick(0.0)
+    eng.chunked.tick(0.0)
+    cursor_at_fail = r.prefill_cursor
+    assert cursor_at_fail == 16
+    assert len(eng.aws[aw0].checkpointer._pending) > 0
+    eng.fail_aw(aw0)                           # pending WRs die with the AW
+    committed = eng.store.committed_token("r")
+    assert committed < cursor_at_fail - 1      # an uncommitted tail exists
+    assert committed >= 0                      # but earlier chunks committed
+    eng.recover_aw_requests(now=1.0)
+    assert r.prefill_cursor == committed + 1
+    drain(eng)
+    assert eng.requests["r"].tokens == ref
+    recomputed = eng.chunked.stats.prefilled_tokens["r"] - n_pre
+    assert recomputed == cursor_at_fail - (committed + 1)
+    assert 0 < recomputed < cursor_at_fail     # tail only, never from 0
+
+
+def test_mid_prefill_failure_through_orchestrator():
+    """Integration: the failure lands through the serving loop while long
+    prompts are mid-stream; every request still completes with the
+    failure-free outputs."""
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+
+    def run(failures):
+        ecfg = EngineConfig(max_batch=8, max_seq=64, num_aw=2, num_ew=2,
+                            chunk_token_budget=8)
+        eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(1))
+        orch = Orchestrator(eng, worker_init_time=0.6)
+        wl = make_workload("random", rate_rps=4.0, duration=1.0, seed=6)
+        wl = [dataclasses.replace(w, arrival=0.0, prompt_len=30 + 3 * i,
+                                  max_new_tokens=5)
+              for i, w in enumerate(wl)][:4]
+        m = run_serving(eng, wl, duration=200.0, orchestrator=orch,
+                        failures=failures, step_time=0.05)
+        return eng, m
+
+    eng_ref, m_ref = run([])
+    eng, m = run([FailurePlan(0.0, "aw", 0)])
+    assert len(m.finished) == len(m_ref.finished) == 4
+    assert eng.chunked.stats.resumed >= 1      # someone was mid-prefill
+    for rid, toks in m_ref.outputs.items():
+        assert m.outputs[rid] == toks, rid
+
+
+def test_budget_larger_than_cache_extent_is_clamped():
+    """A budget whose pow2 ceiling exceeds max_seq must not crash the
+    chunk-shape set or the bulk checkpoint extractor — shapes are clamped
+    to the largest power of two fitting the cache."""
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    ecfg = EngineConfig(max_batch=4, max_seq=96, num_aw=2, num_ew=2,
+                        chunk_token_budget=80)
+    eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
+    assert eng.chunked.max_shape == 64
+    p = prompts([80], seed=9)[0]
+    assert eng.submit("r", p, 3)
+    drain(eng)
+    assert len(eng.requests["r"].tokens) == 3
+    assert max(eng.chunked.stats.shapes) <= 64
+
+
+def test_commit_watermark_survives_repeated_failures():
+    """A dropped pending WR must not leave a permanent sequence gap:
+    restoration truncates the log to the commit record, so segments
+    checkpointed after recovery still commit — a second failure rewinds
+    to the *latest* watermark, not the pre-first-failure one."""
+    p = prompts([40], seed=7)[0]
+
+    eng0 = make_engine(budget=8)
+    assert eng0.submit("r", p, 5)
+    drain(eng0)
+    ref = eng0.requests["r"].tokens
+
+    eng = make_engine(budget=8, checkpoint_reorder=6)
+    assert eng.submit("r", p, 5)
+    r = eng.requests["r"]
+    aw_first = r.aw
+    eng.chunked.tick(0.0)
+    eng.chunked.tick(0.0)
+    eng.fail_aw(aw_first)              # pending WRs die -> seq gap
+    first_committed = eng.store.committed_token("r")
+    eng.recover_aw_requests(now=1.0)
+    for _ in range(6):                 # finish prefill + some decode
+        eng.step()
+    assert not r.prefilling and len(r.tokens) >= 1
+    # post-recovery checkpoints commit past the first watermark
+    assert eng.store.committed_token("r") > first_committed
+    eng.provision_aw(aw_first)         # capacity for the second recovery
+    eng.fail_aw(r.aw)
+    eng.recover_aw_requests(now=2.0)
+    drain(eng)
+    assert eng.requests["r"].tokens == ref
+
+
+# --------------------------------------------------------------------------
+# token-aware admission + workload generator (satellites)
+# --------------------------------------------------------------------------
+
+def test_gateway_counts_outstanding_prefill_tokens():
+    """Slots alone no longer gate admission: with a prefill token cap, the
+    Gateway holds back fresh prompts while the plane is saturated, and
+    admits them as the stream drains."""
+    eng = make_engine(budget=8, prefill_token_cap=48)
+    ps = prompts([40, 40, 40])
+    for i, p in enumerate(ps):
+        eng.gateway.enqueue(f"r{i}", p, 4, now=0.0)
+    eng.scheduler.admit(0.0)
+    # slots are plentiful (8), but 40 + 40 > 48: only one admitted
+    assert "r0" in eng.requests and "r1" not in eng.requests
+    assert eng.gateway.depth() == 2
+    assert eng.gateway.stats.blocked_ticks >= 1
+    drain(eng)                                  # plane drains -> admissions
+    assert all(len(eng.requests[f"r{i}"].tokens) == 4 for i in range(3))
+
+
+def test_recovery_entries_bypass_token_cap():
+    """A preempted request's re-admission restores from the store; it must
+    not be blocked behind the fresh-prefill token cap."""
+    eng = make_engine(budget=8, prefill_token_cap=48)
+    p = prompts([40])[0]
+    assert eng.submit("r", p, 4)
+    for _ in range(2):
+        eng.step()
+    # saturate the cap with queued fresh work, then fail the AW
+    for i, q in enumerate(prompts([40, 40], seed=2)):
+        eng.gateway.enqueue(f"q{i}", q, 2, now=0.0)
+    eng.fail_aw(eng.requests["r"].aw)
+    assert eng.recover_aw_requests(now=1.0) == ["r"]
+    drain(eng)
+    assert len(eng.requests["r"].tokens) == 4
+
+
+def test_long_prompt_burst_workload_shape():
+    wl = make_workload("long_prompt_burst", rate_rps=30.0, duration=2.0,
+                       seed=0, max_prompt=64, max_new=32)
+    assert len(wl) > 10
+    lens = np.asarray([w.prompt_len for w in wl])
+    arr = np.asarray([w.arrival for w in wl])
+    assert (np.diff(arr) >= 0).all() and arr.min() >= 0.0
+    assert arr.max() <= 2.0
+    # bimodal: both a short mode and a long (>= max_prompt/2) mode present
+    assert (lens >= 32).any() and (lens < 8).any()
+    assert lens.max() <= 64
+    # bursts: several arrivals packed within one burst spread
+    gaps = np.diff(arr)
+    assert (gaps < 0.021).sum() >= len(wl) // 3
+
+
+def test_workload_exposed_in_example():
+    import ast
+    src = open("examples/serve_workload.py").read()
+    assert "long_prompt_burst" in src
+    ast.parse(src)
