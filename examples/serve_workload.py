@@ -21,7 +21,8 @@ from repro.serving.scheduler import FailurePlan, run_serving
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
-                    choices=("random", "sharegpt", "long_prompt_burst"),
+                    choices=("random", "sharegpt", "long_prompt_burst",
+                             "skewed_expert_load"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
@@ -31,6 +32,10 @@ def main():
     ap.add_argument("--chunk-budget", type=int, default=0,
                     help="chunked-prefill token budget per tick "
                          "(0 = whole-prompt prefill)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="let the orchestrator rebalance expert placement "
+                         "when dispatch load is imbalanced (pairs with "
+                         "--workload skewed_expert_load)")
     args = ap.parse_args()
 
     cfg = get_config("mixtral_8x7b").reduced()
@@ -40,7 +45,8 @@ def main():
                         chunk_token_budget=args.chunk_budget,
                         prefill_token_cap=8 * args.chunk_budget)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
-    orch = Orchestrator(eng, worker_init_time=1.0)
+    orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
+                        auto_rebalance=args.rebalance)
 
     max_prompt = 64 if args.workload == "long_prompt_burst" else 16
     wl = make_workload(args.workload, args.rps, args.duration, seed=1,
@@ -80,6 +86,11 @@ def main():
             print(f"chunked prefill: {ch['chunks']} chunks in "
                   f"{ch['calls']} calls for {ch['requests']} streams "
                   f"(shapes={ch['shapes']}, resumed={ch['resumed']})")
+    if eng.placement_mgr is not None:
+        mgr = eng.placement_mgr
+        print(f"expert plane: gen={mgr.plan.generation} "
+              f"imbalance(max/mean)={mgr.imbalance():.2f} "
+              f"per-EW load={ {k: round(v, 1) for k, v in mgr.per_ew_load().items()} }")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}s] {e.kind} {e.worker} {e.detail}")
 

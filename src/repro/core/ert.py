@@ -129,7 +129,8 @@ def build_candidates(placement: ExpertPlacement,
 def resolve_active_slots(candidates, ew_health, slot_owner):
     """Resolve each logical expert to its highest-priority *healthy* slot.
 
-    candidates: [E, R] int32; ew_health: [num_ew] bool; slot_owner: [P] int32.
+    candidates: [E, R] int32; ew_health: [num_ew] bool; slot_owner: [P] int32
+    (-1 = parked slot: its EW left the pool, weights unreachable).
     Returns (active_slot [E] int32, expert_alive [E] bool). Runs inside jit —
     this is the REFE's per-dispatch ERT lookup.
     """
@@ -137,7 +138,8 @@ def resolve_active_slots(candidates, ew_health, slot_owner):
     slot_owner = jnp.asarray(slot_owner)
     valid = candidates >= 0
     safe = jnp.maximum(candidates, 0)
-    healthy = valid & ew_health[slot_owner[safe]]
+    owner = slot_owner[safe]
+    healthy = valid & (owner >= 0) & ew_health[jnp.maximum(owner, 0)]
     # first healthy candidate in priority order
     first = jnp.argmax(healthy, axis=1)
     any_healthy = jnp.any(healthy, axis=1)
@@ -145,6 +147,20 @@ def resolve_active_slots(candidates, ew_health, slot_owner):
     # if nothing healthy, fall back to primary (tokens will be masked out)
     active = jnp.where(any_healthy, active, candidates[:, 0])
     return active.astype(jnp.int32), any_healthy
+
+
+def initial_slot_expert(placement: ExpertPlacement,
+                        shadow_assignment: np.ndarray) -> np.ndarray:
+    """Resident logical expert per physical slot (-1 = empty pad slot).
+
+    The identity layout: primary slot e holds expert e, pad slots are empty,
+    shadow slots hold the orchestrator's shadow assignment. Dynamic plans
+    (core/placement.py) replace this array wholesale — the expert bank is
+    always indexed *through* it, so any slot can host any expert."""
+    se = np.full((placement.num_slots,), -1, np.int32)
+    se[: placement.num_experts] = np.arange(placement.num_experts)
+    se[placement.primary_slots:] = np.asarray(shadow_assignment, np.int32)
+    return se
 
 
 def ew_health_to_slot_health(ew_health, slot_owner):

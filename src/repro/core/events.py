@@ -142,6 +142,82 @@ def simulate_tarragon_ew_failure(c: SimConfig) -> Timeline:
     return tl
 
 
+def simulate_tarragon_scale_out(c: SimConfig, t_scale: float = None,
+                                t_push: float = 1.0) -> Timeline:
+    """EW scale-out on the versioned placement plane: the joining worker
+    initializes (T_w) and receives its expert weights (T_push) entirely in
+    the background; the plan installs at a layer boundary (§5.4), so there
+    is NO stall window — only a TBT step-down once the expert axis widens.
+    """
+    period = _token_period(c)
+    t_scale = c.fail_time if t_scale is None else t_scale
+    join = t_scale + c.profile.T_w + t_push
+    fe = c.expert_time_frac
+    # expert compute spreads over one more EW after the join
+    improved = period * (1.0 - fe / (c.num_ew + 1))
+
+    def period_fn(t):
+        return improved if t >= join else period
+
+    tl = _emit(c, period_fn, [])
+    tl.mode = "tarragon_scale_out"
+    tl.stall = 0.0
+    tl.events = [f"scale_out@{t_scale:.1f}s",
+                 f"join@{join:.1f}s (T_w+T_push, zero stall)"]
+    return tl
+
+
+def simulate_tarragon_scale_in(c: SimConfig, t_scale: float = None,
+                               t_push: float = 1.0) -> Timeline:
+    """Graceful EW drain: residents migrate during T_push while the EW
+    keeps serving; the shrink is again a plan install at a layer boundary —
+    capacity drops, but no token gap is introduced."""
+    period = _token_period(c)
+    t_scale = c.fail_time if t_scale is None else t_scale
+    leave = t_scale + t_push
+    fe = c.expert_time_frac
+    degraded = period * (1.0 + fe / max(1, c.num_ew - 1))
+
+    def period_fn(t):
+        return degraded if t >= leave else period
+
+    tl = _emit(c, period_fn, [])
+    tl.mode = "tarragon_scale_in"
+    tl.stall = 0.0
+    tl.events = [f"drain@{t_scale:.1f}s",
+                 f"leave@{leave:.1f}s (T_push migration, zero stall)"]
+    return tl
+
+
+def simulate_tarragon_promotion(c: SimConfig) -> Timeline:
+    """EW failure under the *promote* policy: shadows become primaries
+    permanently (instant ERT flip after detection — same short stall as the
+    revive policy), but the degraded-capacity window ends at re-protection
+    (T_push) instead of waiting out a full worker re-init (T_w >> T_push).
+    """
+    period = _token_period(c)
+    layer = c.num_layers // 2
+    t_stall = cm.stall_tarragon_ew(c.profile, c.tarragon, c.num_layers,
+                                   layer, 0)
+    t_push = 1.0
+    reprotect = c.fail_time + t_push
+    fe = c.expert_time_frac
+    degraded = period * (1.0 + fe / max(1, c.num_ew - 1))
+
+    def period_fn(t):
+        # the pool stays one EW smaller permanently: degraded TBT persists,
+        # but full fault tolerance is back at t_reprotect, not t_fail + T_w
+        return period if t < c.fail_time else degraded
+
+    tl = _emit(c, period_fn, [(c.fail_time, c.fail_time + t_stall, 1.0)])
+    tl.mode = "tarragon_promote"
+    tl.stall = t_stall
+    tl.events = [f"fail@{c.fail_time:.1f}s",
+                 f"promote {t_stall * 1e3:.0f}ms",
+                 f"reprotect@{reprotect:.1f}s (pool -1)"]
+    return tl
+
+
 def failover_summary(c: SimConfig) -> Dict[str, float]:
     base = simulate_megascale_failure(c)
     aw = simulate_tarragon_aw_failure(c)

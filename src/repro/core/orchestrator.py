@@ -1,17 +1,30 @@
 """Centralized orchestrator (paper Fig. 5): liveness monitoring, ERT/health
-updates on failures, per-request restoration triggering, and background
-worker provisioning — over a virtual clock so detection latency and
-provisioning time (T_w) are modelled faithfully while the functional
-recovery runs for real on the engine.
+updates on failures, per-request restoration triggering, background worker
+provisioning, and — on top of the versioned placement plane
+(core/placement.py) — EW pool elasticity: scale-out/scale-in with the
+weight-push time ``T_push`` modeled on the virtual clock, permanent shadow
+promotion as an alternative to revival, and load-aware rebalancing driven
+by the placement manager's dispatch-load EMAs.
 
 Failure detection model (§5 + App. E): implicit heartbeats are the per-step
 data-plane activity; a silent worker gets explicit probes every
 ``detect_interval``; after ``retries`` consecutive timeouts the worker is
 declared fail-stop and self-healing fires.
+
+EW failure policies:
+  * ``revive``  (default) — classic §5.4: shadows absorb traffic, a
+    replacement worker is provisioned in the background (T_w) and the
+    shadow slots are re-pointed to protect the placement manager's choice
+    of most-load-critical EW (no more hardcoded neighbor).
+  * ``promote`` — elastic: the dead EW's shadows are promoted to primaries
+    *permanently* (instant ERT flip, zero weight movement) and the pool
+    shrinks; a re-protection plan (fresh replicas for the now most-critical
+    EW) lands after T_push. Recovery becomes a routing update, not a
+    revival event.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.costmodel import TarragonProfile
@@ -20,7 +33,9 @@ from repro.core.costmodel import TarragonProfile
 @dataclass
 class WorkerEvent:
     t: float
-    kind: str       # fail_aw|fail_ew|detected|healed|provisioned
+    kind: str       # fail_aw|fail_ew|detected|healed|provisioned|
+    #                 placement_changed|scale_out_started|scaled_out|
+    #                 drain_started|scaled_in|rebalance_started|rebalanced
     worker: str
     detail: str = ""
 
@@ -35,20 +50,38 @@ class _PendingFailure:
 
 @dataclass
 class _PendingProvision:
-    kind: str
+    kind: str       # "aw" | "ew" | "reprotect"
     worker_id: int
+    t_ready: float
+
+
+@dataclass
+class _PendingScale:
+    kind: str       # "add_ew" | "drain_ew" | "rebalance"
+    worker_id: int  # -1 for add/rebalance
     t_ready: float
 
 
 class Orchestrator:
     def __init__(self, engine, profile: Optional[TarragonProfile] = None,
-                 worker_init_time: float = 18.5):
+                 worker_init_time: float = 18.5,
+                 weight_push_time: float = 1.0,
+                 ew_policy: str = "revive",
+                 auto_rebalance: bool = False,
+                 rebalance_cooldown: float = 2.0):
+        assert ew_policy in ("revive", "promote")
         self.engine = engine
         self.profile = profile or TarragonProfile()
         self.T_w = worker_init_time
+        self.T_push = weight_push_time
+        self.ew_policy = ew_policy
+        self.auto_rebalance = auto_rebalance
+        self.rebalance_cooldown = rebalance_cooldown
+        self._last_rebalance = -1e30
         self.events: List[WorkerEvent] = []
         self._failures: List[_PendingFailure] = []
         self._provisions: List[_PendingProvision] = []
+        self._scales: List[_PendingScale] = []
 
     # -- failure injection (the SIGINT of §7.2) -----------------------------
     def inject_failure(self, kind: str, worker_id: int, now: float):
@@ -58,6 +91,65 @@ class Orchestrator:
 
     def detection_latency(self) -> float:
         return self.profile.detect * self.profile.detect_retries
+
+    # -- elasticity requests (complete after T_w / T_push on the clock) -----
+    def request_scale_out(self, now: float):
+        """Grow the EW pool by one: worker init (T_w) + expert weight push
+        (T_push) happen in the background; the layer-aligned join (§5.4)
+        installs the new plan between steps once both complete. Validated
+        at request time — a bad request should fail at the call site, not
+        crash the control loop T_w seconds later."""
+        mgr = self.engine.placement_mgr
+        if mgr is None:
+            raise ValueError("scale_out requires an elastic expert plane "
+                             "(MoE + tarragon)")
+        if not mgr.can_scale_out():
+            raise ValueError(f"EW pool already at max_ew={mgr.max_ew}; "
+                             "raise EngineConfig.max_ew to add spares")
+        t_ready = now + self.T_w + self.T_push
+        self._scales.append(_PendingScale("add_ew", -1, t_ready))
+        self.events.append(WorkerEvent(
+            now, "scale_out_started", "ew?",
+            f"join in T_w+T_push={self.T_w + self.T_push:.2f}s"))
+
+    def request_scale_in(self, ew: int, now: float):
+        """Drain an EW: its resident experts migrate to the survivors
+        (weight push = T_push, during which it keeps serving the old
+        plan), then it retires to spare."""
+        mgr = self.engine.placement_mgr
+        if mgr is None or ew not in mgr.members:
+            raise ValueError(f"EW{ew} is not an elastic pool member")
+        if len(mgr.members) <= 1:
+            raise ValueError("cannot drain the last EW")
+        self._scales.append(_PendingScale("drain_ew", ew, now + self.T_push))
+        self.events.append(WorkerEvent(
+            now, "drain_started", f"ew{ew}",
+            f"migrating experts, T_push={self.T_push:.2f}s"))
+
+    def request_rebalance(self, now: float):
+        if self.engine.placement_mgr is None:
+            raise ValueError("rebalance requires an elastic expert plane "
+                             "(MoE + tarragon)")
+        self._scales.append(_PendingScale("rebalance", -1,
+                                          now + self.T_push))
+        self.events.append(WorkerEvent(now, "rebalance_started", "pool",
+                                       f"T_push={self.T_push:.2f}s"))
+
+    def _maybe_auto_rebalance(self, now: float):
+        mgr = getattr(self.engine, "placement_mgr", None)
+        if mgr is None or not self.auto_rebalance:
+            return
+        if now - self._last_rebalance < self.rebalance_cooldown:
+            return
+        if any(s.kind == "rebalance" for s in self._scales):
+            return
+        if self.engine.failed_ews:
+            # mid-failure is the wrong moment to churn placement: wait for
+            # revival/promotion to settle, then judge the real imbalance
+            return
+        if mgr.should_rebalance():
+            self._last_rebalance = now
+            self.request_rebalance(now)
 
     # -- control loop --------------------------------------------------------
     def tick(self, now: float) -> List[WorkerEvent]:
@@ -71,9 +163,22 @@ class Orchestrator:
             ev = WorkerEvent(now, "detected", f"{f.kind}{f.worker_id}")
             if f.kind == "ew":
                 # AW-side self-healing: ERT remap to shadows (instant once
-                # detected); background EW provisioning starts now.
+                # detected)
                 self.engine.fail_ew(f.worker_id)
-                ev.detail = "ERT remap -> shadow experts"
+                if self.ew_policy == "promote" and \
+                        self.engine.placement_mgr is not None:
+                    # permanent promotion: pool shrinks, shadows become
+                    # primaries now; fresh replicas for the most critical
+                    # survivor land after the background weight push
+                    self.engine.promote_shadows(f.worker_id, now=now)
+                    ev.detail = "shadows promoted to primaries (pool -1)"
+                    self._provisions.append(_PendingProvision(
+                        "reprotect", f.worker_id, now + self.T_push))
+                else:
+                    ev.detail = "ERT remap -> shadow experts"
+                    self._provisions.append(
+                        _PendingProvision(f.kind, f.worker_id,
+                                          now + self.T_w))
             else:
                 # EW-side self-healing: health mask drops the AW's slots;
                 # per-request restoration re-admits its requests through
@@ -84,8 +189,8 @@ class Orchestrator:
                 waiting = self.engine.gateway.depth()
                 if waiting:
                     ev.detail += f" ({waiting} queued for retry)"
-            self._provisions.append(
-                _PendingProvision(f.kind, f.worker_id, now + self.T_w))
+                self._provisions.append(
+                    _PendingProvision(f.kind, f.worker_id, now + self.T_w))
             self.events.append(ev)
             fired.append(ev)
 
@@ -96,21 +201,75 @@ class Orchestrator:
                 continue
             if p.kind == "ew":
                 # layer-aligned join (§5.4) + shadow re-pointing to protect
-                # a new EW (background weight push)
-                nxt = (p.worker_id + 1) % self.engine.ecfg.num_ew
-                self.engine.provision_ew(p.worker_id, repoint_protect=nxt)
+                # the placement manager's pick of most-load-critical EW
+                # (background weight push) — no hardcoded neighbor. Still-
+                # failed EWs are excluded both as protect target and from
+                # replica recycling (their failover replicas stay pinned).
+                dead = self.engine.failed_ews - {p.worker_id}
+                protect = self.engine.choose_protect_ew(exclude=dead)
+                if protect is None:
+                    protect = (p.worker_id + 1) % max(
+                        1, len(self.engine.ews))
+                self.engine.provision_ew(p.worker_id,
+                                         repoint_protect=protect, now=now)
+                ev = WorkerEvent(now, "provisioned", f"ew{p.worker_id}",
+                                 f"shadows protect ew{protect}")
+            elif p.kind == "reprotect":
+                protect = self.engine.choose_protect_ew(
+                    exclude=self.engine.failed_ews)
+                if protect is not None:
+                    self.engine.repoint_shadows(protect, now=now)
+                ev = WorkerEvent(now, "reprotected", f"ew{p.worker_id}",
+                                 f"new replicas protect ew{protect}")
             else:
                 self.engine.provision_aw(p.worker_id)
                 # freshly provisioned capacity drains the waiting queue
                 # (recovery entries sit at the front)
                 self.engine.scheduler.admit(now)
-            ev = WorkerEvent(now, "provisioned", f"{p.kind}{p.worker_id}")
+                ev = WorkerEvent(now, "provisioned", f"aw{p.worker_id}")
             self.events.append(ev)
             fired.append(ev)
         self._provisions = remaining
+
+        remaining_s = []
+        for s in self._scales:
+            if now < s.t_ready:
+                remaining_s.append(s)
+                continue
+            try:
+                if s.kind == "add_ew":
+                    new_ew = self.engine.add_ew(now=now)
+                    ev = WorkerEvent(now, "scaled_out", f"ew{new_ew}",
+                                     f"pool={sorted(self.engine.live_ews)}")
+                elif s.kind == "drain_ew":
+                    self.engine.drain_ew(s.worker_id, now=now)
+                    ev = WorkerEvent(now, "scaled_in", f"ew{s.worker_id}",
+                                     f"pool={sorted(self.engine.live_ews)}")
+                else:
+                    plan = self.engine.rebalance(now=now)
+                    detail = f"gen{plan.generation}" if plan is not None \
+                        else ""
+                    ev = WorkerEvent(now, "rebalanced", "pool", detail)
+            except ValueError as e:
+                # the pool changed between request and completion (e.g. the
+                # drain target died and was promoted away): surface it as an
+                # event, don't kill the control loop
+                ev = WorkerEvent(now, "scale_failed", s.kind, str(e))
+            self.events.append(ev)
+            fired.append(ev)
+        self._scales = remaining_s
+
+        self._maybe_auto_rebalance(now)
+
+        # surface placement-generation changes made by the engine this tick
+        # (benchmarks/tests audit plan generations through the event log)
+        for ev in self.engine.drain_plan_events() \
+                if hasattr(self.engine, "drain_plan_events") else []:
+            self.events.append(ev)
+            fired.append(ev)
         return fired
 
     @property
     def outstanding(self) -> int:
-        return len(self._provisions) + \
+        return len(self._provisions) + len(self._scales) + \
             sum(1 for f in self._failures if not f.detected)

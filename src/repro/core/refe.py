@@ -30,27 +30,49 @@ from repro.core import ert as ert_lib
 
 class RouteState(NamedTuple):
     """Runtime routing state threaded through the jitted step (all data,
-    never compile-time constants)."""
+    never compile-time constants).
 
-    candidates: jax.Array      # [E, R] int32 — ERT
-    ew_health: jax.Array       # [num_ew] bool
+    The slot-indirection pair (``slot_expert``, ``slot_owner``) is what makes
+    the expert plane *elastic*: the expert bank is gathered through
+    ``slot_expert`` and health is resolved through ``slot_owner``, so a
+    placement change — rebalance, EW scale-out/in, shadow promotion — is a
+    pure array update installed between steps, never a new jit trace."""
+
+    candidates: jax.Array      # [E, R] int32 — ERT (priority order per expert)
+    ew_health: jax.Array       # [max_ew] bool
     aw_health: jax.Array       # [num_aw] bool
-    shadow_assignment: jax.Array  # [n_shadow] int32 (resident expert per slot)
+    slot_expert: jax.Array     # [P] int32 — resident logical expert per slot
+    #                            (-1 = empty slot; bank rows gather through it)
+    slot_owner: jax.Array      # [P] int32 — EW owning each slot (-1 = parked)
+    split_slot: jax.Array      # [E] int32 — load-bearing replica slot for
+    #                            traffic splitting (-1 = no split); only used
+    #                            while its owner is healthy
 
     @staticmethod
     def healthy(placement: ert_lib.ExpertPlacement, num_aw: int,
-                shadow_assignment=None) -> "RouteState":
+                shadow_assignment=None, num_ew: int = 0) -> "RouteState":
+        """The static identity layout (primary slot e = expert e, shadows per
+        ``shadow_assignment``). ``num_ew`` oversizes the EW-health axis for
+        elastic pools (spare EW ids start unhealthy); 0 = exactly the
+        placement's EW count."""
         if shadow_assignment is None:
             shadow_assignment = ert_lib.initial_shadow_assignment(placement)
         # host-side numpy: must stay concrete even under eval_shape tracing
         import numpy as np
-        cand = ert_lib.build_candidates(placement,
-                                        np.asarray(shadow_assignment))
+        shadow_assignment = np.asarray(shadow_assignment)
+        cand = ert_lib.build_candidates(placement, shadow_assignment)
+        max_ew = max(num_ew, placement.num_ew)
+        health = np.zeros((max_ew,), bool)
+        health[: placement.num_ew] = True
         return RouteState(
             candidates=jnp.asarray(cand, jnp.int32),
-            ew_health=jnp.ones((placement.num_ew,), bool),
+            ew_health=jnp.asarray(health),
             aw_health=jnp.ones((num_aw,), bool),
-            shadow_assignment=jnp.asarray(shadow_assignment, jnp.int32),
+            slot_expert=jnp.asarray(
+                ert_lib.initial_slot_expert(placement, shadow_assignment),
+                jnp.int32),
+            slot_owner=jnp.asarray(placement.slot_owner(), jnp.int32),
+            split_slot=jnp.full((placement.num_experts,), -1, jnp.int32),
         )
 
 
@@ -104,7 +126,7 @@ def route(x, router_logits, route_state: RouteState,
     compete with real tokens for per-expert capacity cells.
     """
     t, e = router_logits.shape
-    slot_owner = jnp.asarray(placement.slot_owner())
+    slot_owner = route_state.slot_owner      # [P] data, never a trace const
 
     active_slot, expert_alive = ert_lib.resolve_active_slots(
         route_state.candidates, route_state.ew_health, slot_owner)
@@ -117,6 +139,22 @@ def route(x, router_logits, route_state: RouteState,
         jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
 
     slot_idx = active_slot[topk_idx]                          # [T, K]
+
+    # load-bearing replicas (placement-manager decision): tokens of a split
+    # expert alternate between its active slot and the replica slot by
+    # (token, choice) parity — half the dispatch load moves off the primary
+    # EW while the replica's owner stays healthy. Weights are identical, so
+    # a kept token computes the same value either way; outputs are
+    # bit-identical whenever capacity does not bind (splitting also doubles
+    # the expert's effective capacity, so under a *tight* capacity factor
+    # the kept-token set can only grow, which changes which drops occur).
+    split = route_state.split_slot[topk_idx]                  # [T, K]
+    sp_owner = slot_owner[jnp.maximum(split, 0)]
+    sp_ok = (split >= 0) & (sp_owner >= 0) & \
+        route_state.ew_health[jnp.maximum(sp_owner, 0)]
+    parity = (jnp.arange(t)[:, None] + jnp.arange(top_k)[None, :]) % 2
+    slot_idx = jnp.where(sp_ok & (parity == 1),
+                         jnp.maximum(split, 0), slot_idx)
 
     # EW-side self-healing: drop tokens from failed AWs; pad-free dispatch:
     # drop pad tokens before they claim capacity ranks
@@ -151,6 +189,13 @@ def route(x, router_logits, route_state: RouteState,
         axis=0) / top_k
     aux_loss = e * jnp.sum(me * ce)
 
+    # per-slot dispatch load counter (tokens actually dispatched, after
+    # health masks / capacity drops / replica splitting): a summed one-hot
+    # collected device-side, drained into the ExpertPlacementManager's EMA
+    # on the host — the telemetry behind load-aware rebalancing.
+    slot_load = jnp.zeros((placement.num_slots,), jnp.float32).at[
+        slot_idx.reshape(-1)].add(keep.reshape(-1).astype(jnp.float32))
+
     return {
         "capacity": capacity,
         "num_slots": placement.num_slots,
@@ -163,6 +208,7 @@ def route(x, router_logits, route_state: RouteState,
         "topk_idx": topk_idx,
         "gate_w": gate_w,
         "aux_loss": aux_loss,
+        "slot_load": slot_load,        # [P] dispatched-token count per slot
         "grouped": grouped,
         "groups": g,
         "group_size": s_g,

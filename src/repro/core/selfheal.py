@@ -7,13 +7,10 @@ the engine and the event simulator.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ert as ert_lib
-from repro.core import shadow as shadow_lib
 from repro.core.refe import RouteState
 
 
@@ -42,29 +39,30 @@ def recover_aw(rs: RouteState, aw_id: int) -> RouteState:
 # --------------------------------------------------------------------------
 
 def repoint_shadows(rs: RouteState, placement: ert_lib.ExpertPlacement,
-                    expert_params: dict, protect_ew: int
-                    ) -> Tuple[RouteState, dict]:
-    """Re-point the shadow bank to protect ``protect_ew``'s experts.
+                    protect_ew: int) -> RouteState:
+    """Re-point the shadow slots to protect ``protect_ew``'s experts.
 
-    Host-side weight push (NOT on the failover critical path): returns the
-    updated RouteState (new candidates + shadow_assignment) and the freshly
-    synced shadow bank to swap into the layer params."""
+    Host-side weight push (NOT on the failover critical path). The bank is
+    gathered through ``slot_expert`` at apply time, so re-pointing is a pure
+    RouteState update: new candidates + slot residency, no param surgery.
+    Engines with an ExpertPlacementManager go through its versioned
+    ``plan_reprotect`` instead; this helper serves manager-less callers."""
     assign = ert_lib.initial_shadow_assignment(placement, protect_ew)
     cand = ert_lib.build_candidates(placement, assign)
-    new_rs = rs._replace(candidates=jnp.asarray(cand, jnp.int32),
-                         shadow_assignment=jnp.asarray(assign, jnp.int32))
-    bank = shadow_lib.sync_shadow_bank(expert_params, assign)
-    return new_rs, bank
+    return rs._replace(
+        candidates=jnp.asarray(cand, jnp.int32),
+        slot_expert=jnp.asarray(
+            ert_lib.initial_slot_expert(placement, assign), jnp.int32))
 
 
 def experts_without_healthy_replica(rs: RouteState,
                                     placement: ert_lib.ExpertPlacement
                                     ) -> np.ndarray:
-    """Logical experts currently unreachable (both primary and shadow on
-    dead EWs) — these tokens are dropped until provisioning completes."""
-    slot_owner = placement.slot_owner()
+    """Logical experts currently unreachable (every candidate slot parked or
+    on a dead EW) — these tokens are dropped until provisioning/re-protection
+    completes."""
     _, alive = ert_lib.resolve_active_slots(
-        rs.candidates, rs.ew_health, jnp.asarray(slot_owner))
+        rs.candidates, rs.ew_health, rs.slot_owner)
     return np.asarray(~alive).nonzero()[0]
 
 

@@ -17,34 +17,16 @@ import jax.numpy as jnp
 from repro.core.ert import ExpertPlacement
 
 
-def sync_shadow_bank(expert_params: dict, shadow_assignment) -> dict:
-    """Populate the shadow bank from primary expert weights.
-
-    expert_params: {"wg": [..., E, D, F], "wu": [..., E, D, F],
-    "wd": [..., E, F, D]} — the expert axis is -3 in every bank (works both
-    for per-layer params and scan-stacked [R, E, ...] params).
-    shadow_assignment: [S] int32 — resident logical expert per shadow slot.
-    Returns the shadow bank with the same keys, expert axis sized S.
-    """
-    idx = jnp.asarray(shadow_assignment)
+def resident_slot_bank(expert_params: dict, slot_expert) -> dict:
+    """Gather the full [..., P, ...] slot bank through the slot-indirection
+    array (RouteState.slot_expert): slot s serves the weights of its
+    resident logical expert. Runs *inside* the jitted step, so a placement
+    change (rebalance / promotion / scale event) re-points the bank without
+    a new trace — the simulation stand-in for weights the orchestrator's
+    background push (T_push on the virtual clock) made resident. Empty
+    slots (-1) gather row 0 but are never routed to."""
+    idx = jnp.maximum(jnp.asarray(slot_expert), 0)
     return {k: jnp.take(v, idx, axis=-3) for k, v in expert_params.items()}
-
-
-def full_slot_bank(expert_params: dict, shadow_bank: dict,
-                   primary_slots: int = 0) -> dict:
-    """Concatenate primary + shadow banks into the [..., P, ...] slot bank.
-    Primaries are zero-padded to ``primary_slots`` (sharding divisibility —
-    pad slots hold zero weights and the ERT never routes to them)."""
-    out = {}
-    for k in expert_params:
-        prim = expert_params[k]
-        e = prim.shape[-3]
-        if primary_slots and primary_slots > e:
-            pad_widths = [(0, 0)] * prim.ndim
-            pad_widths[prim.ndim - 3] = (0, primary_slots - e)
-            prim = jnp.pad(prim, pad_widths)
-        out[k] = jnp.concatenate([prim, shadow_bank[k]], axis=-3)
-    return out
 
 
 def shadow_memory_bytes(placement: ExpertPlacement, d_model: int, d_ff: int,

@@ -9,6 +9,11 @@
   lengths (mostly short chat turns, a long-document minority) arriving in
   Poisson *bursts*, so several long prompts can land on the same tick and
   stall co-resident decodes unless prefill is budgeted.
+* ``skewed_expert_load`` — the expert-rebalancer stress case: prompt tokens
+  are drawn from a Zipf distribution over the vocabulary, so a few dominant
+  tokens (and therefore the experts they route to) carry most of the
+  dispatch load — static expert placement concentrates that load on a few
+  EWs, which is exactly what load-aware rebalancing exists to fix.
 * Arrivals follow a Poisson process of configurable rate.
 
 Also provides a token-stream iterator for the training example (synthetic
@@ -29,9 +34,17 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     seed: int
+    token_dist: str = "uniform"   # "uniform" | "zipf" (token->expert skew)
+    zipf_a: float = 1.3           # Zipf exponent (smaller = heavier skew)
 
     def prompt_tokens(self, vocab: int) -> np.ndarray:
         rng = np.random.default_rng(self.seed)
+        if self.token_dist == "zipf":
+            # heavy-tailed token ids: a handful of dominant tokens -> a
+            # handful of dominant experts (token->expert affinity is fixed
+            # by the router weights)
+            toks = rng.zipf(self.zipf_a, size=(self.prompt_len,)) - 1
+            return (toks % vocab).astype(np.int32)
         return rng.integers(0, vocab, size=(self.prompt_len,),
                             dtype=np.int32)
 
@@ -55,7 +68,8 @@ def burst_arrivals(rate_rps: float, duration: float,
 
 def make_workload(kind: str, rate_rps: float, duration: float,
                   seed: int = 0, max_prompt: int = 1024,
-                  max_new: int = 256, long_frac: float = 0.3) -> \
+                  max_new: int = 256, long_frac: float = 0.3,
+                  zipf_a: float = 1.3) -> \
         List[Request]:
     rng = np.random.default_rng(seed)
     if kind == "long_prompt_burst":
@@ -64,8 +78,15 @@ def make_workload(kind: str, rate_rps: float, duration: float,
         arrivals = poisson_arrivals(rate_rps, duration, rng)
     reqs = []
     for i, t in enumerate(arrivals):
+        token_dist = "uniform"
         if kind == "random":
             p_len, n_new = 10, 128
+        elif kind == "skewed_expert_load":
+            # decode-heavy like "random", but Zipf-distributed token ids so
+            # per-expert dispatch load is heavily imbalanced
+            p_len = int(np.clip(rng.integers(8, 17), 4, max_prompt))
+            n_new = min(64, max_new)
+            token_dist = "zipf"
         elif kind == "sharegpt":
             # log-normal prompt (~median 160 tok) and completion (~median 90)
             p_len = int(np.clip(rng.lognormal(5.0, 1.0), 4, max_prompt))
@@ -81,7 +102,8 @@ def make_workload(kind: str, rate_rps: float, duration: float,
         else:
             raise ValueError(kind)
         reqs.append(Request(f"{kind}-{i}", float(t), p_len, n_new,
-                            seed * 100003 + i))
+                            seed * 100003 + i, token_dist=token_dist,
+                            zipf_a=zipf_a))
     return reqs
 
 

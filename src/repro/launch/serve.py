@@ -3,9 +3,13 @@ mesh/scale.
 
 CPU-functional mode (default — this container):
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
-        --workload random --rps 4 --duration 2 [--fail ew:0@0.5]
+        --workload random --rps 4 --duration 2 [--fail ew:0@0.5] \
+        [--scale add_ew@1.0] [--scale drain_ew:2@3.0] [--max-ew 4] \
+        [--ew-policy promote] [--rebalance]
 
-The reduced model runs for real; failures are injected and recovered. On a
+The reduced model runs for real; failures are injected and recovered, and
+the EW pool is elastic: scale events, load-aware rebalancing, and shadow
+promotion are versioned placement-plan installs (core/placement.py). On a
 real TPU cluster the same engine/step functions run with the production
 mesh shardings from launch/sharding.py (see launch/dryrun.py for the exact
 jit configuration per architecture x shape).
@@ -22,7 +26,7 @@ from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
 from repro.data.workloads import make_workload
 from repro.serving.engine import EngineConfig, InferenceEngine
-from repro.serving.scheduler import FailurePlan, run_serving
+from repro.serving.scheduler import FailurePlan, ScalePlan, run_serving
 
 
 def parse_failure(s: str) -> FailurePlan:
@@ -31,15 +35,29 @@ def parse_failure(s: str) -> FailurePlan:
     return FailurePlan(float(t), kind, int(wid))
 
 
+def parse_scale(s: str) -> ScalePlan:
+    """add_ew@T | drain_ew:ID@T | rebalance@T"""
+    kindid, t = s.split("@")
+    kind, _, wid = kindid.partition(":")
+    if kind not in ("add_ew", "drain_ew", "rebalance"):
+        raise ValueError(f"unknown scale kind {kind!r} in --scale {s!r} "
+                         "(add_ew@T | drain_ew:ID@T | rebalance@T)")
+    return ScalePlan(float(t), kind, int(wid) if wid else -1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral_8x7b")
-    ap.add_argument("--workload", choices=("random", "sharegpt"),
+    ap.add_argument("--workload",
+                    choices=("random", "sharegpt", "skewed_expert_load"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
     ap.add_argument("--num-aw", type=int, default=2)
     ap.add_argument("--num-ew", type=int, default=2)
+    ap.add_argument("--max-ew", type=int, default=0,
+                    help="elastic EW pool ceiling (spares the orchestrator "
+                         "can scale out into; 0 = num_ew)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--placement", default="least_loaded",
                     choices=("least_loaded", "round_robin",
@@ -48,6 +66,14 @@ def main():
     ap.add_argument("--no-tarragon", action="store_true")
     ap.add_argument("--fail", type=str, action="append", default=[],
                     help="kind:worker@time, e.g. ew:0@0.5")
+    ap.add_argument("--scale", type=str, action="append", default=[],
+                    help="add_ew@T | drain_ew:ID@T | rebalance@T")
+    ap.add_argument("--ew-policy", choices=("revive", "promote"),
+                    default="revive",
+                    help="EW failure handling: background revival, or "
+                         "permanent shadow promotion (pool shrinks)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="auto-rebalance expert placement under load skew")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,16 +83,20 @@ def main():
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=96,
                         num_aw=args.num_aw, num_ew=args.num_ew,
+                        max_ew=args.max_ew,
                         tarragon=not args.no_tarragon,
                         placement=args.placement)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
-    orch = Orchestrator(eng, worker_init_time=1.0)
+    orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
+                        ew_policy=args.ew_policy,
+                        auto_rebalance=args.rebalance)
 
     wl = make_workload(args.workload, args.rps, args.duration,
                        seed=args.seed, max_prompt=16, max_new=24)
     failures = [parse_failure(f) for f in args.fail]
+    scales = [parse_scale(s) for s in args.scale]
     m = run_serving(eng, wl, duration=600.0, orchestrator=orch,
-                    failures=failures, step_time=0.05)
+                    failures=failures, scale_events=scales, step_time=0.05)
 
     tbt = m.tbt_values()
     print(f"[serve] {cfg.name} tarragon={not args.no_tarragon} "
@@ -86,6 +116,11 @@ def main():
         print(f"  prefill: {m.prefill['calls']} calls / "
               f"{m.prefill['requests']} reqs "
               f"occupancy={m.prefill['occupancy']:.2f}")
+    if eng.placement_mgr is not None:
+        mgr = eng.placement_mgr
+        print(f"  expert plane: gen={mgr.plan.generation} "
+              f"pool={sorted(eng.live_ews)} "
+              f"imbalance={mgr.imbalance():.2f}")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
 

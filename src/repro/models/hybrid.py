@@ -184,7 +184,9 @@ def build_hybrid(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
             candidates=jnp.zeros((0, 2), jnp.int32),
             ew_health=jnp.ones((num_ew,), bool),
             aw_health=jnp.ones((num_aw,), bool),
-            shadow_assignment=jnp.zeros((0,), jnp.int32))
+            slot_expert=jnp.zeros((0,), jnp.int32),
+            slot_owner=jnp.zeros((0,), jnp.int32),
+            split_slot=jnp.zeros((0,), jnp.int32))
 
     return ModelApi(cfg, None, num_aw, num_ew, init_params, init_cache,
                     forward_train, prefill, decode, init_route_state)

@@ -33,13 +33,15 @@ def moe_placement(cfg: ModelConfig, num_ew: int,
 
 
 def moe_init(key, cfg: ModelConfig, placement: ert_lib.ExpertPlacement):
-    """One MoE layer's params. Shadow bank starts synced to the default
-    assignment (orchestrator re-syncs on re-pointing).
+    """One MoE layer's params.
 
-    The stored primary bank is padded to ``placement.primary_slots`` (a
-    multiple of num_ew) so the expert axis always divides the EW mesh axis
-    — e.g. Qwen's 60 experts are stored as 64 slots on 16 EWs. Pad slots
-    never receive tokens (the ERT only references logical experts)."""
+    The stored bank holds one row per *logical* expert, padded to
+    ``placement.primary_slots`` (a multiple of num_ew) so the expert axis
+    always divides the EW mesh axis — e.g. Qwen's 60 experts are stored as
+    64 rows on 16 EWs. The physical slot bank (primaries, shadows, and any
+    replicas a placement plan creates) is gathered from these rows through
+    ``RouteState.slot_expert`` at apply time, so there is no separate
+    shadow bank to keep in sync with the placement."""
     e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.moe.d_ff
     e_store = placement.primary_slots
     ks = jax.random.split(key, 5)
@@ -51,9 +53,6 @@ def moe_init(key, cfg: ModelConfig, placement: ert_lib.ExpertPlacement):
         (1.0 / jnp.sqrt(jnp.asarray(f, jnp.float32))),
     }
     p = {"router": dense_init(ks[3], d, e), "experts": experts}
-    if placement.num_shadow_slots:
-        assign = ert_lib.initial_shadow_assignment(placement)
-        p["shadow"] = shadow_lib.sync_shadow_bank(experts, assign)
     if cfg.moe.num_shared_experts:
         p["shared"] = mlp_init(ks[4], d, cfg.moe.shared_d_ff, gated=True)
     return p
@@ -62,12 +61,13 @@ def moe_init(key, cfg: ModelConfig, placement: ert_lib.ExpertPlacement):
 def moe_apply(cfg: ModelConfig, params, x, route_state: refe.RouteState,
               placement: ert_lib.ExpertPlacement,
               capacity: Optional[int] = None, token_mask=None):
-    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar, slot_load [P]).
 
     The flattened [T, D] token batch is what flows over the AW->EW datapath;
     B is data-parallel over AWs, the slot dim over EWs. ``token_mask``
     ([B, S] bool, optional) flags real tokens; pads are excluded from
-    expert-capacity competition (pad-free dispatch).
+    expert-capacity competition (pad-free dispatch). ``slot_load`` is the
+    device-side dispatch counter the placement manager's EMA drains.
     """
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
@@ -80,10 +80,11 @@ def moe_apply(cfg: ModelConfig, params, x, route_state: refe.RouteState,
         token_mask=None if token_mask is None
         else token_mask.reshape(b * s))
 
-    bank = params["experts"]  # stored pre-padded to primary_slots
-    if placement.num_shadow_slots:
-        bank = shadow_lib.full_slot_bank(params["experts"], params["shadow"],
-                                         placement.primary_slots)
+    # physical slot bank, gathered through the plan's slot indirection: any
+    # slot (primary, shadow, replica) serves its resident expert's rows —
+    # a placement change re-points this without touching the trace
+    bank = shadow_lib.resident_slot_bank(params["experts"],
+                                         route_state.slot_expert)
 
     def expert_fn(expert_in):
         return kops.expert_ffn(expert_in, bank["wg"].astype(x.dtype),
@@ -95,4 +96,4 @@ def moe_apply(cfg: ModelConfig, params, x, route_state: refe.RouteState,
     if "shared" in params:
         y = y + mlp(params["shared"], xt, cfg.act)
 
-    return y.reshape(b, s, d), routing["aux_loss"]
+    return y.reshape(b, s, d), routing["aux_loss"], routing["slot_load"]

@@ -38,6 +38,10 @@ class ModelApi(NamedTuple):
     # -> caches. None for families without a resumable prefill path
     # (recurrent state / ring buffers / enc-dec).
     prefill_chunk: Optional[Callable[..., Any]] = None
+    # True when prefill/decode/prefill_chunk accept a static ``with_load``
+    # flag appending the accumulated per-slot dispatch-load counter [P] to
+    # their returns (the placement manager's telemetry).
+    reports_load: bool = False
 
 
 # --------------------------------------------------------------------------
@@ -103,12 +107,15 @@ def _layer_apply(cfg: ModelConfig, p, x, *, window: int, mode: str,
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
+    n_slots = placement.num_slots if placement is not None else 0
+    load = jnp.zeros((n_slots,), jnp.float32)
     if "moe" in p:
-        f, aux = moe_mod.moe_apply(cfg, p["moe"], h, route_state, placement,
-                                   capacity=capacity, token_mask=token_mask)
+        f, aux, load = moe_mod.moe_apply(cfg, p["moe"], h, route_state,
+                                         placement, capacity=capacity,
+                                         token_mask=token_mask)
     else:
         f = mlp(p["mlp"], h, cfg.act)
-    return x + f, new_cache, aux
+    return x + f, new_cache, aux, load
 
 
 # --------------------------------------------------------------------------
@@ -168,75 +175,84 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
     def _embed(params, tokens):
         return params["embed"].astype(dtype)[tokens]
 
+    n_slots = placement.num_slots if placement is not None else 0
+
     def _run_stack(params, x, mode, positions=None, pos=None, caches=None,
                    route_state=None, capacity=None, token_mask=None):
         aux_total = jnp.zeros((), jnp.float32)
+        load_total = jnp.zeros((n_slots,), jnp.float32)
         new_caches = {} if caches is not None else None
         for i in range(n_first):
             c = caches[f"dense{i}"] if caches is not None else None
-            x, nc, aux = _layer_apply(
+            x, nc, aux, load = _layer_apply(
                 cfg, params[f"dense{i}"], x, window=windows[0], mode=mode,
                 positions=positions, pos=pos, cache=c,
                 route_state=route_state, placement=placement,
                 capacity=capacity, token_mask=token_mask)
             aux_total += aux
+            load_total += load
             if caches is not None:
                 new_caches[f"dense{i}"] = nc
 
         def unit_body(carry, xs):
-            h, auxc = carry
+            h, auxc, loadc = carry
             unit_params, unit_caches = xs
             ncs = []
             for i in range(u):
                 c = unit_caches[i] if unit_caches is not None else None
-                h, nc, aux = _layer_apply(
+                h, nc, aux, load = _layer_apply(
                     cfg, unit_params[i], h, window=windows[i], mode=mode,
                     positions=positions, pos=pos, cache=c,
                     route_state=route_state, placement=placement,
                     capacity=capacity, token_mask=token_mask)
                 auxc += aux
+                loadc += load
                 ncs.append(nc)
             ncs = tuple(ncs) if caches is not None else None
-            return (h, auxc), ncs
+            return (h, auxc, loadc), ncs
 
         body = jax.checkpoint(unit_body) if cfg.remat else unit_body
         if caches is None:
-            (x, aux_total), _ = jax.lax.scan(
-                lambda c, p: body(c, (p, None)), (x, aux_total),
+            (x, aux_total, load_total), _ = jax.lax.scan(
+                lambda c, p: body(c, (p, None)), (x, aux_total, load_total),
                 params["blocks"])
         else:
-            (x, aux_total), nb = jax.lax.scan(
-                unit_body, (x, aux_total),
+            (x, aux_total, load_total), nb = jax.lax.scan(
+                unit_body, (x, aux_total, load_total),
                 (params["blocks"], caches["blocks"]))
             new_caches["blocks"] = nb
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-        return x, new_caches, aux_total
+        return x, new_caches, aux_total, load_total
 
     def forward_train(params, batch, route_state):
         tokens = batch["tokens"]
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         x = _embed(params, tokens)
-        x, _, aux = _run_stack(params, x, "train", positions=positions,
-                               route_state=route_state)
+        x, _, aux, _ = _run_stack(params, x, "train", positions=positions,
+                                  route_state=route_state)
         return unembed(cfg, params, x), aux
 
-    def prefill(params, batch, route_state, max_seq: int, capacity=None):
+    def prefill(params, batch, route_state, max_seq: int, capacity=None,
+                with_load: bool = False):
         """batch may carry a ``mask`` ([B, S] bool) flagging real tokens;
-        pads then never compete for expert capacity (pad-free dispatch)."""
+        pads then never compete for expert capacity (pad-free dispatch).
+        ``with_load`` (static) appends the summed per-slot dispatch-load
+        counter to the returns (placement-manager telemetry)."""
         tokens = batch["tokens"]
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         caches = init_cache(b, max_seq)
         x = _embed(params, tokens)
-        x, caches, _ = _run_stack(params, x, "prefill", positions=positions,
-                                  caches=caches, route_state=route_state,
-                                  capacity=capacity,
-                                  token_mask=batch.get("mask"))
-        return unembed(cfg, params, x[:, -1]), caches
+        x, caches, _, load = _run_stack(
+            params, x, "prefill", positions=positions, caches=caches,
+            route_state=route_state, capacity=capacity,
+            token_mask=batch.get("mask"))
+        logits = unembed(cfg, params, x[:, -1])
+        return (logits, caches, load) if with_load else (logits, caches)
 
     def prefill_chunk(params, tokens, positions, caches, route_state,
-                      capacity=None):
+                      capacity=None, with_load: bool = False):
         """One budgeted prefill chunk over the shared slot-partitioned
         cache. tokens: [B, C] int32; positions: [B, C] absolute prompt
         positions (-1 = chunk padding or a row not in this chunk call —
@@ -245,18 +261,25 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
         generated token rides the decode step, like the padded scheme)."""
         x = _embed(params, tokens)
         mask = positions >= 0
-        x, caches, _ = _run_stack(params, x, "chunk", positions=positions,
-                                  caches=caches, route_state=route_state,
-                                  capacity=capacity, token_mask=mask)
-        return caches
+        x, caches, _, load = _run_stack(
+            params, x, "chunk", positions=positions, caches=caches,
+            route_state=route_state, capacity=capacity, token_mask=mask)
+        return (caches, load) if with_load else caches
 
-    def decode(params, tokens, pos, caches, route_state, capacity=None):
-        """tokens: [B] int32; pos: [B] absolute positions."""
+    def decode(params, tokens, pos, caches, route_state, capacity=None,
+               with_load: bool = False):
+        """tokens: [B] int32; pos: [B] absolute positions. Rows not decoding
+        this step carry pos -1: they are masked out of expert-capacity
+        competition (and out of the dispatch-load telemetry) exactly like
+        prefill pads."""
         x = _embed(params, tokens[:, None])
-        x, caches, _ = _run_stack(params, x, "decode", pos=pos,
-                                  caches=caches, route_state=route_state,
-                                  capacity=capacity)
-        return unembed(cfg, params, x[:, 0]), caches
+        x, caches, _, load = _run_stack(params, x, "decode", pos=pos,
+                                        caches=caches,
+                                        route_state=route_state,
+                                        capacity=capacity,
+                                        token_mask=(pos >= 0)[:, None])
+        logits = unembed(cfg, params, x[:, 0])
+        return (logits, caches, load) if with_load else (logits, caches)
 
     def init_route_state():
         if placement is None:
@@ -264,9 +287,11 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                 candidates=jnp.zeros((0, 2), jnp.int32),
                 ew_health=jnp.ones((num_ew,), bool),
                 aw_health=jnp.ones((num_aw,), bool),
-                shadow_assignment=jnp.zeros((0,), jnp.int32))
+                slot_expert=jnp.zeros((0,), jnp.int32),
+                slot_owner=jnp.zeros((0,), jnp.int32),
+                split_slot=jnp.zeros((0,), jnp.int32))
         return refe.RouteState.healthy(placement, num_aw)
 
     return ModelApi(cfg, placement, num_aw, num_ew, init_params, init_cache,
                     forward_train, prefill, decode, init_route_state,
-                    prefill_chunk=prefill_chunk)
+                    prefill_chunk=prefill_chunk, reports_load=True)

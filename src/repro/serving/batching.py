@@ -180,13 +180,15 @@ class ContinuousBatchScheduler:
         # must not mask its tokens; EW health still applies (shadow reroute)
         rs_pre = eng.route_state._replace(
             aw_health=jnp.ones_like(eng.route_state.aw_health))
-        if eng.prefill_masked:
-            last_logits, req_cache = eng._prefill(
+        kw = {"capacity": capacity} if eng.prefill_masked else {}
+        if eng.collect_load:
+            last_logits, req_cache, load = eng._prefill(
                 eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq,
-                capacity=capacity)
+                with_load=True, **kw)
+            eng.note_dispatch_load(load)
         else:
             last_logits, req_cache = eng._prefill(
-                eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq)
+                eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq, **kw)
         last_logits = np.asarray(last_logits)
 
         self.stats.calls += 1
@@ -309,9 +311,16 @@ class ContinuousBatchScheduler:
         for r in act:
             tokens[r.slot] = r.next_input
             pos[r.slot] = r.pos
-        logits, eng.cache = eng._decode(
-            eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
-            eng.route_state, capacity=eng.decode_capacity)
+        if eng.collect_load:
+            logits, eng.cache, load = eng._decode(
+                eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
+                eng.route_state, capacity=eng.decode_capacity,
+                with_load=True)
+            eng.note_dispatch_load(load)
+        else:
+            logits, eng.cache = eng._decode(
+                eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
+                eng.route_state, capacity=eng.decode_capacity)
         logits = np.asarray(logits)
 
         ck_reqs = [r for r in act

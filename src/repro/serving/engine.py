@@ -37,6 +37,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import selfheal
 from repro.core.checkpoint import CheckpointStore
+from repro.core.orchestrator import WorkerEvent
+from repro.core.placement import ExpertPlacementManager, PlacementPlan
 from repro.core.refe import RouteState
 from repro.models import get_model
 from repro.serving.batching import ContinuousBatchScheduler
@@ -53,6 +55,9 @@ class EngineConfig:
     max_seq: int = 96
     num_aw: int = 2
     num_ew: int = 2
+    max_ew: int = 0                # elastic EW pool ceiling (spare worker
+    #                                ids the Orchestrator can scale out
+    #                                into; 0 = num_ew, i.e. no spares)
     tarragon: bool = True          # False = MegaScale-style static binding
     checkpoint: bool = True
     checkpoint_reorder: int = 0    # test hook: reorder window for WR arrival
@@ -126,8 +131,24 @@ class InferenceEngine:
                                     self.store,
                                     reorder_window=ecfg.checkpoint_reorder)
                     for a in range(ecfg.num_aw)]
-        self.ews = [ExpertWorker(e) for e in range(ecfg.num_ew)]
+        max_ew = max(ecfg.max_ew or ecfg.num_ew, ecfg.num_ew)
+        self.ews = [ExpertWorker(e, member=e < ecfg.num_ew)
+                    for e in range(max_ew)]
         self.slots = ClusterSlotView(self.aws, ecfg.max_batch)
+
+        # ---- elastic expert plane (core/placement.py) ---------------------
+        # versioned placement plans + load telemetry; the manager's arrays
+        # ride RouteState, so every plan install is trace-free
+        self.placement_mgr: Optional[ExpertPlacementManager] = None
+        self.plan_log: List[WorkerEvent] = []
+        if ecfg.tarragon and self.api.placement is not None:
+            self.placement_mgr = ExpertPlacementManager(
+                self.api.placement, ecfg.num_ew, max_ew=max_ew)
+            self.route_state = self.route_state._replace(
+                ew_health=jnp.asarray(self.placement_mgr.ew_member_mask()),
+                **self._plan_arrays(self.placement_mgr.plan))
+        self.collect_load = (self.placement_mgr is not None and
+                             self.api.reports_load)
 
         # ---- request plane ------------------------------------------------
         self.gateway = Gateway(self.aws, policy=ecfg.placement)
@@ -137,14 +158,16 @@ class InferenceEngine:
 
         # ---- jitted step functions ---------------------------------------
         self._extract = self.layout.make_batched_extractor()
+        load_static = ("with_load",) if self.api.reports_load else ()
         self._decode = jax.jit(self.api.decode,
-                               static_argnames=("capacity",))
+                               static_argnames=("capacity",) + load_static)
         # pad-free dispatch (batch["mask"] + real-token capacity) is a
         # transformer-family extension, marked by the prefill_chunk entry
         self.prefill_masked = self.api.prefill_chunk is not None
         pre_static = ("max_seq", "capacity") if self.prefill_masked \
             else ("max_seq",)
-        self._prefill = jax.jit(self.api.prefill, static_argnames=pre_static)
+        self._prefill = jax.jit(self.api.prefill,
+                                static_argnames=pre_static + load_static)
         self._sample_rng = np.random.default_rng(ecfg.sample_seed)
         self.steps = 0
 
@@ -175,8 +198,9 @@ class InferenceEngine:
                     f"to be multiples of PREFILL_BLOCK_K="
                     f"{PREFILL_BLOCK_K} (got max_seq={ecfg.max_seq}, "
                     f"prefill_bucket={ecfg.prefill_bucket})")
-            self._prefill_chunk = jax.jit(self.api.prefill_chunk,
-                                          static_argnames=("capacity",))
+            self._prefill_chunk = jax.jit(
+                self.api.prefill_chunk,
+                static_argnames=("capacity",) + load_static)
             self.chunked = ChunkedPrefillPlane(
                 self, ecfg.chunk_token_budget, min_chunk=ecfg.chunk_min)
             self.gateway.prefill_load = self.chunked.outstanding_tokens
@@ -296,7 +320,11 @@ class InferenceEngine:
 
     @property
     def failed_ews(self) -> set:
-        return {w.ew_id for w in self.ews if not w.alive}
+        return {w.ew_id for w in self.ews if w.member and not w.alive}
+
+    @property
+    def live_ews(self) -> set:
+        return {w.ew_id for w in self.ews if w.member and w.alive}
 
     @property
     def checkpointers(self) -> dict:
@@ -346,37 +374,114 @@ class InferenceEngine:
         in_use = {r.slot for r in self.active_requests()}
         self.route_state = self.aws[aw].provision(self.route_state, in_use)
 
-    def provision_ew(self, ew: int, repoint_protect: Optional[int] = None):
+    def provision_ew(self, ew: int, repoint_protect: Optional[int] = None,
+                     now: float = 0.0):
         self.route_state = self.ews[ew].provision(self.route_state)
+        if self.placement_mgr is not None and \
+                ew not in self.placement_mgr.members:
+            self.placement_mgr.members = sorted(
+                self.placement_mgr.members + [ew])
         if repoint_protect is not None:
-            self.repoint_shadows(repoint_protect)
+            self.repoint_shadows(repoint_protect, now=now)
 
-    def repoint_shadows(self, protect_ew: int):
-        """Background re-pointing of shadow slots (host-side weight push)."""
+    def repoint_shadows(self, protect_ew: int, now: float = 0.0):
+        """Background re-pointing of replica slots to protect ``protect_ew``
+        (host-side weight push, off the failover critical path). With a
+        placement manager this is a versioned plan install; the bank is
+        gathered through ``slot_expert``, so no parameter surgery either
+        way."""
         if self.api.placement is None or \
                 self.api.placement.num_shadow_slots == 0:
             return
-        new_rs = None
+        if self.placement_mgr is not None:
+            self.install_plan(
+                self.placement_mgr.plan_reprotect(
+                    protect_ew, dead_ews=tuple(self.failed_ews)), now=now)
+        else:
+            self.route_state = selfheal.repoint_shadows(
+                self.route_state, self.api.placement, protect_ew)
 
-        def walk(node):
-            nonlocal new_rs
-            if isinstance(node, dict):
-                if "experts" in node and "shadow" in node:
-                    rs2, bank = selfheal.repoint_shadows(
-                        self.route_state, self.api.placement,
-                        node["experts"], protect_ew)
-                    new_rs = rs2
-                    node = dict(node)
-                    node["shadow"] = bank
-                    return node
-                return {k: walk(v) for k, v in node.items()}
-            if isinstance(node, tuple):
-                return tuple(walk(v) for v in node)
-            return node
+    # ------------------------------------------------------------------
+    # elastic expert plane (core/placement.py): versioned plan installs,
+    # EW scale-out/scale-in, shadow promotion, load-aware rebalancing.
+    # Every transition below is a pure RouteState array update — the jitted
+    # decode/prefill steps never re-trace across placement generations.
+    # ------------------------------------------------------------------
+    def _plan_arrays(self, plan: PlacementPlan) -> dict:
+        return dict(
+            candidates=jnp.asarray(plan.candidates(), jnp.int32),
+            slot_expert=jnp.asarray(plan.slot_expert, jnp.int32),
+            slot_owner=jnp.asarray(plan.slot_owner, jnp.int32),
+            split_slot=jnp.asarray(plan.split_slot, jnp.int32))
 
-        self.params = walk(self.params)
-        if new_rs is not None:
-            self.route_state = new_rs
+    def install_plan(self, plan: PlacementPlan, now: float = 0.0,
+                     detail: str = ""):
+        """Activate a placement generation (post-T_push: the orchestrator
+        has already charged the weight-push time to the virtual clock)."""
+        self.route_state = self.route_state._replace(
+            **self._plan_arrays(plan))
+        self.plan_log.append(WorkerEvent(
+            now, "placement_changed", f"gen{plan.generation}",
+            detail or plan.reason))
+
+    def drain_plan_events(self) -> List[WorkerEvent]:
+        evs, self.plan_log = self.plan_log, []
+        return evs
+
+    @property
+    def placement_generation(self) -> int:
+        return self.placement_mgr.plan.generation \
+            if self.placement_mgr is not None else 0
+
+    def note_dispatch_load(self, slot_load):
+        """Drain a device-side per-slot dispatch counter into the placement
+        manager's EMA (the telemetry behind load-aware decisions)."""
+        if self.placement_mgr is not None:
+            self.placement_mgr.record_slot_load(np.asarray(slot_load))
+
+    def choose_protect_ew(self, exclude=()) -> Optional[int]:
+        if self.placement_mgr is None:
+            return None
+        return self.placement_mgr.choose_protect_ew(tuple(exclude))
+
+    def add_ew(self, now: float = 0.0) -> int:
+        """Scale-out: admit a spare EW into the pool (layer-aligned join —
+        the plan installs between steps, after the orchestrator charged
+        T_w + T_push)."""
+        assert self.placement_mgr is not None, "elastic plane requires MoE"
+        new_ew, plan = self.placement_mgr.plan_scale_out()
+        self.route_state = self.ews[new_ew].provision(self.route_state)
+        self.install_plan(plan, now=now)
+        return new_ew
+
+    def drain_ew(self, ew: int, now: float = 0.0):
+        """Graceful scale-in: the EW's resident experts have been migrated
+        (T_push already charged); it leaves the pool as a spare."""
+        assert self.placement_mgr is not None
+        plan = self.placement_mgr.plan_scale_in(ew)
+        self.install_plan(plan, now=now)
+        self.route_state = self.ews[ew].retire(self.route_state)
+
+    def promote_shadows(self, dead_ew: int, now: float = 0.0):
+        """Permanent shadow promotion: instead of waiting for revival, the
+        dead EW's replicas become primaries and the pool shrinks. Instant
+        and push-free — promotion is an ERT flip, the weights are already
+        resident (§5.3 taken to its logical end)."""
+        assert self.placement_mgr is not None
+        plan = self.placement_mgr.promote_shadows(dead_ew)
+        self.ews[dead_ew].member = False
+        self.install_plan(plan, now=now)
+
+    def rebalance(self, now: float = 0.0) -> Optional[PlacementPlan]:
+        """Load-aware re-packing of experts over the currently *healthy*
+        pool members (a failed EW awaiting revival must not be handed
+        primaries it cannot serve)."""
+        if self.placement_mgr is None:
+            return None
+        plan = self.placement_mgr.plan_rebalance(
+            live=tuple(self.live_ews))
+        self.install_plan(plan, now=now)
+        return plan
 
     def release_request(self, rid: str):
         r = self.requests.pop(rid, None)

@@ -81,10 +81,21 @@ class FailurePlan:
     worker_id: int
 
 
+@dataclass
+class ScalePlan:
+    """Elasticity event on the serving timeline: at virtual time ``t`` ask
+    the orchestrator to grow/shrink/re-pack the EW pool (completion lands
+    T_w/T_push later on the same clock)."""
+    t: float
+    kind: str           # "add_ew" | "drain_ew" | "rebalance"
+    worker_id: int = -1  # only for drain_ew
+
+
 def run_serving(engine: InferenceEngine, workload: List[Request],
                 duration: float, *,
                 orchestrator: Optional[Orchestrator] = None,
                 failures: List[FailurePlan] = (),
+                scale_events: List[ScalePlan] = (),
                 step_time: Optional[float] = None,
                 prefill_token_time: Optional[float] = None,
                 max_steps: int = 100000) -> ServeMetrics:
@@ -99,6 +110,7 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     pending = sorted(workload, key=lambda r: r.arrival)
     qi = 0
     injected = [False] * len(failures)
+    scaled = [False] * len(scale_events)
     steps = 0
     seen_first = set()
     while clock < duration and steps < max_steps:
@@ -108,6 +120,20 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 assert orchestrator is not None
                 orchestrator.inject_failure(f.kind, f.worker_id, clock)
                 injected[i] = True
+        # elasticity requests (completion is clocked by the orchestrator)
+        for i, s in enumerate(scale_events):
+            if not scaled[i] and clock >= s.t:
+                assert orchestrator is not None
+                if s.kind == "add_ew":
+                    orchestrator.request_scale_out(clock)
+                elif s.kind == "drain_ew":
+                    orchestrator.request_scale_in(s.worker_id, clock)
+                elif s.kind == "rebalance":
+                    orchestrator.request_rebalance(clock)
+                else:
+                    raise ValueError(f"unknown scale event kind {s.kind!r}"
+                                     " (add_ew | drain_ew | rebalance)")
+                scaled[i] = True
         if orchestrator is not None:
             orchestrator.tick(clock)
         # arrivals enter the Gateway's FIFO queue (never dropped);
@@ -130,9 +156,12 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
         if prefill_token_time is not None:
             dt += (engine.prefill_tokens_done() - pf0) * prefill_token_time
         if not out:
-            # idle tick: quit once nothing can ever make progress again
+            # idle tick: quit once nothing can ever make progress again —
+            # including scheduled failure/scale injections that have not
+            # reached their trigger time yet
             if qi >= len(pending) and not engine.active_requests() and \
                     not engine.prefilling_requests() and \
+                    all(injected) and all(scaled) and \
                     (orchestrator is None or orchestrator.outstanding == 0):
                 break
             dt = max(dt, 1e-3)

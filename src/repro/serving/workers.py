@@ -23,7 +23,8 @@ simulation of the multi-host datapath).
 """
 from __future__ import annotations
 
-from typing import List, Set
+from collections import deque
+from typing import Deque, List, Set
 
 from repro.core import selfheal
 from repro.core.checkpoint import CheckpointStore, KVCheckpointer
@@ -32,11 +33,14 @@ from repro.core.refe import RouteState
 
 class SlotPartition:
     """Free-list over one AW's contiguous slot range [lo, hi) of the shared
-    batch dimension (data-parallel request ownership)."""
+    batch dimension (data-parallel request ownership). The free list is a
+    deque: alloc pops the front, release pushes the front (LIFO reuse keeps
+    recently-cleared slots hot), both O(1) instead of list.pop(0) /
+    list.insert(0, ...)'s O(n) shifting."""
 
     def __init__(self, lo: int, hi: int):
         self.lo, self.hi = lo, hi
-        self._free: List[int] = list(range(lo, hi))
+        self._free: Deque[int] = deque(range(lo, hi))
 
     @property
     def capacity(self) -> int:
@@ -49,18 +53,19 @@ class SlotPartition:
         return self.lo <= slot < self.hi
 
     def alloc(self) -> int:
-        return self._free.pop(0)
+        return self._free.popleft()
 
     def release(self, slot: int):
         assert self.owns(slot)
-        self._free.insert(0, slot)
+        self._free.appendleft(slot)
 
     def drop(self):
         """The partition's slots become unusable (worker crash)."""
-        self._free = []
+        self._free = deque()
 
     def restore(self, in_use: Set[int]):
-        self._free = [s for s in range(self.lo, self.hi) if s not in in_use]
+        self._free = deque(s for s in range(self.lo, self.hi)
+                           if s not in in_use)
 
 
 class AttentionWorker:
@@ -116,13 +121,19 @@ class AttentionWorker:
 
 
 class ExpertWorker:
-    """One EW: liveness only — expert reachability lives in the RouteState
-    (ERT candidates + ew_health), which the AW-side routing consumes on the
-    next step without recompilation."""
+    """One EW: liveness + pool membership — expert reachability lives in the
+    RouteState (ERT candidates + ew_health), which the AW-side routing
+    consumes on the next step without recompilation.
 
-    def __init__(self, ew_id: int):
+    ``member`` distinguishes the elastic pool states: a spare EW
+    (member=False, alive=False) exists only as reserved health-mask
+    capacity until a scale-out admits it; a drained/promoted-away EW
+    returns to spare. ``fail()`` is only meaningful for members."""
+
+    def __init__(self, ew_id: int, member: bool = True):
         self.ew_id = ew_id
-        self.alive = True
+        self.member = member
+        self.alive = member
 
     def fail(self, route_state: RouteState) -> RouteState:
         self.alive = False
@@ -130,10 +141,20 @@ class ExpertWorker:
 
     def provision(self, route_state: RouteState) -> RouteState:
         self.alive = True
+        self.member = True
         return selfheal.recover_ew(route_state, self.ew_id)
 
+    def retire(self, route_state: RouteState) -> RouteState:
+        """Leave the pool (graceful drain or permanent shadow promotion):
+        the worker becomes a spare, its slots' reachability drops out via
+        the health mask."""
+        self.alive = False
+        self.member = False
+        return selfheal.fail_ew(route_state, self.ew_id)
+
     def __repr__(self):
-        return f"EW{self.ew_id}(alive={self.alive})"
+        return (f"EW{self.ew_id}(alive={self.alive}, "
+                f"member={self.member})")
 
 
 class ClusterSlotView:

@@ -94,7 +94,9 @@ def test_slot_partitions_and_failure():
     rs = RouteState(candidates=_jnp.zeros((0, 2), _jnp.int32),
                     ew_health=_jnp.ones((2,), bool),
                     aw_health=_jnp.ones((2,), bool),
-                    shadow_assignment=_jnp.zeros((0,), _jnp.int32))
+                    slot_expert=_jnp.zeros((0,), _jnp.int32),
+                    slot_owner=_jnp.zeros((0,), _jnp.int32),
+                    split_slot=_jnp.zeros((0,), _jnp.int32))
     rs = aws[0].fail(rs)
     assert not bool(rs.aw_health[0])
     assert sm.free_count(0) == 0

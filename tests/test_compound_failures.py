@@ -1,0 +1,147 @@
+"""Compound-failure tests: multiple workers dying inside each other's
+recovery windows. The bar is the paper's end-to-end exactness claim applied
+to *overlapping* failures — no lost requests, outputs bit-identical to the
+failure-free run — which exercises the elastic placement plane's pinned
+failover replicas (plan_reprotect's dead_ews contract) and the per-request
+restoration path simultaneously."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from conftest import reduced
+from repro.core.orchestrator import Orchestrator
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+PROMPT_A = np.arange(1, 9, dtype=np.int32)
+PROMPT_B = np.arange(2, 10, dtype=np.int32)
+
+
+def make_engine(num_ew=2, num_shadow=None, **kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    if num_shadow is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, num_shadow_slots=num_shadow))
+    defaults = dict(max_batch=8, max_seq=48, num_aw=2, num_ew=num_ew)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(7))
+
+
+def _dual_protected_engine():
+    """3-EW pool with a custom placement generation: every expert of EW0
+    AND EW1 has a failover replica on EW2 (the default layout only protects
+    one EW at a time). 4 experts over 3 EWs with 6 shadow slots -> EW2 owns
+    exactly 4 slots (primary pads 4,5 + shadows 8,11)."""
+    eng = make_engine(num_ew=3, num_shadow=6)
+    mgr = eng.placement_mgr
+    p = eng.api.placement
+    assert p.primary_slots == 6 and p.num_slots == 12
+    owner = p.slot_owner()
+    ew2_slots = [s for s in range(p.num_slots) if owner[s] == 2]
+    assert len(ew2_slots) == 4
+    slot_expert = np.full((p.num_slots,), -1, np.int32)
+    slot_expert[:4] = np.arange(4)                  # identity primaries
+    for ex, s in enumerate(ew2_slots):              # all replicas on EW2
+        slot_expert[s] = ex
+    plan = mgr.adopt(slot_expert, reason="dual protect ew0+ew1")
+    eng.install_plan(plan)
+    cand = plan.candidates()
+    assert all(cand[e, 1] >= 0 and owner[cand[e, 1]] == 2 for e in range(4))
+    return eng
+
+
+def test_ew_dies_while_other_ew_mid_provision():
+    """EW0 fails; while its replacement is still provisioning (T_w), EW1
+    fails too. With both EWs' experts replica-covered on EW2, every token
+    matches the failure-free run and nothing is lost."""
+    ref_a = _dual_protected_engine().generate("a", PROMPT_A, 16)
+    ref_b = _dual_protected_engine().generate("b", PROMPT_B, 16)
+
+    eng = _dual_protected_engine()
+    orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.2)
+    eng.submit("a", PROMPT_A, 16)
+    eng.submit("b", PROMPT_B, 16)
+    for _ in range(4):
+        eng.step()
+    orch.inject_failure("ew", 0, now=10.0)
+    fired = orch.tick(10.0 + orch.detection_latency() + 1e-6)
+    assert any(e.kind == "detected" for e in fired)
+    assert eng.failed_ews == {0}
+    for _ in range(3):
+        eng.step()
+    # EW0's replacement is mid-provision (ready ~11.03+T_w) when EW1 dies
+    orch.inject_failure("ew", 1, now=10.5)
+    fired = orch.tick(10.5 + orch.detection_latency() + 1e-6)
+    assert any(e.kind == "detected" for e in fired)
+    assert eng.failed_ews == {0, 1}
+    while eng.active_requests():
+        eng.step()
+    assert eng.requests["a"].tokens == ref_a
+    assert eng.requests["b"].tokens == ref_b
+    # both replacements eventually provision; re-pointing while EW1 was
+    # still down must have pinned its failover replicas (dead_ews contract)
+    orch.tick(11.2)
+    assert eng.failed_ews == {1}
+    from repro.core import selfheal
+    assert selfheal.experts_without_healthy_replica(
+        eng.route_state, eng.api.placement).size == 0
+    orch.tick(11.8)
+    assert eng.failed_ews == set()
+    assert orch.outstanding == 0
+
+
+def test_aw_and_ew_die_in_same_detection_window():
+    """AW0 and EW0 fail inside one detection window: per-request restoration
+    (checkpointed KV onto AW1) composes with the shadow failover (EW0's
+    experts re-pointed to replicas) — bit-identical, nothing lost."""
+    ref_a = make_engine().generate("a", PROMPT_A, 14)
+    ref_b = make_engine().generate("b", PROMPT_B, 14)
+
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    eng.submit("a", PROMPT_A, 14)     # -> AW0 (least loaded, lowest id)
+    eng.submit("b", PROMPT_B, 14)     # -> AW1
+    for _ in range(4):
+        eng.step()
+    assert eng.requests["a"].aw == 0 and eng.requests["b"].aw == 1
+    orch.inject_failure("aw", 0, now=5.0)
+    orch.inject_failure("ew", 0, now=5.0)
+    fired = orch.tick(5.0 + orch.detection_latency() + 1e-6)
+    assert sorted(e.kind for e in fired) == ["detected", "detected"]
+    assert eng.failed_aws == {0} and eng.failed_ews == {0}
+    assert eng.requests["a"].aw == 1          # restored onto the healthy AW
+    while eng.active_requests():
+        eng.step()
+    assert eng.requests["a"].tokens == ref_a
+    assert eng.requests["b"].tokens == ref_b
+    assert eng.store.stats.restores == 1
+    # background provisioning restores the full pool
+    orch.tick(7.0)
+    assert eng.failed_aws == set() and eng.failed_ews == set()
+    assert orch.outstanding == 0
+
+
+def test_compound_failure_during_chunked_prefill():
+    """AW dies mid-chunked-prefill AND an EW dies in the same window: the
+    prefill stream resumes from its committed cursor on the healthy AW
+    while expert traffic rides the shadows — the finished output equals the
+    failure-free run's."""
+    long_prompt = np.arange(1, 33, dtype=np.int32)
+    kw = dict(chunk_token_budget=8, prefill_bucket=16, max_seq=64)
+    ref = make_engine(**kw).generate("r", long_prompt, 10)
+
+    eng = make_engine(**kw)
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    eng.submit("r", long_prompt, 10)
+    eng.step()                                  # a budgeted chunk lands
+    r = eng.requests["r"]
+    assert r.prefilling and r.prefill_cursor > 0
+    aw = r.aw
+    orch.inject_failure("aw", aw, now=3.0)
+    orch.inject_failure("ew", 0, now=3.0)
+    orch.tick(3.0 + orch.detection_latency() + 1e-6)
+    while not eng.requests["r"].done:
+        eng.step()
+    assert eng.requests["r"].tokens == ref
+    assert eng.chunked.stats.resumed == 1       # stream resumed, not redone

@@ -173,9 +173,7 @@ def test_expert_io_reroutes_to_shadow_exactly():
     x = jax.random.normal(key, (t, d))
     logits = jax.random.normal(jax.random.fold_in(key, 3), (t, e))
     w = jax.random.normal(jax.random.fold_in(key, 4), (e, d, d)) * 0.1
-    bank_w = shadow_lib.full_slot_bank(
-        {"w": w}, shadow_lib.sync_shadow_bank(
-            {"w": w}, rs.shadow_assignment), p.primary_slots)["w"]
+    bank_w = shadow_lib.resident_slot_bank({"w": w}, rs.slot_expert)["w"]
 
     def expert_fn(expert_in):
         return jnp.einsum("pcd,pde->pce", expert_in, bank_w)

@@ -93,7 +93,9 @@ def _dummy_rs(num_aw):
     return RouteState(candidates=jnp.zeros((0, 2), jnp.int32),
                       ew_health=jnp.ones((2,), bool),
                       aw_health=jnp.ones((num_aw,), bool),
-                      shadow_assignment=jnp.zeros((0,), jnp.int32))
+                      slot_expert=jnp.zeros((0,), jnp.int32),
+                      slot_owner=jnp.zeros((0,), jnp.int32),
+                      split_slot=jnp.zeros((0,), jnp.int32))
 
 
 def test_fail_aw_without_checkpoint_does_not_strand_requests():

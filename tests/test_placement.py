@@ -1,0 +1,309 @@
+"""Elastic expert-plane tests (PR-3 tentpole): versioned placement plans,
+load-aware rebalancing, EW scale-out/in, shadow promotion — and the critical
+invariant that every placement change is a pure array update (ZERO new jit
+traces of the decode/prefill steps)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.configs import get_config
+from repro.core import ert as ert_lib
+from repro.core import refe
+from repro.core.orchestrator import Orchestrator
+from repro.core.placement import ExpertPlacementManager
+from repro.data.workloads import make_workload
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(num_ew=2, max_ew=0, num_experts=0, **kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    if num_experts:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, num_experts=num_experts))
+    ecfg = EngineConfig(max_batch=8, max_seq=48, num_aw=2, num_ew=num_ew,
+                        max_ew=max_ew, **kw)
+    return InferenceEngine(cfg, ecfg, jax.random.PRNGKey(7))
+
+
+# --------------------------------------------------------------------------
+# manager unit tests (host-side plan computation)
+# --------------------------------------------------------------------------
+
+def _manager(e=8, num_ew=4, max_ew=0):
+    p = ert_lib.default_placement(e, num_ew)
+    return p, ExpertPlacementManager(p, num_ew, max_ew=max_ew)
+
+
+def test_initial_plan_matches_legacy_layout():
+    p, mgr = _manager()
+    plan = mgr.plan
+    assert plan.generation == 0
+    np.testing.assert_array_equal(plan.slot_owner, p.slot_owner())
+    assign = ert_lib.initial_shadow_assignment(p)
+    np.testing.assert_array_equal(plan.slot_expert,
+                                  ert_lib.initial_slot_expert(p, assign))
+    np.testing.assert_array_equal(plan.candidates(),
+                                  ert_lib.build_candidates(p, assign))
+
+
+def _check_plan_invariants(p, plan, members):
+    owner = plan.slot_owner
+    # owners are members or parked; every expert has a primary on a member
+    assert set(np.unique(owner)) <= set(members) | {-1}
+    cand = plan.candidates()
+    for e in range(p.num_experts):
+        pr = plan.primary[e]
+        assert pr >= 0 and plan.slot_expert[pr] == e
+        assert owner[pr] in members
+        # replica (if any) lives on a DIFFERENT EW than the primary
+        if cand[e, 1] >= 0:
+            assert owner[cand[e, 1]] != owner[pr]
+            assert plan.slot_expert[cand[e, 1]] == e
+
+
+def test_scale_out_in_roundtrip_keeps_experts_placed():
+    p, mgr = _manager(e=8, num_ew=2, max_ew=4)
+    new_ew, plan = mgr.plan_scale_out()
+    assert new_ew == 2 and plan.generation == 1
+    assert len(plan.slots_of_ew(new_ew)) > 0          # joiner got slots
+    _check_plan_invariants(p, plan, {0, 1, 2})
+    plan2 = mgr.plan_scale_in(2)
+    assert plan2.generation == 2
+    assert len(plan2.slots_of_ew(2)) == 0             # drained EW parked
+    _check_plan_invariants(p, plan2, {0, 1})
+
+
+def test_promotion_flips_primaries_to_replicas():
+    p, mgr = _manager(e=8, num_ew=4)
+    gen0 = mgr.plan
+    cand0 = gen0.candidates()
+    protected = [e for e in range(p.num_experts)
+                 if gen0.slot_owner[gen0.primary[e]] == 0]
+    plan = mgr.promote_shadows(0)
+    assert plan.generation == 1 and 0 not in plan.members
+    for e in protected:
+        # shadow promoted to primary, permanently, on a live EW
+        assert plan.primary[e] == cand0[e, 1]
+        assert plan.slot_owner[plan.primary[e]] in plan.members
+    # the dead EW's slots are parked (weights died with it)
+    assert not np.any(plan.slot_owner == 0)
+
+
+def test_rebalance_during_revival_avoids_dead_member():
+    """A failed-but-member EW (revival in flight) must receive no primaries
+    from a rebalance — and the plan must stay output-exact."""
+    eng = make_engine(num_ew=2)
+    eng.submit("r0", PROMPT, 20)
+    for _ in range(4):
+        eng.step()
+    ref = list(eng.requests["r0"].tokens)
+    eng.fail_ew(0)                       # revive policy: still a member
+    plan = eng.rebalance(now=1.0)
+    owner = plan.slot_owner
+    assert all(owner[plan.primary[e]] == 1
+               for e in range(eng.api.placement.num_experts))
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens[:len(ref)] == ref
+
+
+def test_reprotect_never_places_replicas_on_dead_ews():
+    p, mgr = _manager(e=8, num_ew=4)
+    plan = mgr.plan_reprotect(2, dead_ews=(1,))
+    for s in range(plan.num_slots):
+        ex = plan.slot_expert[s]
+        if ex >= 0 and s != plan.primary[ex]:
+            assert plan.slot_owner[s] != 1   # no fresh replica on dead EW1
+
+
+def test_reprotect_keeps_failover_replicas_of_dead_ew():
+    """Re-pointing replicas while another EW is down must not recycle the
+    failover copies that are currently the only reachable path."""
+    p, mgr = _manager(e=8, num_ew=4)
+    plan0 = mgr.plan
+    cand0 = plan0.candidates()
+    covered = [e for e in range(p.num_experts) if cand0[e, 1] >= 0 and
+               plan0.slot_owner[plan0.primary[e]] == 0]
+    assert covered                                      # shadows protect EW0
+    plan = mgr.plan_reprotect(2, dead_ews=(0,))
+    cand = plan.candidates()
+    for e in covered:                                   # EW0 is down: its
+        assert cand[e, 1] == cand0[e, 1]                # replicas are pinned
+
+
+def test_rebalance_spreads_skewed_load():
+    p, mgr = _manager(e=16, num_ew=4)
+    # synthetic skew: experts 0..3 are hot and all primaried on EW0
+    load = np.zeros((p.num_slots,))
+    load[0:4] = 100.0
+    load[4:16] = 1.0
+    for _ in range(20):
+        mgr.record_slot_load(load)
+    assert mgr.imbalance() > 2.0
+    assert mgr.should_rebalance()
+    plan = mgr.plan_rebalance()
+    _check_plan_invariants(p, plan, set(range(4)))
+    # the four hot experts end up on four different EWs
+    hot_ews = {int(plan.slot_owner[plan.primary[e]]) for e in range(4)}
+    assert len(hot_ews) == 4
+    # heaviest-loaded member is the protect pick (no hardcoded neighbor)
+    assert mgr.choose_protect_ew() == 0
+
+
+# --------------------------------------------------------------------------
+# engine-level: zero new traces + output invariance
+# --------------------------------------------------------------------------
+
+def test_placement_changes_never_retrace_decode():
+    """Acceptance criterion: scale-out, rebalance, scale-in, and promotion
+    each complete with ZERO new jit traces of the decode step."""
+    eng = make_engine(num_ew=2, max_ew=4)
+    eng.submit("r0", PROMPT, 40)
+    eng.step()
+    traces = eng._decode._cache_size()
+    assert traces == 1
+    new = eng.add_ew(now=1.0)
+    eng.step()
+    eng.rebalance(now=2.0)
+    eng.step()
+    eng.drain_ew(new, now=3.0)
+    eng.step()
+    eng.fail_ew(0)
+    eng.promote_shadows(0, now=4.0)
+    eng.step()
+    eng.repoint_shadows(1, now=5.0)
+    eng.step()
+    assert eng._decode._cache_size() == traces
+    assert eng.placement_generation == 5
+    kinds = [e.kind for e in eng.plan_log]
+    assert kinds == ["placement_changed"] * 5
+
+
+def test_rebalance_is_output_invariant():
+    """Replica slots serve identical weights: a mid-generation rebalance
+    (and the traffic splitting it enables) must not change a single token."""
+    ref = make_engine(num_experts=16).generate("r", PROMPT, 16)
+    eng = make_engine(num_experts=16)
+    eng.submit("r", PROMPT, 16)
+    for _ in range(5):
+        eng.step()
+    plan = eng.rebalance(now=1.0)
+    assert plan.generation == 1
+    while not eng.requests["r"].done:
+        eng.step()
+    assert eng.requests["r"].tokens == ref
+
+
+def test_scale_out_is_output_invariant():
+    ref = make_engine(num_experts=16).generate("r", PROMPT, 16)
+    eng = make_engine(num_experts=16, max_ew=3)
+    eng.submit("r", PROMPT, 16)
+    for _ in range(5):
+        eng.step()
+    eng.add_ew(now=1.0)
+    while not eng.requests["r"].done:
+        eng.step()
+    assert eng.requests["r"].tokens == ref
+
+
+def test_promotion_is_exact_for_covered_experts():
+    """EW0 fails under the promote policy: shadows become primaries and the
+    pool shrinks — bit-identical to the failure-free run."""
+    ref = make_engine().generate("r0", PROMPT, 14)
+    eng = make_engine()
+    orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.2,
+                        ew_policy="promote")
+    eng.submit("r0", PROMPT, 14)
+    for _ in range(4):
+        eng.step()
+    orch.inject_failure("ew", 0, now=1.0)
+    fired = orch.tick(1.0 + orch.detection_latency() + 1e-6)
+    assert any(e.kind == "detected" and "promoted" in e.detail
+               for e in fired)
+    assert eng.live_ews == {1}
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref
+    # background re-protection lands T_push later, as a new generation
+    fired = orch.tick(1.0 + orch.detection_latency() + 0.2 + 1e-6)
+    assert any(e.kind == "reprotected" for e in fired)
+    assert any(e.kind == "placement_changed" for e in fired)
+
+
+# --------------------------------------------------------------------------
+# device-side load counters + traffic splitting
+# --------------------------------------------------------------------------
+
+def test_dispatch_load_counter_matches_routing():
+    e, k, t = 4, 2, 12
+    p = ert_lib.default_placement(e, 2)
+    rs = refe.RouteState.healthy(p, num_aw=1)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (t, 8))
+    logits = jax.random.normal(jax.random.fold_in(key, 1), (t, e))
+    r = refe.route(x, logits, rs, p, top_k=k, capacity_factor=4.0, batch=t)
+    load = np.asarray(r["slot_load"])
+    assert load.shape == (p.num_slots,)
+    assert load.sum() == np.asarray(r["keep"]).sum()   # every kept dispatch
+    np.testing.assert_array_equal(
+        load, np.bincount(np.asarray(r["slot_idx"]).reshape(-1),
+                          weights=np.asarray(r["keep"]).reshape(-1),
+                          minlength=p.num_slots))
+
+
+def test_split_slot_halves_expert_traffic():
+    """A load-bearing replica takes the odd-parity half of its expert's
+    tokens; outputs are unchanged because the weights are identical."""
+    e, t = 4, 16
+    p = ert_lib.default_placement(e, 2)
+    rs = refe.RouteState.healthy(p, num_aw=1)
+    cand = np.asarray(rs.candidates)
+    target = next(ex for ex in range(e) if cand[ex, 1] >= 0)
+    split = np.full((e,), -1, np.int32)
+    split[target] = cand[target, 1]
+    rs_split = rs._replace(split_slot=refe.jnp.asarray(split))
+    # every token routes to the target expert with top_k=1
+    logits = np.full((t, e), -10.0, np.float32)
+    logits[:, target] = 10.0
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (t, 8)))
+    r = refe.route(refe.jnp.asarray(x), refe.jnp.asarray(logits), rs_split,
+                   p, top_k=1, capacity_factor=0.0, capacity=t, batch=t)
+    load = np.asarray(r["slot_load"])
+    assert load[cand[target, 0]] == t // 2
+    assert load[cand[target, 1]] == t // 2
+    # when the replica's EW dies, everything falls back to the primary
+    dead = rs_split._replace(ew_health=refe.jnp.asarray(
+        np.array([True, False])))
+    r2 = refe.route(refe.jnp.asarray(x), refe.jnp.asarray(logits), dead,
+                    p, top_k=1, capacity_factor=0.0, capacity=t, batch=t)
+    assert np.asarray(r2["slot_load"])[cand[target, 0]] == t
+
+
+def test_engine_drains_load_counters_into_ema():
+    eng = make_engine()
+    eng.submit("r0", PROMPT, 8)
+    for _ in range(6):
+        eng.step()
+    mgr = eng.placement_mgr
+    assert mgr.load.total_recorded > 0
+    assert mgr.load.ema_expert.sum() > 0
+    # load is attributed to the EWs that own the dispatched slots
+    assert sum(mgr.per_ew_load().values()) > 0
+
+
+def test_orchestrator_emits_placement_events():
+    eng = make_engine(max_ew=3)
+    orch = Orchestrator(eng, worker_init_time=0.1, weight_push_time=0.1)
+    eng.submit("r0", PROMPT, 30)
+    eng.step()
+    orch.request_scale_out(now=0.0)
+    fired = orch.tick(0.25)
+    kinds = [e.kind for e in fired]
+    assert "scaled_out" in kinds and "placement_changed" in kinds
+    gen_ev = next(e for e in fired if e.kind == "placement_changed")
+    assert gen_ev.worker == "gen1"

@@ -63,13 +63,18 @@ def test_experts_without_replica_reported():
 
 def test_repoint_shadow_bank_contents():
     import jax
+    from repro.core import shadow as shadow_lib
     p = ert_lib.default_placement(8, 4)
     rs = RouteState.healthy(p, num_aw=1)
     w = jax.random.normal(jax.random.PRNGKey(0), (p.primary_slots, 4, 4))
-    rs2, bank = selfheal.repoint_shadows(rs, p, {"w": w}, protect_ew=3)
-    assign = np.asarray(rs2.shadow_assignment)
-    np.testing.assert_array_equal(np.asarray(bank["w"]),
-                                  np.asarray(w[assign]))
+    rs2 = selfheal.repoint_shadows(rs, p, protect_ew=3)
+    # the slot bank gathers through the re-pointed residency array: every
+    # shadow slot serves its newly assigned expert's weights
+    se = np.asarray(rs2.slot_expert)
+    bank = shadow_lib.resident_slot_bank({"w": w}, rs2.slot_expert)
+    np.testing.assert_array_equal(
+        np.asarray(bank["w"][p.primary_slots:]),
+        np.asarray(w[se[p.primary_slots:]]))
     # every protected expert now has an off-EW candidate
     cand = np.asarray(rs2.candidates)
     owner = p.slot_owner()
