@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine, time_fn
+from repro.serving.api import RequestSpec
 from repro.configs import all_configs
 from repro.core import costmodel as cm
 from repro.core.events import SimConfig, checkpoint_scheme_throughput
@@ -48,10 +49,11 @@ def run():
     # measured: checkpointing on vs off, real engine decode steps
     prompt = np.arange(1, 11, dtype=np.int32)
     eng_on = reduced_engine(checkpoint=True, seed=2)
-    eng_on.submit("r", prompt, 80)
+    eng_on.client.submit(RequestSpec(rid="r", prompt=prompt, max_new=80))
     t_on = time_fn(lambda: eng_on.step(), warmup=3, iters=12)
     eng_off = reduced_engine(checkpoint=False, seed=2)
-    eng_off.submit("r", prompt, 80)
+    eng_off.client.submit(RequestSpec(rid="r", prompt=prompt,
+                                      max_new=80))
     t_off = time_fn(lambda: eng_off.step(), warmup=3, iters=12)
     over = (t_on - t_off) / t_off * 100
     rows.append(Row("ckpt/engine_step_overhead", t_on * 1e6,

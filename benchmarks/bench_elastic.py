@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import Row
+from repro.serving.api import RequestSpec
 from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
 from repro.data.workloads import make_workload
@@ -73,8 +74,10 @@ def _measure_rebalance():
     for label, do_rebalance in (("static", False), ("rebalanced", True)):
         eng = _elastic_engine(num_ew=4)
         for w in _skewed_requests(8):
-            eng.submit(w.request_id, w.prompt_tokens(eng.cfg.vocab_size),
-                       w.max_new_tokens)
+            eng.client.submit(RequestSpec(
+                rid=w.request_id,
+                prompt=w.prompt_tokens(eng.cfg.vocab_size),
+                max_new=w.max_new_tokens))
         traj = []
         for _ in range(steps_warm):
             eng.step()

@@ -7,6 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine
+from repro.serving.api import RequestSpec
 from repro.core.events import (SimConfig, failover_summary,
                                simulate_megascale_failure,
                                simulate_tarragon_aw_failure,
@@ -37,7 +38,7 @@ def run():
     prompt = np.arange(1, 9, dtype=np.int32)
     ref = reduced_engine(seed=7).generate("r", prompt, 12)
     eng = reduced_engine(seed=7)
-    eng.submit("r", prompt, 12)
+    eng.client.submit(RequestSpec(rid="r", prompt=prompt, max_new=12))
     for _ in range(4):
         eng.step()
     eng.fail_ew(0)

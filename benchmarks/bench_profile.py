@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine, time_fn
+from repro.serving.api import RequestSpec
 from repro.core import costmodel as cm
 
 
@@ -23,7 +24,7 @@ def run():
 
     eng = reduced_engine()
     prompt = np.arange(1, 11, dtype=np.int32)
-    eng.submit("r0", prompt, 64)
+    eng.client.submit(RequestSpec(rid="r0", prompt=prompt, max_new=64))
 
     t_step = time_fn(lambda: eng.step(), warmup=3, iters=10)
     n_layers = eng.cfg.num_layers
@@ -34,7 +35,8 @@ def run():
     eng2 = reduced_engine(seed=1)
 
     def prefill_once():
-        eng2.submit(f"p{len(eng2.requests)}", prompt, 1)
+        eng2.client.submit(RequestSpec(rid=f"p{len(eng2.requests)}",
+                                       prompt=prompt, max_new=1))
 
     t_pre = time_fn(prefill_once, warmup=1, iters=3)
     rows.append(Row("table1/ours-cpu/t_pre_layer",

@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine
+from repro.serving.api import RequestSpec
 from repro.core import costmodel as cm
 
 
@@ -35,7 +36,8 @@ def run():
     for n in FAIL_POINTS:
         # ---- reference run up to failure point --------------------------
         eng = reduced_engine(seed=9, max_seq=128)
-        eng.submit("r", prompt, n + 6)
+        eng.client.submit(RequestSpec(rid="r", prompt=prompt,
+                                      max_new=n + 6))
         for _ in range(n):
             eng.step()
         cfg = eng.cfg
@@ -55,7 +57,8 @@ def run():
         # ---- sequential replay -------------------------------------------
         eng2 = reduced_engine(seed=9, max_seq=128)
         t0 = time.monotonic()
-        eng2.submit("r2", prompt, n + 6)
+        eng2.client.submit(RequestSpec(rid="r2", prompt=prompt,
+                                       max_new=n + 6))
         for _ in range(n):
             eng2.step()
         t_seq = time.monotonic() - t0
@@ -66,7 +69,8 @@ def run():
         eng3 = reduced_engine(seed=9, max_seq=128)
         long_prompt = np.asarray(list(prompt) + gen[:n], np.int32)
         t0 = time.monotonic()
-        eng3.submit("r3", long_prompt, 4)
+        eng3.client.submit(RequestSpec(rid="r3", prompt=long_prompt,
+                                       max_new=4))
         t_par = time.monotonic() - t0
         bytes_par = bytes_seq
         gpu_par = cfg.num_layers

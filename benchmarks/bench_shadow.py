@@ -9,13 +9,14 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine, time_fn
+from repro.serving.api import RequestSpec
 from repro.core.shadow import shadow_memory_bytes
 from repro.core import ert as ert_lib
 
 
 def _step_time(eng):
     prompt = np.arange(1, 11, dtype=np.int32)
-    eng.submit("r", prompt, 200)
+    eng.client.submit(RequestSpec(rid="r", prompt=prompt, max_new=200))
     return time_fn(lambda: eng.step(), warmup=3, iters=12)
 
 

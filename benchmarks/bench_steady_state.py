@@ -22,6 +22,7 @@ import os
 import numpy as np
 
 from benchmarks.common import Row, reduced_engine
+from repro.serving.api import RequestSpec
 from repro.data.workloads import make_workload
 from repro.serving.scheduler import run_serving
 
@@ -45,7 +46,9 @@ def _measure(tarragon: bool, checkpoint: bool, kind: str):
     import time
     eng = reduced_engine(tarragon=tarragon, checkpoint=checkpoint, seed=0)
     for i, w in enumerate(_workload(kind, out=200)):
-        eng.submit(w.request_id, w.prompt_tokens(eng.cfg.vocab_size), 200)
+        eng.client.submit(RequestSpec(
+            rid=w.request_id,
+            prompt=w.prompt_tokens(eng.cfg.vocab_size), max_new=200))
     for _ in range(3):  # warmup (compile)
         eng.step()
     ts = []
@@ -115,10 +118,59 @@ def _measure_chunked_prefill():
     return out
 
 
+def _measure_mixed_slo():
+    """Multi-class admission plane under a saturating batch wave +
+    interactive Poisson stream: per-class TTFT/TBT percentiles with
+    preempt-and-requeue on vs off (same workload, same virtual clock),
+    plus a preemption-stall audit — what the evicted batch victims pay
+    (their max token gap) to buy the interactive TTFT win."""
+    batch_new = 40 if SMOKE else 150
+    dur = 2.0 if SMOKE else 3.0
+    wl = make_workload("mixed_slo", rate_rps=3.0, duration=dur, seed=7,
+                       max_new=batch_new, interactive_deadline=0.3,
+                       batch_wave=8, batch_every=dur + 1.0)
+    out = {"workload": "mixed_slo", "requests": len(wl),
+           "interactive": sum(1 for w in wl
+                              if w.slo_class == "interactive"),
+           "batch": sum(1 for w in wl if w.slo_class == "batch")}
+    for label, preempt in (("no_preempt", False), ("preempt", True)):
+        eng = reduced_engine(seed=0, max_batch=8, preempt=preempt)
+        m = run_serving(eng, wl, duration=600.0, step_time=0.02)
+        sec = {"finished": len(m.finished),
+               "preemptions": m.gateway["preemptions"],
+               "by_class": m.gateway["by_class"]}
+        for cls in ("interactive", "batch"):
+            ttft = m.ttft_values(cls)
+            tbt = m.tbt_values(cls)
+            sec[cls] = {
+                "ttft_p50_s": float(np.percentile(ttft, 50))
+                if ttft.size else 0.0,
+                "ttft_p99_s": float(np.percentile(ttft, 99))
+                if ttft.size else 0.0,
+                "tbt_p99_s": float(np.percentile(tbt, 99))
+                if tbt.size else 0.0,
+                "max_stall_s": m.max_stall(cls),
+            }
+        out[label] = sec
+    out["interactive_ttft_p99_improvement_x"] = \
+        out["no_preempt"]["interactive"]["ttft_p99_s"] / \
+        max(out["preempt"]["interactive"]["ttft_p99_s"], 1e-9)
+    return out
+
+
 def run():
     rows = []
     payload = {"bench": "steady_state", "serving": [], "decode_path": [],
-               "chunked_prefill": None}
+               "chunked_prefill": None, "mixed_slo": None}
+    s = _measure_mixed_slo()
+    payload["mixed_slo"] = s
+    rows.append(Row(
+        "serving/mixed_slo/interactive_ttft_p99/preempt",
+        s["preempt"]["interactive"]["ttft_p99_s"] * 1e6,
+        f"no_preempt={s['no_preempt']['interactive']['ttft_p99_s']*1e3:.0f}"
+        f"ms improvement={s['interactive_ttft_p99_improvement_x']:.1f}x "
+        f"preemptions={s['preempt']['preemptions']} "
+        f"victim_stall={s['preempt']['batch']['max_stall_s']*1e3:.0f}ms"))
     c = _measure_chunked_prefill()
     payload["chunked_prefill"] = c
     rows.append(Row(

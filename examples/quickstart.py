@@ -3,9 +3,11 @@
     PYTHONPATH=src python examples/quickstart.py [--arch mixtral_8x7b]
 
 Builds a reduced-size variant of the chosen architecture, starts the
-inference engine (2 AWs x 2 EWs), submits a few requests, and decodes with
-incremental KV checkpointing on. This is the smallest end-to-end use of the
-public API: ModelConfig -> InferenceEngine -> submit/step.
+inference engine (2 AWs x 2 EWs), submits a few typed requests, and
+decodes with incremental KV checkpointing on. This is the smallest
+end-to-end use of the public API:
+ModelConfig -> InferenceEngine -> client.submit(RequestSpec) ->
+RequestHandle (status / streaming / cancel) -> step.
 """
 import argparse
 import dataclasses
@@ -14,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.serving.api import RequestSpec
 from repro.serving.engine import EngineConfig, InferenceEngine
 
 
@@ -35,17 +38,22 @@ def main():
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
+    handles = []
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size, size=(8,)).astype(np.int32)
-        eng.submit(f"req{i}", prompt, args.tokens)
-        print(f"req{i}: submitted on AW{eng.requests[f'req{i}'].aw}")
+        # classes: "interactive" preempts, "batch" is preemptible
+        h = eng.client.submit(RequestSpec(
+            rid=f"req{i}", prompt=prompt, max_new=args.tokens,
+            slo_class="standard"))
+        handles.append(h)
+        print(f"{h.rid}: {h.state()} on AW{eng.requests[h.rid].aw}")
 
-    while eng.active_requests():
+    while not all(h.done() for h in handles):
         eng.step()
 
-    for i in range(args.requests):
-        r = eng.requests[f"req{i}"]
-        print(f"req{i}: {len(r.tokens)} tokens -> {r.tokens[:8]}...")
+    for h in handles:
+        print(f"{h.rid}: {h.status().tokens_generated} tokens -> "
+              f"{h.tokens()[:8]}...")
     st = eng.store.stats
     print(f"checkpoint store: {st.updates} segment writes, "
           f"{st.bytes_written/1024:.1f} KiB")

@@ -22,7 +22,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
                     choices=("random", "sharegpt", "long_prompt_burst",
-                             "skewed_expert_load"),
+                             "skewed_expert_load", "mixed_slo"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
@@ -36,6 +36,10 @@ def main():
                     help="let the orchestrator rebalance expert placement "
                          "when dispatch load is imbalanced (pairs with "
                          "--workload skewed_expert_load)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-and-requeue (pairs with "
+                         "--workload mixed_slo: blocked interactive "
+                         "requests then wait out the batch wave)")
     args = ap.parse_args()
 
     cfg = get_config("mixtral_8x7b").reduced()
@@ -43,7 +47,8 @@ def main():
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
     ecfg = EngineConfig(max_batch=8, max_seq=96, num_aw=2, num_ew=2,
                         chunk_token_budget=args.chunk_budget,
-                        prefill_token_cap=8 * args.chunk_budget)
+                        prefill_token_cap=8 * args.chunk_budget,
+                        preempt=not args.no_preempt)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         auto_rebalance=args.rebalance)
@@ -86,6 +91,14 @@ def main():
             print(f"chunked prefill: {ch['chunks']} chunks in "
                   f"{ch['calls']} calls for {ch['requests']} streams "
                   f"(shapes={ch['shapes']}, resumed={ch['resumed']})")
+    if m.gateway.get("by_class"):
+        print(f"request plane: preemptions={m.gateway['preemptions']}")
+        for cls, counts in sorted(m.gateway["by_class"].items()):
+            ttft = m.ttft_values(cls)
+            extra = f" ttft_p50={np.median(ttft)*1e3:.0f}ms " \
+                    f"p99={np.percentile(ttft,99)*1e3:.0f}ms" \
+                if ttft.size else ""
+            print(f"  {cls}: {counts}{extra}")
     if eng.placement_mgr is not None:
         mgr = eng.placement_mgr
         print(f"expert plane: gen={mgr.plan.generation} "

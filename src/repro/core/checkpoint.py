@@ -214,6 +214,20 @@ class KVCheckpointer:
         self._pending = []
         return n
 
+    def drop_request(self, request_id: str) -> int:
+        """Teardown path (cancel / release): discard this request's pending
+        WRs without touching other requests' stream. Only valid right
+        before the store log itself is released — the dropped WRs' sequence
+        numbers are already allocated, so keeping the log would leave a
+        permanent commit gap. Returns the number of WRs discarded."""
+        kept = [p for p in self._pending if p[0] != request_id]
+        n = len(self._pending) - len(kept)
+        self._pending = kept
+        return n
+
+    def pending_for(self, request_id: str) -> int:
+        return sum(1 for p in self._pending if p[0] == request_id)
+
     def flush(self):
         pending = self._pending
         if self.reorder_window and len(pending) > 1:

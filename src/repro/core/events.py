@@ -218,6 +218,74 @@ def simulate_tarragon_promotion(c: SimConfig) -> Timeline:
     return tl
 
 
+def simulate_preemption_restore(c: SimConfig, t_evict: float = None,
+                                wait: float = 1.0) -> Timeline:
+    """Planned eviction on the recovery substrate (serving/api.py): an
+    interactive burst needs the victim's slot for ``wait`` seconds. The
+    victim's resident KV is already committed (the stream is flushed at
+    eviction — no detection, no recompute), so its stall is the wait plus
+    the per-request restore copy when it re-enters. Every other request
+    keeps decoding; preemption is failure you chose, minus the failure."""
+    period = _token_period(c)
+    t_evict = c.fail_time if t_evict is None else t_evict
+    i_evict = min(int(t_evict / period), c.max_output)
+    restore = c.tarragon.restore_fixed + \
+        (c.prompt_len + i_evict) * c.num_layers * \
+        c.tarragon.restore_per_token
+    t_stall = wait + restore + c.tarragon.resched
+    frac = 1.0 / c.num_requests          # exactly one victim stalls
+    tl = _emit(c, lambda t: period,
+               [(t_evict, t_evict + t_stall, frac)])
+    tl.mode = "preempt_restore"
+    tl.stall = t_stall
+    tl.events = [f"evict@{t_evict:.1f}s (watermark flushed)",
+                 f"slot lent {wait:.1f}s",
+                 f"restore {restore * 1e3:.0f}ms from cursor "
+                 f"{c.prompt_len + i_evict} tokens"]
+    return tl
+
+
+def simulate_preemption_recompute(c: SimConfig, t_evict: float = None,
+                                  wait: float = 1.0) -> Timeline:
+    """Baseline without checkpoint-backed preemption: evicting a request
+    discards its KV, so re-admission re-prefills the prompt AND replays
+    every generated token (the MegaScale restart structure, scheduled
+    instead of crashed)."""
+    period = _token_period(c)
+    t_evict = c.fail_time if t_evict is None else t_evict
+    i_evict = min(int(t_evict / period), c.max_output)
+    layer = c.num_layers // 2
+    replay = c.num_layers * c.profile.t_pre + \
+        max(0, (i_evict - 1) * c.num_layers + layer) * c.profile.t_dec
+    t_stall = wait + replay + c.tarragon.resched
+    frac = 1.0 / c.num_requests
+    tl = _emit(c, lambda t: period,
+               [(t_evict, t_evict + t_stall, frac)])
+    tl.mode = "preempt_recompute"
+    tl.stall = t_stall
+    tl.events = [f"evict@{t_evict:.1f}s (KV discarded)",
+                 f"slot lent {wait:.1f}s",
+                 f"re-prefill + replay {replay:.2f}s "
+                 f"({i_evict} tokens from scratch)"]
+    return tl
+
+
+def preemption_summary(c: SimConfig, wait: float = 1.0) -> Dict[str, float]:
+    """Checkpoint-backed preemption vs discard-and-recompute: both lend
+    the slot for ``wait`` seconds; the difference is what the victim pays
+    on top of the loan."""
+    restore = simulate_preemption_restore(c, wait=wait)
+    recompute = simulate_preemption_recompute(c, wait=wait)
+    return {
+        "preempt_restore_stall_s": restore.stall,
+        "preempt_recompute_stall_s": recompute.stall,
+        "restore_overhead_s": restore.stall - wait,
+        "recompute_overhead_s": recompute.stall - wait,
+        "overhead_improvement_x": (recompute.stall - wait) /
+                                  max(restore.stall - wait, 1e-9),
+    }
+
+
 def failover_summary(c: SimConfig) -> Dict[str, float]:
     base = simulate_megascale_failure(c)
     aw = simulate_tarragon_aw_failure(c)

@@ -35,7 +35,8 @@ class WorkerEvent:
     t: float
     kind: str       # fail_aw|fail_ew|detected|healed|provisioned|
     #                 placement_changed|scale_out_started|scaled_out|
-    #                 drain_started|scaled_in|rebalance_started|rebalanced
+    #                 drain_started|scaled_in|rebalance_started|rebalanced|
+    #                 preempted|cancelled|deadline_missed (request plane)
     worker: str
     detail: str = ""
 
@@ -265,6 +266,13 @@ class Orchestrator:
         # (benchmarks/tests audit plan generations through the event log)
         for ev in self.engine.drain_plan_events() \
                 if hasattr(self.engine, "drain_plan_events") else []:
+            self.events.append(ev)
+            fired.append(ev)
+        # ... and request-lifecycle events (preempted/cancelled/
+        # deadline_missed): the admission plane's timeline rides the same
+        # audit log as the worker plane's
+        for ev in self.engine.drain_request_events() \
+                if hasattr(self.engine, "drain_request_events") else []:
             self.events.append(ev)
             fired.append(ev)
         return fired

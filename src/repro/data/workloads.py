@@ -14,6 +14,11 @@
   tokens (and therefore the experts they route to) carry most of the
   dispatch load — static expert placement concentrates that load on a few
   EWs, which is exactly what load-aware rebalancing exists to fix.
+* ``mixed_slo`` — the SLO-class stress case for the multi-class admission
+  plane: a Poisson stream of short *interactive* requests (tight
+  first-token deadlines) over periodic bulk waves of long *batch* requests
+  that saturate every slot — without preempt-and-requeue, interactive TTFT
+  degenerates to the batch residency time.
 * Arrivals follow a Poisson process of configurable rate.
 
 Also provides a token-stream iterator for the training example (synthetic
@@ -36,6 +41,9 @@ class Request:
     seed: int
     token_dist: str = "uniform"   # "uniform" | "zipf" (token->expert skew)
     zipf_a: float = 1.3           # Zipf exponent (smaller = heavier skew)
+    slo_class: str = "standard"   # interactive | standard | batch
+    deadline: float = -1.0        # absolute first-token deadline on the
+    #                               virtual clock (-1 = none)
 
     def prompt_tokens(self, vocab: int) -> np.ndarray:
         rng = np.random.default_rng(self.seed)
@@ -69,9 +77,37 @@ def burst_arrivals(rate_rps: float, duration: float,
 def make_workload(kind: str, rate_rps: float, duration: float,
                   seed: int = 0, max_prompt: int = 1024,
                   max_new: int = 256, long_frac: float = 0.3,
-                  zipf_a: float = 1.3) -> \
+                  zipf_a: float = 1.3,
+                  interactive_deadline: float = 0.5,
+                  batch_wave: int = 8, batch_every: float = 2.0) -> \
         List[Request]:
     rng = np.random.default_rng(seed)
+    if kind == "mixed_slo":
+        # interactive Poisson stream: short prompts, short outputs, a
+        # first-token deadline ``interactive_deadline`` after arrival
+        reqs = []
+        for i, t in enumerate(poisson_arrivals(rate_rps, duration, rng)):
+            reqs.append(Request(
+                f"mixed_slo-i{i}", float(t),
+                int(rng.integers(4, 10)),
+                int(np.clip(rng.integers(4, 10), 1, max_new)),
+                seed * 100003 + i, slo_class="interactive",
+                deadline=float(t) + interactive_deadline))
+        # batch bulk arrivals: every ``batch_every`` seconds a wave of
+        # ``batch_wave`` long-running requests lands at once (enough to
+        # saturate a typical slot pool between waves)
+        w = 0
+        t_wave = 0.0
+        while t_wave < duration:
+            for j in range(batch_wave):
+                reqs.append(Request(
+                    f"mixed_slo-b{w}-{j}", float(t_wave),
+                    int(rng.integers(6, 14)), max_new,
+                    seed * 100003 + 50021 * (w + 1) + j,
+                    slo_class="batch"))
+            w += 1
+            t_wave += batch_every
+        return sorted(reqs, key=lambda r: (r.arrival, r.request_id))
     if kind == "long_prompt_burst":
         arrivals = burst_arrivals(rate_rps, duration, rng)
     else:

@@ -49,7 +49,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral_8x7b")
     ap.add_argument("--workload",
-                    choices=("random", "sharegpt", "skewed_expert_load"),
+                    choices=("random", "sharegpt", "skewed_expert_load",
+                             "mixed_slo"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
@@ -74,6 +75,9 @@ def main():
                          "permanent shadow promotion (pool shrinks)")
     ap.add_argument("--rebalance", action="store_true",
                     help="auto-rebalance expert placement under load skew")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-and-requeue (blocked interactive "
+                         "requests wait instead of evicting batch victims)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -85,7 +89,8 @@ def main():
                         num_aw=args.num_aw, num_ew=args.num_ew,
                         max_ew=args.max_ew,
                         tarragon=not args.no_tarragon,
-                        placement=args.placement)
+                        placement=args.placement,
+                        preempt=not args.no_preempt)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         ew_policy=args.ew_policy,
@@ -121,6 +126,13 @@ def main():
         print(f"  expert plane: gen={mgr.plan.generation} "
               f"pool={sorted(eng.live_ews)} "
               f"imbalance={mgr.imbalance():.2f}")
+    if m.gateway.get("by_class"):
+        print(f"  request plane: preemptions={m.gateway['preemptions']}")
+        for cls, counts in sorted(m.gateway["by_class"].items()):
+            ttft = m.ttft_values(cls)
+            extra = f" ttft_p50={np.median(ttft)*1e3:.0f}ms" \
+                if ttft.size else ""
+            print(f"    {cls}: {counts}{extra}")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
 

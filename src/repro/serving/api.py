@@ -1,0 +1,289 @@
+"""Typed client-facing request API: SLO classes, specs, handles, lifecycle.
+
+This is the serving stack's public surface. The old
+``InferenceEngine.submit(rid, prompt, max_new)`` bare positional call could
+not express *anything* about a request beyond its prompt: no priority, no
+deadline, no per-request sampling, no way to observe or cancel it in
+flight. This module replaces it with a typed trio:
+
+  * ``RequestSpec``   — everything the serving stack needs to know about a
+    request: prompt (or a lazy token distribution to draw it from),
+    ``max_new``, per-request ``SamplingParams``, an ``slo_class`` in
+    {interactive, standard, batch}, an optional virtual-clock first-token
+    ``deadline``, and an optional ``session`` key for affinity placement.
+  * ``Client``        — submits specs into the Gateway's multi-class
+    admission plane and hands back handles. Submission *queues*; it never
+    refuses (the old sync-refuse behaviour lives only in the deprecated
+    ``engine.submit`` shim).
+  * ``RequestHandle`` — observe and steer one request: ``status()`` (the
+    lifecycle state machine: queued → placed → prefilling → decoding →
+    {done, preempted, cancelled}), incremental token streaming via
+    ``new_tokens()``, and ``cancel()``.
+
+The lifecycle states map 1:1 onto the scheduling substrate: ``preempted``
+is Tarragon's recovery path exercised *on purpose* — a preempted request's
+KV lives in the checkpoint store and it re-enters the Gateway as a
+recovery entry that resumes from its committed cursor (planned eviction is
+failure you chose). ``new_tokens()`` is therefore at-least-once across an
+AW *crash*: tokens past the commit watermark are recomputed bit-identically
+and re-delivered. Planned preemption flushes the watermark first, so it
+never re-delivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# SLO classes
+# ---------------------------------------------------------------------------
+
+INTERACTIVE = "interactive"
+STANDARD = "standard"
+BATCH = "batch"
+
+#: admission priority order (also the weighted-dequeue service order)
+SLO_CLASSES = (INTERACTIVE, STANDARD, BATCH)
+
+#: per-class weighted-dequeue credits per admission round
+CLASS_WEIGHTS = {INTERACTIVE: 4, STANDARD: 2, BATCH: 1}
+
+#: classes whose blocked head may evict a victim (preempt-and-requeue)
+PREEMPTING_CLASSES = (INTERACTIVE,)
+
+#: classes eligible to be checkpointed out of their slot
+PREEMPTIBLE_CLASSES = (BATCH,)
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode head configuration (overrides the engine-wide
+    defaults in ``EngineConfig`` when attached to a spec)."""
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0                 # 0 = full distribution (greedy=False)
+
+
+@dataclass
+class RequestSpec:
+    """Typed request description. ``prompt`` may be given directly, or left
+    ``None`` with (``prompt_len``, ``seed``, ``token_dist``) set, in which
+    case the client draws it from the named token distribution — the same
+    lazy-prompt convention as ``data.workloads.Request``."""
+    rid: Optional[str] = None      # auto-assigned by the Client when None
+    prompt: Optional[np.ndarray] = None
+    max_new: int = 16
+    sampling: Optional[SamplingParams] = None
+    slo_class: str = STANDARD
+    deadline: Optional[float] = None   # virtual-clock first-token deadline
+    session: Optional[str] = None      # affinity key (session_affinity)
+    frames: Optional[np.ndarray] = None
+    # lazy prompt generation (used when prompt is None)
+    prompt_len: int = 8
+    seed: int = 0
+    token_dist: str = "uniform"        # "uniform" | "zipf"
+    zipf_a: float = 1.3
+
+    def __post_init__(self):
+        if self.slo_class not in SLO_CLASSES:
+            raise ValueError(
+                f"unknown slo_class {self.slo_class!r}: "
+                f"expected one of {SLO_CLASSES}")
+
+    def resolve_prompt(self, vocab: int) -> np.ndarray:
+        if self.prompt is not None:
+            return np.asarray(self.prompt, np.int32)
+        # delegate to the workload Request's generator so 'same seed =>
+        # same prompt' holds between workload-driven and Client-driven runs
+        from repro.data.workloads import Request
+        return Request(self.rid or "", 0.0, self.prompt_len, self.max_new,
+                       self.seed, token_dist=self.token_dist,
+                       zipf_a=self.zipf_a).prompt_tokens(vocab)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle states
+# ---------------------------------------------------------------------------
+
+QUEUED = "queued"
+PLACED = "placed"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+PREEMPTED = "preempted"
+DONE = "done"
+CANCELLED = "cancelled"
+
+LIFECYCLE_STATES = (QUEUED, PLACED, PREFILLING, DECODING, PREEMPTED, DONE,
+                    CANCELLED)
+
+
+@dataclass
+class RequestStatus:
+    """Point-in-time snapshot of one request's lifecycle."""
+    rid: str
+    state: str
+    slo_class: str = STANDARD
+    tokens_generated: int = 0
+    prefill_cursor: int = 0
+    preemptions: int = 0
+    deadline: Optional[float] = None
+    deadline_missed: bool = False
+    ttft: float = -1.0
+
+
+class RequestHandle:
+    """Observe and steer one submitted request.
+
+    The handle resolves state lazily through the engine; once the engine
+    releases a finished request, the final ``RequestState`` is pinned onto
+    the handle by the client's release hook, so ``tokens()``/``status()``
+    keep working after teardown."""
+
+    def __init__(self, client: "Client", spec: RequestSpec):
+        self._client = client
+        self._engine = client.engine
+        self.spec = spec
+        self.rid: str = spec.rid
+        self._state = None             # pinned RequestState (live or final)
+        self._cancelled = False
+        self._stream_cursor = 0
+
+    # -- state resolution ---------------------------------------------------
+    def _lookup(self):
+        if self._state is not None and \
+                (self._state.done or self._state.cancelled):
+            # terminal state is pinned forever: if the rid is reused for a
+            # new request, this handle must keep reporting ITS request
+            return self._state
+        r = self._engine.requests.get(self.rid)
+        if r is not None:
+            self._state = r
+        return self._state
+
+    def state(self) -> str:
+        r = self._lookup()
+        if r is None:
+            if self._cancelled:
+                return CANCELLED
+            return QUEUED if self._engine.gateway.find(self.rid) is not None \
+                else DONE
+        return r.state        # the engine-side state machine is canonical
+
+    def status(self) -> RequestStatus:
+        r = self._lookup()
+        st = RequestStatus(self.rid, self.state(),
+                           slo_class=self.spec.slo_class,
+                           deadline=self.spec.deadline)
+        if r is not None:
+            st.tokens_generated = len(r.tokens)
+            st.prefill_cursor = r.prefill_cursor
+            st.preemptions = r.preemptions
+            st.deadline_missed = r.deadline_flagged
+            st.ttft = r.ttft
+        return st
+
+    # -- token access -------------------------------------------------------
+    def tokens(self) -> List[int]:
+        r = self._lookup()
+        return list(r.tokens) if r is not None else []
+
+    def new_tokens(self) -> List[int]:
+        """Incremental streaming: tokens generated since the last call.
+        After an AW *crash*, uncommitted tokens are recomputed
+        bit-identically and re-delivered (at-least-once); planned
+        preemption flushes the commit watermark first and never rewinds."""
+        toks = self.tokens()
+        self._stream_cursor = min(self._stream_cursor, len(toks))
+        out = toks[self._stream_cursor:]
+        self._stream_cursor = len(toks)
+        return out
+
+    def done(self) -> bool:
+        return self.state() in (DONE, CANCELLED)
+
+    # -- control ------------------------------------------------------------
+    def cancel(self, now: float = 0.0) -> bool:
+        ok = self._engine.cancel_request(self.rid, now=now)
+        if ok:
+            self._cancelled = True
+        return ok
+
+    def __repr__(self):
+        return f"RequestHandle({self.rid!r}, state={self.state()!r})"
+
+
+class Client:
+    """Front door of the typed request API: submit specs, keep handles.
+
+    Submission enqueues into the Gateway's multi-class admission plane and
+    opportunistically runs one admission pass; if the pool is saturated the
+    request *waits* (deadline-aware, weighted by class) instead of being
+    refused. Drive progress with ``engine.step()`` / ``run_serving`` as
+    before."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._handles: Dict[str, RequestHandle] = {}
+        self._auto_rid = 0
+        engine.add_release_hook(self._on_release)
+
+    def _on_release(self, rstate):
+        h = self._handles.get(rstate.rid)
+        if h is not None:
+            h._state = rstate          # pin the final state onto the handle
+
+    def _next_rid(self) -> str:
+        self._auto_rid += 1
+        return f"req-{self._auto_rid}"
+
+    def submit(self, spec: RequestSpec, now: float = 0.0) -> RequestHandle:
+        if spec.rid is None:
+            spec = dataclasses.replace(spec, rid=self._next_rid())
+        live = self.engine.requests.get(spec.rid)
+        if (live is not None and not live.done) or \
+                self.engine.gateway.find(spec.rid) is not None:
+            raise ValueError(f"request id {spec.rid!r} already in flight")
+        if live is not None:
+            # rid reuse after completion: free the finished request's slot
+            # and store log before the new life begins (the old handle keeps
+            # its pinned final state)
+            self.engine.release_request(spec.rid)
+        prompt = spec.resolve_prompt(self.engine.cfg.vocab_size)
+        self.engine.gateway.enqueue(
+            spec.rid, prompt, spec.max_new, now=now, frames=spec.frames,
+            slo_class=spec.slo_class, deadline=spec.deadline,
+            sampling=spec.sampling, session=spec.session)
+        handle = RequestHandle(self, spec)
+        self._handles[spec.rid] = handle
+        # opportunistic admission pass: the spec may be placed immediately;
+        # otherwise it waits in its class queue and retries every tick
+        self.engine.scheduler.admit(now)
+        return handle
+
+    def handle(self, rid: str) -> Optional[RequestHandle]:
+        return self._handles.get(rid)
+
+    def forget(self, rid: str) -> bool:
+        """Drop a terminal request's handle (and its pinned final state).
+        The client retains every handle until told otherwise so results
+        stay readable after engine-side release; a long-running service
+        should ``forget`` handles it has consumed, or memory grows with
+        the total request count. Live requests are refused — cancel
+        first."""
+        h = self._handles.get(rid)
+        if h is None:
+            return False
+        if not h.done():
+            raise ValueError(f"request {rid!r} is still live; cancel() "
+                             "before forget()")
+        del self._handles[rid]
+        return True
+
+    def cancel(self, rid: str, now: float = 0.0) -> bool:
+        h = self._handles.get(rid)
+        if h is not None:
+            return h.cancel(now=now)
+        return self.engine.cancel_request(rid, now=now)

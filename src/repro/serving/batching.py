@@ -203,7 +203,8 @@ class ContinuousBatchScheduler:
             if padded and pre_lens[i] < length:
                 state = eng.layout.scrub_request_state(state, pre_lens[i])
             eng.cache = eng.layout.write_request_state(eng.cache, slot, state)
-            first = eng.sample_token(last_logits[i]) if not padded else None
+            first = eng.sample_token(last_logits[i], q.sampling) \
+                if not padded else None
             self._install_fresh(q, aw, slot, now, padded=padded, first=first,
                                 n_prefilled=pre_lens[i])
 
@@ -295,12 +296,18 @@ class ContinuousBatchScheduler:
     # decode
     # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> Dict[str, int]:
-        """One iteration: a budgeted slice of chunked prefill (when the
-        plane is on), then one decode step over all active slots. Returns
-        {rid: new_token}."""
+        """One iteration: an admission pass when anything is waiting (so
+        Client-submitted and preempted requests re-enter without an
+        external serving loop), deadline accounting, a budgeted slice of
+        chunked prefill (when the plane is on), then one decode step over
+        all active slots. Returns {rid: new_token}."""
         eng = self.engine
+        t_now = now if now is not None else float(eng.steps)
+        if self.gateway.depth():
+            self.admit(t_now)
+        eng.check_deadlines(t_now)
         if eng.chunked is not None:
-            eng.chunked.tick(now if now is not None else float(eng.steps))
+            eng.chunked.tick(t_now)
         act = eng.active_requests()
         if not act:
             return {}
@@ -335,9 +342,9 @@ class ContinuousBatchScheduler:
         ck_index = {r.rid: i for i, r in enumerate(ck_reqs)}
 
         out: Dict[str, int] = {}
-        t_log = now if now is not None else float(eng.steps)
+        t_log = t_now
         for r in act:
-            nxt = eng.sample_token(logits[r.slot])
+            nxt = eng.sample_token(logits[r.slot], r.sampling)
             written_pos = r.pos          # decode wrote KV at this position
             r.pos += 1
             r.tokens.append(nxt)

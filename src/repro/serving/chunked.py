@@ -29,6 +29,11 @@ stream of chunks.
     slot and resumes prefill *from the cursor* instead of re-prefilling
     from token 0. Only segments past the commit watermark (WRs that died
     with the AW) are recomputed.
+  * **Mid-prefill preemption** — planned eviction
+    (``engine.preempt_request``, serving/api.py) reuses the same
+    ``drop``/``resume`` pair: the stream's pending WRs are *flushed* (not
+    dropped — eviction is not a crash), so the resume cursor equals the
+    preemption cursor and zero chunk work is recomputed.
 
 Only full-attention cache families expose ``prefill_chunk`` (cache slot ==
 absolute position); recurrent/ring-buffer caches keep the exact

@@ -27,8 +27,9 @@ Failure API (used by the orchestrator and by tests):
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,8 @@ from repro.core.orchestrator import WorkerEvent
 from repro.core.placement import ExpertPlacementManager, PlacementPlan
 from repro.core.refe import RouteState
 from repro.models import get_model
+from repro.serving.api import (PREEMPTIBLE_CLASSES, STANDARD, Client,
+                               SamplingParams)
 from repro.serving.batching import ContinuousBatchScheduler
 from repro.serving.chunked import ChunkedPrefillPlane
 from repro.serving.gateway import Gateway, QueuedRequest
@@ -76,6 +79,9 @@ class EngineConfig:
     prefill_token_cap: int = 0           # Gateway admission cap on
     #                                      outstanding prefill tokens (0 =
     #                                      slot-bound admission only)
+    preempt: bool = True                 # blocked interactive heads may
+    #                                      checkpoint-and-evict a batch
+    #                                      victim (preempt-and-requeue)
 
 
 @dataclass
@@ -93,6 +99,14 @@ class RequestState:
     prefilling: bool = False      # prompt still streaming through the
     #                               chunked-prefill plane (no decode yet)
     prefill_cursor: int = 0       # prompt tokens already written to cache
+    # typed request-lifecycle fields (serving/api.py)
+    slo_class: str = STANDARD
+    deadline: Optional[float] = None   # virtual-clock first-token deadline
+    sampling: Optional[SamplingParams] = None
+    session: Optional[str] = None
+    preemptions: int = 0          # planned evictions survived
+    cancelled: bool = False
+    deadline_flagged: bool = False
     # virtual-clock timeline (all on the serving loop's clock)
     t_enqueue: float = 0.0
     t_admit: float = -1.0
@@ -103,6 +117,22 @@ class RequestState:
     @property
     def aw(self) -> int:
         return self._aw
+
+    @property
+    def state(self) -> str:
+        """Lifecycle state machine: queued -> placed -> prefilling ->
+        decoding -> {done, preempted, cancelled} (queued is pre-admission,
+        i.e. before a RequestState exists; preempted is transient — the
+        request re-enters via the recovery path)."""
+        if self.cancelled:
+            return "cancelled"
+        if self.done:
+            return "done"
+        if self.paused or self.queued_for_recovery:
+            return "preempted"
+        if self.prefilling:
+            return "prefilling"
+        return "decoding" if self.tokens else "placed"
 
     @property
     def ttft(self) -> float:
@@ -155,6 +185,14 @@ class InferenceEngine:
         self.scheduler = ContinuousBatchScheduler(
             self, self.gateway, bucket=ecfg.prefill_bucket)
         self.requests: Dict[str, RequestState] = {}
+        # typed request-lifecycle plane (serving/api.py): preemption hook,
+        # lifecycle event timeline, release listeners for handles
+        if ecfg.preempt:
+            self.gateway.preemptor = self._preempt_for
+        self.request_log: List[WorkerEvent] = []
+        self._release_hooks: List[Callable] = []
+        self._client: Optional[Client] = None
+        self._extract_range = None     # lazy bulk-segment extractor
 
         # ---- jitted step functions ---------------------------------------
         self._extract = self.layout.make_batched_extractor()
@@ -239,13 +277,19 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     # sampling (the decode head): greedy argmax or temperature/top-k
     # ------------------------------------------------------------------
-    def sample_token(self, row_logits: np.ndarray) -> int:
-        if self.ecfg.greedy:
+    def sample_token(self, row_logits: np.ndarray,
+                     sampling: Optional[SamplingParams] = None) -> int:
+        """Sample the next token. Per-request ``SamplingParams`` (from the
+        typed RequestSpec) override the engine-wide defaults."""
+        greedy = self.ecfg.greedy if sampling is None else sampling.greedy
+        temperature = self.ecfg.temperature if sampling is None \
+            else sampling.temperature
+        top_k = self.ecfg.top_k if sampling is None else sampling.top_k
+        if greedy:
             return int(np.argmax(row_logits))
-        logits = np.asarray(row_logits, np.float64) / max(
-            self.ecfg.temperature, 1e-6)
-        if self.ecfg.top_k:
-            kth = np.partition(logits, -self.ecfg.top_k)[-self.ecfg.top_k]
+        logits = np.asarray(row_logits, np.float64) / max(temperature, 1e-6)
+        if top_k:
+            kth = np.partition(logits, -top_k)[-top_k]
             logits = np.where(logits < kth, -np.inf, logits)
         logits -= logits.max()
         p = np.exp(logits)
@@ -261,16 +305,57 @@ class InferenceEngine:
     def make_request_state(self, q: QueuedRequest, slot: int
                            ) -> RequestState:
         return RequestState(rid=q.rid, slot=slot, prompt=q.prompt,
-                            max_new=q.max_new, t_enqueue=q.t_enqueue)
+                            max_new=q.max_new, t_enqueue=q.t_enqueue,
+                            slo_class=q.slo_class, deadline=q.deadline,
+                            sampling=q.sampling, session=q.session,
+                            # a miss flagged while queued is not re-flagged
+                            deadline_flagged=q.deadline_flagged)
+
+    @property
+    def client(self) -> Client:
+        """The typed request-API front door (serving/api.py): submit
+        ``RequestSpec``s, get ``RequestHandle``s with status/streaming/
+        cancel. Lazily constructed; multiple explicit Clients over one
+        engine are also fine."""
+        if self._client is None:
+            self._client = Client(self)
+        return self._client
+
+    def add_release_hook(self, fn: Callable):
+        """Register fn(RequestState) to run when a request is released
+        (done, cancelled, or torn down) — clients pin final states onto
+        their handles through this."""
+        self._release_hooks.append(fn)
 
     def submit(self, rid: str, prompt: np.ndarray, max_new: int,
                frames: Optional[np.ndarray] = None,
                now: float = 0.0) -> bool:
-        """Synchronous admission: enqueue and admit immediately; refuse
-        (rather than queue) when no AW has capacity — the waiting-queue
-        path is the serving loop's (run_serving drives the Gateway
-        directly)."""
-        self.gateway.enqueue(rid, prompt, max_new, now=now, frames=frames)
+        """DEPRECATED positional shim over the typed request API: enqueue
+        as a standard-class request and admit immediately; refuse (rather
+        than queue) when no AW has capacity — the historical synchronous
+        semantics, pinned by tests/test_request_api.py. New code should use
+        ``engine.client.submit(RequestSpec(...))``, which queues instead of
+        refusing and returns a RequestHandle."""
+        warnings.warn(
+            "InferenceEngine.submit(rid, prompt, max_new) is deprecated; "
+            "use engine.client.submit(RequestSpec(...)) -> RequestHandle",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_sync(rid, prompt, max_new, frames=frames,
+                                 now=now)
+
+    def _submit_sync(self, rid: str, prompt: np.ndarray, max_new: int,
+                     frames: Optional[np.ndarray] = None,
+                     now: float = 0.0, slo_class: str = STANDARD,
+                     deadline: Optional[float] = None,
+                     sampling: Optional[SamplingParams] = None,
+                     session: Optional[str] = None) -> bool:
+        """Synchronous admission (internal): enqueue and admit immediately;
+        refuse (rather than queue) when no AW has capacity — the
+        waiting-queue path is the serving loop's (run_serving drives the
+        Gateway directly)."""
+        self.gateway.enqueue(rid, prompt, max_new, now=now, frames=frames,
+                             slo_class=slo_class, deadline=deadline,
+                             sampling=sampling, session=session)
         admitted = self.scheduler.admit(now)
         if rid in admitted:
             return True
@@ -310,6 +395,221 @@ class InferenceEngine:
         if self.chunked is not None:
             snap["chunked"] = self.chunked.stats.snapshot()
         return snap
+
+    # ------------------------------------------------------------------
+    # request lifecycle: preemption, cancellation, deadlines
+    # (serving/api.py) — the recovery subsystem doubling as the
+    # scheduling substrate: a preempted request is checkpointed out of
+    # its slot and re-enters exactly like a crash-recovered one.
+    # ------------------------------------------------------------------
+    def _note_request_event(self, kind: str, rid: str, now: float,
+                            detail: str = ""):
+        self.request_log.append(WorkerEvent(now, kind, rid, detail))
+
+    def drain_request_events(self) -> List[WorkerEvent]:
+        evs, self.request_log = self.request_log, []
+        return evs
+
+    def _choose_victim(self, exclude: str = "") -> Optional[RequestState]:
+        """Pick the preemption victim: the *youngest-arriving*
+        preemptible-class request resident on a live AW (its elders are
+        closer to done — evicting the latest arrival preserves finishing
+        work). Keyed on ``t_enqueue``, which is stable across restores —
+        ``t_admit`` resets on every re-admission, which would pin the
+        same just-restored victim in an evict/restore ping-pong. Among
+        same-arrival candidates (a bulk wave), the one evicted the fewest
+        times goes first, so repeated preemptions rotate through the wave
+        instead of starving one rid; final tie-break on rid for
+        determinism."""
+        cands = [r for r in self.requests.values()
+                 if r.slo_class in PREEMPTIBLE_CLASSES and not r.done
+                 and not r.paused and not r.cancelled
+                 and not r.queued_for_recovery and r.rid != exclude
+                 and r._aw >= 0 and self.aws[r._aw].alive]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.t_enqueue, -r.preemptions,
+                                         r.rid))
+
+    def _preempt_for(self, head: QueuedRequest, now: float) -> bool:
+        """Gateway preemptor hook: a blocked interactive head asks for a
+        slot; evict a batch victim if one exists."""
+        victim = self._choose_victim(exclude=head.rid)
+        if victim is None:
+            return False
+        return self.preempt_request(victim.rid, now=now)
+
+    def preempt_request(self, rid: str, now: float = 0.0) -> bool:
+        """Planned eviction (preempt-and-requeue): commit the victim's
+        resident KV to the checkpoint store through the bulk-segment path,
+        release its slot, and requeue it as a recovery entry at the front
+        of its class queue. On re-admission it restores the committed
+        prefix and resumes from the cursor — decode requests rewind zero
+        tokens (the watermark is flushed first), chunked-prefill requests
+        resume mid-stream. Preemption is failure you chose: it rides
+        §6.1/§6.2 unchanged, needs no health-mask flip, and triggers no
+        new jit traces."""
+        r = self.requests.get(rid)
+        if r is None or r.done or r.paused or r.cancelled or \
+                r.queued_for_recovery or r._aw < 0:
+            return False
+        aw = self.aws[r._aw]
+        if not aw.alive:
+            return False
+        committed = self._commit_resident_kv(r)
+        if self.chunked is not None:
+            self.chunked.drop(rid)
+        aw.prefills.pop(rid, None)
+        self.cache = self.layout.clear_slot(self.cache, r.slot)
+        aw.slots.release(r.slot)
+        r.paused = True
+        r.queued_for_recovery = True
+        r.preemptions += 1
+        self.gateway.requeue_recovery([QueuedRequest(
+            rid, r.prompt, r.max_new, frames=None, t_enqueue=now,
+            slo_class=r.slo_class, deadline=r.deadline,
+            sampling=r.sampling, session=r.session)])
+        self.gateway.stats.preemptions += 1
+        self.gateway.stats.bump(r.slo_class, "preempted")
+        self._note_request_event(
+            "preempted", rid, now,
+            f"slot freed on aw{aw.aw_id}, resume@{committed + 1}")
+        return True
+
+    def _commit_resident_kv(self, r: RequestState) -> int:
+        """Bring the checkpoint store's commit watermark up to the
+        victim's full resident state. Planned eviction *delivers* pending
+        WRs (flush) — this is not a crash — and any resident KV beyond the
+        watermark (e.g. the whole prefix on a checkpoint=False engine)
+        streams out through the bulk-segment path
+        (``KVCheckpointer.checkpoint_range``). Returns the committed token
+        index the request will resume from."""
+        ck = self.aws[r._aw].checkpointer
+        n = len(r.prompt)
+        if self.ecfg.checkpoint:
+            ck.flush()
+        else:
+            # un-protected request: first eviction registers it with the
+            # store (preemption turns checkpointing on for this rid alone)
+            ck.register(r.rid, prompt_len=n)
+        committed = self.store.committed_token(r.rid)
+        last = (r.prefill_cursor if r.prefilling else r.pos) - 1
+        if committed < last:
+            self._bulk_checkpoint(r, committed + 1, last)
+            ck.flush()
+            committed = self.store.committed_token(r.rid)
+        assert committed == last, (
+            f"preempt {r.rid}: watermark {committed} != resident {last}")
+        return committed
+
+    def _bulk_checkpoint(self, r: RequestState, start: int, last: int):
+        """Stream token segments [start, last] of the request's slot to
+        the store via the bulk range extractor (chunk-shaped static counts
+        keep jit keys O(log max_seq))."""
+        if self._extract_range is None:
+            # share the chunked plane's jitted extractor when it exists —
+            # an identical second extractor would just double the traces
+            self._extract_range = self.chunked._extract_range \
+                if self.chunked is not None \
+                else self.layout.make_slot_range_extractor()
+        ck = self.aws[r._aw].checkpointer
+        if self.chunked is not None:
+            # the shared extractor was traced with the plane's shape set —
+            # use the same cap so bulk segments never mint a new jit key
+            max_shape = self.chunked.max_shape
+        else:
+            max_shape = 1
+            while max_shape * 2 <= self.ecfg.max_seq:
+                max_shape *= 2
+        n = len(r.prompt)
+
+        def token_value(t: int) -> int:
+            # the store hands back position t's *next decode input*: a
+            # prompt token while t+1 is still in the prompt, else the
+            # generated token whose sampling consumed position t
+            if t + 1 < n:
+                return int(r.prompt[t + 1])
+            k = t - n + 1
+            return int(r.tokens[k]) if 0 <= k < len(r.tokens) else -1
+
+        t = start
+        while t <= last:
+            count = min(last - t + 1, max_shape)
+            shape = 1
+            while shape < count:
+                shape *= 2
+            shape = min(shape, max_shape)
+            base = max(0, min(t, self.ecfg.max_seq - shape))
+            seg_stack = [np.asarray(a)[t - base:t - base + count]
+                         for a in self._extract_range(
+                             self.cache, r.slot, base, count=shape)]
+            ck.checkpoint_range(r.rid, t, seg_stack,
+                                [token_value(i)
+                                 for i in range(t, t + count)])
+            t += count
+
+    def cancel_request(self, rid: str, now: float = 0.0) -> bool:
+        """Cancel a request anywhere in its lifecycle. Queued: the entry
+        leaves its class queue. In flight: full teardown — the owning AW's
+        slot is released, its pending checkpoint WRs and prefill cursor
+        dropped, the chunk stream closed, and the store log freed.
+        Preempted/paused: the recovery entry is dropped too. Other
+        requests are untouched."""
+        r = self.requests.get(rid)
+        if r is None:
+            entry = self.gateway.drop(rid)
+            if entry is None:
+                return False
+            self.gateway.stats.bump(entry.slo_class, "cancelled")
+            self._note_request_event("cancelled", rid, now, "while queued")
+            return True
+        if r.done:
+            return False
+        r.cancelled = True
+        r.done = True
+        self.gateway.stats.bump(r.slo_class, "cancelled")
+        self._note_request_event("cancelled", rid, now, r.state)
+        self.release_request(rid)
+        return True
+
+    def check_deadlines(self, now: float):
+        """Emit ``deadline_missed`` once per request whose first-token
+        deadline passed — whether it is still queued at the Gateway or
+        resident without a first token. The request is NOT dropped: the
+        deadline is an SLO signal (per-class counters in GatewayStats),
+        not an admission filter."""
+        for cls, q in self.gateway.queues.items():
+            for e in q:
+                if e.deadline is None or e.deadline_flagged or \
+                        now <= e.deadline:
+                    continue
+                e.deadline_flagged = True
+                r = self.requests.get(e.rid)
+                if r is not None:
+                    if r.deadline_flagged:
+                        continue
+                    if 0 <= r.t_first_token <= r.deadline:
+                        # a crash-recovery entry of a request that already
+                        # met its first-token SLO is not a miss
+                        continue
+                    r.deadline_flagged = True
+                self.gateway.stats.bump(cls, "deadline_missed")
+                self._note_request_event("deadline_missed", e.rid, now,
+                                         f"queued, deadline={e.deadline:g}")
+        for r in self.requests.values():
+            if r.deadline is None or r.deadline_flagged:
+                continue
+            if r.t_first_token >= 0:
+                # admitted-late case: the first token itself arrived past
+                # the deadline (possibly in the same tick as admission)
+                if r.t_first_token <= r.deadline:
+                    continue
+            elif r.done or now <= r.deadline:
+                continue
+            r.deadline_flagged = True
+            self.gateway.stats.bump(r.slo_class, "deadline_missed")
+            self._note_request_event("deadline_missed", r.rid, now,
+                                     f"{r.state}, deadline={r.deadline:g}")
 
     # ------------------------------------------------------------------
     # failure injection & recovery (delegates to the worker objects)
@@ -363,9 +663,12 @@ class InferenceEngine:
                 if r is None or r.done or r.queued_for_recovery:
                     continue
                 r.queued_for_recovery = True
-                # the recovery waiting spell starts now, not at arrival
+                # the recovery waiting spell starts now, not at arrival;
+                # class/deadline/sampling survive the crash with the state
                 entries.append(QueuedRequest(
-                    rid, r.prompt, r.max_new, t_enqueue=now))
+                    rid, r.prompt, r.max_new, t_enqueue=now,
+                    slo_class=r.slo_class, deadline=r.deadline,
+                    sampling=r.sampling, session=r.session))
         self.gateway.requeue_recovery(entries)
         admitted = set(self.scheduler.admit(now))
         return [q.rid for q in entries if q.rid in admitted]
@@ -484,25 +787,46 @@ class InferenceEngine:
         return plan
 
     def release_request(self, rid: str):
+        """Full teardown of one request's footprint across the stack: the
+        chunk stream, any stale recovery entry, the owning AW's slot +
+        prefill cursor + pending checkpoint WRs, and the store log. Safe
+        for done, cancelled, preempted, and crash-paused requests alike
+        (the slot is only released when this request still holds it)."""
         r = self.requests.pop(rid, None)
         if r is None:
             return
+        # deadline backstop: a request whose first token landed late and
+        # which finished before the next check_deadlines tick still counts
+        if r.deadline is not None and not r.deadline_flagged and \
+                r.t_first_token > r.deadline:
+            r.deadline_flagged = True
+            self.gateway.stats.bump(r.slo_class, "deadline_missed")
+            self._note_request_event("deadline_missed", rid,
+                                     r.t_first_token,
+                                     f"first token at {r.t_first_token:g} "
+                                     f"> deadline {r.deadline:g}")
         if self.chunked is not None:
             self.chunked.drop(rid)
         if r.queued_for_recovery:
             # cancel the pending re-admission: a stale recovery entry must
             # not reach the scheduler after the request is gone
             self.gateway.drop(rid)
-        if r._aw >= 0 and not r.paused and self.aws[r._aw].alive:
-            self.cache = self.layout.clear_slot(self.cache, r.slot)
-            self.aws[r._aw].slots.release(r.slot)
+        if r._aw >= 0 and self.aws[r._aw].alive:
+            # pending WRs and the prefill cursor die with the request, not
+            # with the worker (they reference a log about to be released)
+            self.aws[r._aw].drop_request(rid)
+            if not r.paused:
+                self.cache = self.layout.clear_slot(self.cache, r.slot)
+                self.aws[r._aw].slots.release(r.slot)
         self.store.release(rid)
+        for hook in self._release_hooks:
+            hook(r)
 
     # ------------------------------------------------------------------
     def generate(self, rid: str, prompt: np.ndarray, max_new: int
                  ) -> List[int]:
         """Convenience: run one request to completion."""
-        assert self.submit(rid, prompt, max_new)
+        assert self._submit_sync(rid, prompt, max_new)
         r = self.requests[rid]
         while not r.done:
             self.step()

@@ -1,25 +1,38 @@
-"""Cluster Gateway: admission control, the waiting queue, and AW placement.
+"""Cluster Gateway: multi-class admission, per-class waiting queues, and AW
+placement.
 
 The Gateway is the front door of the serving stack (paper Fig. 5's cluster
-coordinator, request-plane half): every request — fresh arrivals and
-requests preempted by an AW failure alike — enters a FIFO waiting queue and
-is admitted onto an AttentionWorker by a pluggable placement policy. A
-request that cannot be placed (no healthy AW with a free slot) stays at the
-head of the queue and is retried on the next scheduler tick; it is never
-dropped.
+coordinator, request-plane half). Since the typed request API
+(serving/api.py) it is a **multi-class admission plane**: every request —
+fresh arrivals and requests preempted by an AW failure or a planned
+eviction alike — enters the waiting queue of its SLO class
+(``interactive`` / ``standard`` / ``batch``), and admission services the
+class heads by *weighted dequeue* (interactive 4 : standard 2 : batch 1
+credits per round) instead of a single FIFO. Within a class, ordering is
+**deadline-aware**: entries carrying an earlier first-token deadline sort
+ahead of later/undeadlined ones (stable for ties), and recovery entries
+always sit at the very front (they are older than anything behind them).
+A class head that cannot be placed blocks only its own class — it is
+retried next tick, never dropped or overtaken within its class.
 
 Placement policies (select a healthy AW with free capacity, or None):
   * ``least_loaded``     — most free slots wins (default; ties -> lowest id)
   * ``round_robin``      — cycle over healthy AWs, skipping full ones
-  * ``session_affinity`` — stable hash of the session prefix of the request
-    id (``rid.rsplit('-', 1)[0]``), falling back to least-loaded when the
-    home AW is dead or full. Keeps a session's requests co-located so later
-    PRs can exploit prefix-cache locality.
+  * ``session_affinity`` — stable hash of the request's session key (the
+    explicit ``session`` field when given, else the session prefix of the
+    request id, ``rid.rsplit('-', 1)[0]``), falling back to least-loaded
+    when the home AW is dead or full.
+
+Preempt-and-requeue: when an *interactive* head cannot be placed, the
+Gateway consults the engine-installed ``preemptor`` hook, which may
+checkpoint a batch-class victim out of its slot (via the bulk-segment
+path) and requeue it as a recovery entry — planned eviction rides the same
+restore machinery as crash recovery, so the victim later resumes from its
+committed cursor, not from token 0.
 
 Recovery entries (``recovery=True``) carry no prompt work to redo: the
 scheduler restores their committed KV from the checkpoint store instead of
-re-prefilling. They re-enter at the *front* of the queue (they are older
-than anything waiting behind them).
+re-prefilling. They re-enter at the *front* of their class queue.
 """
 from __future__ import annotations
 
@@ -30,6 +43,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.api import (CLASS_WEIGHTS, PREEMPTING_CLASSES,
+                               SLO_CLASSES, STANDARD, SamplingParams)
 from repro.serving.workers import AttentionWorker
 
 
@@ -42,6 +57,25 @@ class QueuedRequest:
     t_enqueue: float = 0.0
     recovery: bool = False          # re-admission of a preempted request
     retries: int = 0                # ticks spent blocked at the queue head
+    slo_class: str = STANDARD
+    deadline: Optional[float] = None   # virtual-clock first-token deadline
+    sampling: Optional[SamplingParams] = None
+    session: Optional[str] = None      # affinity key for placement
+    deadline_flagged: bool = False     # deadline_missed already emitted
+
+    @property
+    def deadline_key(self) -> float:
+        return self.deadline if self.deadline is not None else float("inf")
+
+    @property
+    def placement_key(self) -> str:
+        """Affinity key for placement: the explicit session verbatim, else
+        the session prefix of the rid (``sess-0``/``sess-1`` share
+        ``sess``). Derivation happens HERE, not in the policy, so an
+        explicit session key containing '-' is never truncated."""
+        if self.session is not None:
+            return self.session
+        return SessionAffinityPolicy.session_key(self.rid)
 
 
 # --------------------------------------------------------------------------
@@ -80,22 +114,25 @@ class RoundRobinPolicy:
 
 
 class SessionAffinityPolicy:
-    """Stable-hash the session prefix of the rid onto the AW ring; fall back
-    to least-loaded when the home AW cannot take the request."""
+    """Stable-hash the placement key verbatim onto the AW ring; fall back
+    to least-loaded when the home AW cannot take the request. The caller
+    (``QueuedRequest.placement_key``) supplies either the explicit session
+    or the rid-derived session prefix — the policy never truncates."""
 
     def __init__(self):
         self._fallback = LeastLoadedPolicy()
 
     @staticmethod
     def session_key(rid: str) -> str:
+        """Session prefix of a request id (``sess-3`` -> ``sess``)."""
         return rid.rsplit("-", 1)[0]
 
     def __call__(self, workers: List[AttentionWorker],
-                 rid: str) -> Optional[int]:
-        home = zlib.crc32(self.session_key(rid).encode()) % len(workers)
+                 key: str) -> Optional[int]:
+        home = zlib.crc32(key.encode()) % len(workers)
         if workers[home].has_capacity():
             return home
-        return self._fallback(workers, rid)
+        return self._fallback(workers, key)
 
 
 PLACEMENT_POLICIES = {
@@ -111,11 +148,23 @@ class GatewayStats:
     admitted: int = 0
     requeued: int = 0               # recovery re-admissions queued
     blocked_ticks: int = 0          # head-of-queue retries
+    preemptions: int = 0            # victims evicted to place a higher class
     queue_delay: Dict[str, float] = field(default_factory=dict)
+    # per-class lifecycle counters:
+    #   class -> {enqueued, admitted, preempted, cancelled, deadline_missed}
+    by_class: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    def bump(self, slo_class: str, key: str, n: int = 1):
+        c = self.by_class.setdefault(slo_class, {})
+        c[key] = c.get(key, 0) + n
+
+    def class_count(self, slo_class: str, key: str) -> int:
+        return self.by_class.get(slo_class, {}).get(key, 0)
 
 
 class Gateway:
-    """Admission + waiting queue + placement over the AW pool."""
+    """Multi-class admission + per-class waiting queues + placement over
+    the AW pool."""
 
     def __init__(self, workers: List[AttentionWorker],
                  policy="least_loaded"):
@@ -123,7 +172,8 @@ class Gateway:
         if isinstance(policy, str):
             policy = PLACEMENT_POLICIES[policy]()
         self.policy = policy
-        self.queue: Deque[QueuedRequest] = deque()
+        self.queues: Dict[str, Deque[QueuedRequest]] = {
+            cls: deque() for cls in SLO_CLASSES}
         self.stats = GatewayStats()
         # token-based admission (chunked-prefill plane): cap on prompt
         # tokens admitted but not yet prefilled. ``prefill_load`` is a
@@ -131,32 +181,81 @@ class Gateway:
         # cap 0 = slot-bound admission only.
         self.prefill_token_cap: int = 0
         self.prefill_load = None
+        # engine-installed hook: (blocked interactive head, now) -> bool.
+        # True means a victim's slot was freed (preempt-and-requeue) and
+        # placement should be retried for the head.
+        self.preemptor = None
 
     # -- queue management ---------------------------------------------------
+    @property
+    def queue(self) -> Tuple[QueuedRequest, ...]:
+        """Read-only combined view in class-priority order (back-compat:
+        the single-FIFO era exposed the deque directly)."""
+        return tuple(q for cls in SLO_CLASSES for q in self.queues[cls])
+
     def enqueue(self, rid: str, prompt: np.ndarray, max_new: int, *,
-                now: float = 0.0, frames: Optional[np.ndarray] = None):
-        self.queue.append(QueuedRequest(
-            rid, np.asarray(prompt, np.int32), max_new, frames, now))
+                now: float = 0.0, frames: Optional[np.ndarray] = None,
+                slo_class: str = STANDARD,
+                deadline: Optional[float] = None,
+                sampling: Optional[SamplingParams] = None,
+                session: Optional[str] = None):
+        if slo_class not in SLO_CLASSES:
+            raise ValueError(f"unknown slo_class {slo_class!r}: expected "
+                             f"one of {SLO_CLASSES}")
+        entry = QueuedRequest(rid, np.asarray(prompt, np.int32), max_new,
+                              frames, now, slo_class=slo_class,
+                              deadline=deadline, sampling=sampling,
+                              session=session)
+        self._insert(entry)
         self.stats.enqueued += 1
+        self.stats.bump(slo_class, "enqueued")
+
+    def _insert(self, entry: QueuedRequest):
+        """Deadline-aware, stable insertion: after every recovery entry,
+        after any head that has already been blocked (``retries > 0`` — a
+        deadlined newcomer must not overtake it, or a cap-blocked large
+        prompt could be starved forever by a steady deadlined stream), and
+        after every entry with an equal-or-earlier deadline (undeadlined =
+        +inf, i.e. plain FIFO among themselves)."""
+        q = self.queues[entry.slo_class]
+        i = len(q)
+        for j, e in enumerate(q):
+            if e.recovery or e.retries > 0:
+                continue
+            if e.deadline_key > entry.deadline_key:
+                i = j
+                break
+        q.insert(i, entry)
 
     def requeue_recovery(self, entries: List[QueuedRequest]):
-        """Preempted/recovered requests re-enter at the FRONT of the queue
-        (they are older than everything waiting behind them)."""
-        for q in reversed(entries):
-            q.recovery = True
-            self.queue.appendleft(q)
+        """Preempted/recovered requests re-enter at the FRONT of their
+        class queue (they are older than everything waiting behind them)."""
+        for e in reversed(entries):
+            e.recovery = True
+            self.queues[e.slo_class].appendleft(e)
             self.stats.requeued += 1
 
     def depth(self) -> int:
-        return len(self.queue)
+        return sum(len(q) for q in self.queues.values())
 
-    def drop(self, rid: str) -> bool:
-        """Remove a still-queued request (admission refused by the caller)."""
-        for q in list(self.queue):
-            if q.rid == rid:
-                self.queue.remove(q)
-                return True
-        return False
+    def find(self, rid: str) -> Optional[QueuedRequest]:
+        for q in self.queues.values():
+            for e in q:
+                if e.rid == rid:
+                    return e
+        return None
+
+    def drop(self, rid: str) -> Optional[QueuedRequest]:
+        """Remove a still-queued request from whichever class queue holds
+        it (admission refused, cancellation, or a stale recovery entry).
+        Returns the removed entry, or None. In-flight requests are torn
+        down by ``engine.release_request`` / ``engine.cancel_request``,
+        which also free the owning AW's slot, pending checkpoint WRs, and
+        prefill-stream state."""
+        e = self.find(rid)
+        if e is not None:
+            self.queues[e.slo_class].remove(e)
+        return e
 
     # -- placement ----------------------------------------------------------
     def choose_aw(self, rid: str = "") -> Optional[int]:
@@ -164,42 +263,75 @@ class Gateway:
 
     def admit(self, now: float = 0.0
               ) -> List[Tuple[QueuedRequest, int, int]]:
-        """Pop FIFO while placement succeeds, reserving a slot on the
-        chosen AW per admission (so the policy sees live free counts).
-        Head-of-line blocking is deliberate: a request is never overtaken,
-        only retried. Returns (entry, aw_id, slot) triples."""
+        """Weighted dequeue over the class queues: each round hands every
+        class its weight in admission credits (interactive first), popping
+        that class's head while placement succeeds and reserving a slot on
+        the chosen AW per admission (so the policy sees live free counts).
+        Head-of-line blocking is *per class*: a blocked head stalls only
+        its own class for this tick — it is retried, never overtaken
+        within the class. A blocked interactive head may trigger the
+        preempt-and-requeue hook to evict a batch victim first. Returns
+        (entry, aw_id, slot) triples."""
         admitted = []
         new_tokens = 0                 # fresh prompt tokens admitted now
-        while self.queue:
-            head = self.queue[0]
-            # admission is token-aware, not just slot-aware: a free slot
-            # is not enough if the prefill plane is already saturated with
-            # outstanding prompt tokens. Recovery entries bypass the cap —
-            # their committed prefix restores from the store. The first
-            # admission is always allowed so an over-cap prompt cannot
-            # deadlock the queue.
-            if self.prefill_token_cap and not head.recovery:
-                load = new_tokens + \
-                    (self.prefill_load() if self.prefill_load else 0)
-                if load > 0 and \
-                        load + len(head.prompt) > self.prefill_token_cap:
-                    head.retries += 1
-                    self.stats.blocked_ticks += 1
-                    break
-            aw = self.choose_aw(head.rid)
-            if aw is None:
-                head.retries += 1
-                self.stats.blocked_ticks += 1
+        blocked = set()
+        while True:
+            progressed = False
+            for cls in SLO_CLASSES:
+                if cls in blocked:
+                    continue
+                q = self.queues[cls]
+                for _ in range(CLASS_WEIGHTS[cls]):
+                    if not q:
+                        break
+                    head = q[0]
+                    # admission is token-aware, not just slot-aware: a free
+                    # slot is not enough if the prefill plane is already
+                    # saturated with outstanding prompt tokens. Recovery
+                    # entries bypass the cap — their committed prefix
+                    # restores from the store. The first admission is
+                    # always allowed so an over-cap prompt cannot deadlock
+                    # the queue.
+                    if self.prefill_token_cap and not head.recovery:
+                        load = new_tokens + \
+                            (self.prefill_load() if self.prefill_load else 0)
+                        if load > 0 and \
+                                load + len(head.prompt) > \
+                                self.prefill_token_cap:
+                            head.retries += 1
+                            self.stats.blocked_ticks += 1
+                            blocked.add(cls)
+                            break
+                    aw = self.choose_aw(head.placement_key)
+                    if aw is None and cls in PREEMPTING_CLASSES and \
+                            self.preemptor is not None:
+                        # preempt-and-requeue: evict a batch victim (its KV
+                        # is committed to the store, its slot freed, and it
+                        # re-enters its class queue as a recovery entry);
+                        # stats.preemptions is bumped by preempt_request
+                        # itself, so direct/policy-driven evictions count
+                        # in the same place as hook-driven ones
+                        if self.preemptor(head, now):
+                            aw = self.choose_aw(head.placement_key)
+                    if aw is None:
+                        head.retries += 1
+                        self.stats.blocked_ticks += 1
+                        blocked.add(cls)
+                        break
+                    q.popleft()
+                    if not head.recovery:
+                        new_tokens += len(head.prompt)
+                    slot = self.workers[aw].slots.alloc()
+                    self.stats.admitted += 1
+                    self.stats.bump(cls, "admitted")
+                    # total time spent waiting at the gateway, summed over
+                    # spells (a recovery re-admission is a second spell for
+                    # the same rid)
+                    self.stats.queue_delay[head.rid] = \
+                        self.stats.queue_delay.get(head.rid, 0.0) + \
+                        (now - head.t_enqueue)
+                    admitted.append((head, aw, slot))
+                    progressed = True
+            if not progressed:
                 break
-            self.queue.popleft()
-            if not head.recovery:
-                new_tokens += len(head.prompt)
-            slot = self.workers[aw].slots.alloc()
-            self.stats.admitted += 1
-            # total time spent waiting at the gateway, summed over spells
-            # (a recovery re-admission is a second spell for the same rid)
-            self.stats.queue_delay[head.rid] = \
-                self.stats.queue_delay.get(head.rid, 0.0) + \
-                (now - head.t_enqueue)
-            admitted.append((head, aw, slot))
         return admitted

@@ -43,13 +43,18 @@ class ServeMetrics:
     finished: List[str] = field(default_factory=list)
     duration: float = 0.0
     prefill: dict = field(default_factory=dict)  # scheduler PrefillStats
+    slo_class: Dict[str, str] = field(default_factory=dict)  # rid -> class
+    gateway: dict = field(default_factory=dict)  # GatewayStats snapshot
 
     def throughput(self) -> float:
         return len(self.token_log) / self.duration if self.duration else 0.0
 
-    def tbt_values(self) -> np.ndarray:
+    def tbt_values(self, slo_class: str = None) -> np.ndarray:
         by_req: Dict[str, List[float]] = {}
         for rec in self.token_log:
+            if slo_class is not None and \
+                    self.slo_class.get(rec.rid) != slo_class:
+                continue
             by_req.setdefault(rec.rid, []).append(rec.t)
         gaps = []
         for ts in by_req.values():
@@ -57,8 +62,14 @@ class ServeMetrics:
             gaps.extend(np.diff(ts))
         return np.asarray(gaps) if gaps else np.zeros((0,))
 
-    def max_stall(self) -> float:
-        v = self.tbt_values()
+    def ttft_values(self, slo_class: str = None) -> np.ndarray:
+        vals = [v for rid, v in self.ttft.items()
+                if slo_class is None or
+                self.slo_class.get(rid) == slo_class]
+        return np.asarray(vals) if vals else np.zeros((0,))
+
+    def max_stall(self, slo_class: str = None) -> float:
+        v = self.tbt_values(slo_class)
         return float(v.max()) if v.size else 0.0
 
     def queue_delay_values(self) -> np.ndarray:
@@ -105,7 +116,7 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     up as the TBT stall it is for co-resident decodes, and the chunked
     plane's per-tick token budget bounds that stall."""
     m = ServeMetrics()
-    gw, sched = engine.gateway, engine.scheduler
+    gw = engine.gateway
     clock = 0.0
     pending = sorted(workload, key=lambda r: r.arrival)
     qi = 0
@@ -136,7 +147,7 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 scaled[i] = True
         if orchestrator is not None:
             orchestrator.tick(clock)
-        # arrivals enter the Gateway's FIFO queue (never dropped);
+        # arrivals enter their SLO class's Gateway queue (never dropped);
         # admission + bucketed prefill happen in one scheduler pass
         while qi < len(pending) and pending[qi].arrival <= clock:
             r = pending[qi]
@@ -144,12 +155,16 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
             # TTFT are measured from arrival, not from the tick the loop
             # first noticed the request
             gw.enqueue(r.request_id, r.prompt_tokens(engine.cfg.vocab_size),
-                       r.max_new_tokens, now=r.arrival)
+                       r.max_new_tokens, now=r.arrival,
+                       slo_class=getattr(r, "slo_class", "standard"),
+                       deadline=r.deadline if getattr(r, "deadline", -1.0)
+                       >= 0 else None)
+            m.slo_class[r.request_id] = getattr(r, "slo_class", "standard")
             qi += 1
         pf0 = engine.prefill_tokens_done()
-        sched.admit(clock)
-        # decode step (preceded by a budgeted chunked-prefill slice when
-        # the plane is on)
+        # decode step: engine.step runs the admission pass itself (when
+        # anything is queued), then a budgeted chunked-prefill slice when
+        # the plane is on, then decode
         t0 = time.monotonic()
         out = engine.step(now=clock)
         dt = step_time if step_time is not None else time.monotonic() - t0
@@ -158,9 +173,11 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
         if not out:
             # idle tick: quit once nothing can ever make progress again —
             # including scheduled failure/scale injections that have not
-            # reached their trigger time yet
+            # reached their trigger time yet, and requests (preempted or
+            # fresh) still waiting in a Gateway class queue
             if qi >= len(pending) and not engine.active_requests() and \
                     not engine.prefilling_requests() and \
+                    gw.depth() == 0 and \
                     all(injected) and all(scaled) and \
                     (orchestrator is None or orchestrator.outstanding == 0):
                 break
@@ -191,4 +208,8 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     m.duration = clock
     m.queue_delay = dict(gw.stats.queue_delay)
     m.prefill = engine.prefill_snapshot()
+    m.gateway = {"preemptions": gw.stats.preemptions,
+                 "blocked_ticks": gw.stats.blocked_ticks,
+                 "by_class": {c: dict(v)
+                              for c, v in gw.stats.by_class.items()}}
     return m

@@ -97,6 +97,15 @@ class AttentionWorker:
     def has_capacity(self) -> bool:
         return self.alive and self.slots.free_count() > 0
 
+    def drop_request(self, rid: str) -> int:
+        """Planned teardown of one request's residency on this AW (cancel,
+        release, preemption): forget its in-flight prefill cursor and
+        discard its pending checkpoint WRs. Unlike ``fail()``, the slot
+        partition is untouched — the caller releases the slot explicitly.
+        Returns the number of pending WRs discarded."""
+        self.prefills.pop(rid, None)
+        return self.checkpointer.drop_request(rid)
+
     # -- lifecycle ----------------------------------------------------------
     def fail(self, route_state: RouteState) -> RouteState:
         """Crash: slots (and any un-checkpointed KV) are gone — checkpoint

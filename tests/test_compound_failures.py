@@ -3,7 +3,9 @@ recovery windows. The bar is the paper's end-to-end exactness claim applied
 to *overlapping* failures — no lost requests, outputs bit-identical to the
 failure-free run — which exercises the elastic placement plane's pinned
 failover replicas (plan_reprotect's dead_ews contract) and the per-request
-restoration path simultaneously."""
+restoration path simultaneously. Since the typed request API the same bar
+covers the *scheduling* substrate: cancellation landing inside a recovery
+window, and mixed-SLO workloads whose preemptions overlap AW+EW failures."""
 import dataclasses
 
 import jax
@@ -11,6 +13,7 @@ import numpy as np
 
 from conftest import reduced
 from repro.core.orchestrator import Orchestrator
+from repro.serving.api import RequestSpec
 from repro.serving.engine import EngineConfig, InferenceEngine
 
 PROMPT_A = np.arange(1, 9, dtype=np.int32)
@@ -145,3 +148,84 @@ def test_compound_failure_during_chunked_prefill():
         eng.step()
     assert eng.requests["r"].tokens == ref
     assert eng.chunked.stats.resumed == 1       # stream resumed, not redone
+
+
+def test_cancel_during_aw_recovery_loses_no_other_request():
+    """AW0 dies holding two requests; one of them is cancelled inside the
+    recovery window (restored-or-still-queued). The cancellation must tear
+    down cleanly — no stale recovery entry, no slot or store leak — and
+    every surviving request must still finish bit-identical."""
+    ref_b = make_engine(max_batch=4).generate("b", PROMPT_B, 14)
+    ref_c = make_engine(max_batch=4).generate("c", PROMPT_A + 1, 14)
+
+    eng = make_engine(max_batch=4)        # 2 slots per AW
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    # least_loaded: a -> AW0, b -> AW1, c -> AW0 (tie toward lowest id)
+    ha = eng.client.submit(RequestSpec(rid="a", prompt=PROMPT_A,
+                                       max_new=14))
+    hb = eng.client.submit(RequestSpec(rid="b", prompt=PROMPT_B,
+                                       max_new=14))
+    hc = eng.client.submit(RequestSpec(rid="c", prompt=PROMPT_A + 1,
+                                       max_new=14))
+    assert eng.requests["a"].aw == 0 and eng.requests["c"].aw == 0
+    assert eng.requests["b"].aw == 1
+    for _ in range(4):
+        eng.step()
+    orch.inject_failure("aw", 0, now=5.0)
+    orch.tick(5.0 + orch.detection_latency() + 1e-6)
+    # AW1 had one free slot: one victim restored, the other still queued
+    assert eng.gateway.depth() == 1
+    # cancel "a" inside the recovery window, whichever side it landed on
+    assert ha.cancel(now=5.1)
+    assert ha.state() == "cancelled"
+    assert eng.gateway.find("a") is None      # no stale recovery entry
+    assert "a" not in eng.requests
+    while not (hb.done() and hc.done()):
+        eng.step()
+    assert hb.tokens() == ref_b
+    assert hc.tokens() == ref_c               # the other victim lost nothing
+    # background provisioning restores the full pool; slot accounting is
+    # clean once the survivors release
+    orch.tick(7.0)
+    eng.release_request("b")
+    eng.release_request("c")
+    assert sum(w.slots.free_count() for w in eng.aws) == 4
+    assert not eng.store.active_requests_on(0)
+
+
+def test_mixed_class_workload_with_preemption_under_aw_ew_failure():
+    """The full stack at once: a batch wave saturates the pool, an
+    interactive arrival preempts a victim, then an AW and an EW die in the
+    same detection window. Every request — preempted, restored, rerouted —
+    finishes bit-identical to its failure-free run."""
+    prompts = {f"b{i}": PROMPT_A + i for i in range(4)}
+    prompts["int"] = PROMPT_B
+    refs = {rid: make_engine(max_batch=4).generate(rid, p, 18)
+            for rid, p in prompts.items()}
+
+    eng = make_engine(max_batch=4)
+    orch = Orchestrator(eng, worker_init_time=1.0)
+    handles = {rid: eng.client.submit(RequestSpec(
+        rid=rid, prompt=prompts[rid], max_new=18, slo_class="batch"))
+        for rid in ("b0", "b1", "b2", "b3")}
+    for _ in range(3):
+        eng.step()
+    handles["int"] = eng.client.submit(RequestSpec(
+        rid="int", prompt=prompts["int"], max_new=18,
+        slo_class="interactive"), now=4.0)
+    assert eng.gateway.stats.preemptions == 1   # a victim was evicted
+    orch.inject_failure("aw", 0, now=5.0)
+    orch.inject_failure("ew", 0, now=5.0)
+    orch.tick(5.0 + orch.detection_latency() + 1e-6)
+    n = 0
+    while not all(h.done() for h in handles.values()) and n < 600:
+        eng.step()
+        orch.tick(6.0 + 0.01 * n)
+        for rid in [r.rid for r in eng.requests.values() if r.done]:
+            eng.release_request(rid)
+        n += 1
+    for rid, ref in refs.items():
+        assert handles[rid].tokens() == ref, rid
+    # preempted/cancelled/deadline events rode the orchestrator timeline
+    assert any(e.kind == "preempted" for e in orch.events)
+    assert eng.store.stats.restores >= 2        # preemption + AW recovery

@@ -78,13 +78,30 @@ def test_round_robin_cycles_over_healthy():
 def test_session_affinity_colocates_and_falls_back():
     aws = make_pool(num_aw=2, per_aw=2)
     pol = SessionAffinityPolicy()
-    rids = ["sess7-0", "sess7-1", "sess7-2"]
-    homes = [pol(aws, r) for r in rids]
+    # the policy hashes the placement key verbatim; rid-derived keys share
+    # the session prefix, so the session's requests share a home
+    keys = [SessionAffinityPolicy.session_key(r)
+            for r in ["sess7-0", "sess7-1", "sess7-2"]]
+    homes = [pol(aws, k) for k in keys]
     assert len(set(homes)) == 1        # same session -> same AW
     home = homes[0]
     aws[home].slots.alloc()
     aws[home].slots.alloc()            # home full -> least-loaded fallback
-    assert pol(aws, rids[0]) == 1 - home
+    assert pol(aws, keys[0]) == 1 - home
+
+
+def test_explicit_session_keys_with_hyphens_stay_distinct():
+    """An explicit session key is hashed verbatim — hyphenated tenant ids
+    must not collapse onto one home AW via rid-style prefix truncation."""
+    from repro.serving.gateway import QueuedRequest
+    keys = {QueuedRequest(f"r{i}", PROMPT, 4,
+                          session=f"user-{i}").placement_key
+            for i in range(8)}
+    assert len(keys) == 8
+    aws = make_pool(num_aw=4, per_aw=8)
+    pol = SessionAffinityPolicy()
+    homes = {k: pol(aws, k) for k in keys}
+    assert len(set(homes.values())) > 1   # sessions spread over the ring
 
 
 def _dummy_rs(num_aw):
@@ -116,6 +133,70 @@ def test_fail_aw_without_checkpoint_does_not_strand_requests():
     while not eng.requests["r"].done:        # must terminate
         eng.step()
     assert len(eng.requests["r"].tokens) == 8
+
+
+def test_multi_class_weighted_dequeue_prioritizes_interactive():
+    """Under slot scarcity the interactive class is serviced first; within
+    a class, FIFO holds. Weighted dequeue, not strict priority: batch is
+    not starved when capacity remains."""
+    aws = make_pool(num_aw=2, per_aw=2)   # 4 slots
+    gw = Gateway(aws)
+    for i in range(3):
+        gw.enqueue(f"b{i}", PROMPT, 4, now=0.0, slo_class="batch")
+    for i in range(2):
+        gw.enqueue(f"i{i}", PROMPT, 4, now=0.0, slo_class="interactive")
+    admitted = [q.rid for q, _, _ in gw.admit(now=1.0)]
+    # interactive head served before batch despite arriving later
+    assert admitted[:2] == ["i0", "i1"]
+    assert set(admitted) == {"i0", "i1", "b0", "b1"}
+    assert [q.rid for q in gw.queue] == ["b2"]
+
+
+def test_deadline_orders_within_class_but_never_crosses_recovery():
+    aws = make_pool(num_aw=2, per_aw=2)
+    gw = Gateway(aws)
+    gw.enqueue("late", PROMPT, 4, now=0.0)                 # no deadline
+    gw.enqueue("soon", PROMPT, 4, now=1.0, deadline=5.0)
+    gw.enqueue("sooner", PROMPT, 4, now=2.0, deadline=2.0)
+    gw.enqueue("also-soon", PROMPT, 4, now=3.0, deadline=5.0)  # stable tie
+    from repro.serving.gateway import QueuedRequest
+    gw.requeue_recovery([QueuedRequest("old", PROMPT, 4, t_enqueue=0.5)])
+    assert [q.rid for q in gw.queue] == \
+        ["old", "sooner", "soon", "also-soon", "late"]
+
+
+def test_deadlined_arrival_never_overtakes_blocked_head():
+    """A head that has already been blocked (retries > 0) keeps its turn:
+    deadline ordering applies among waiting entries, not over a starving
+    head (e.g. a large prompt blocked on the prefill-token cap)."""
+    aws = make_pool(num_aw=1, per_aw=1)
+    gw = Gateway(aws)
+    aws[0].slots.alloc()                      # pool full: heads block
+    gw.enqueue("big", PROMPT, 4, now=0.0)     # no deadline
+    gw.admit(now=1.0)
+    assert gw.queue[0].retries == 1
+    gw.enqueue("urgent", PROMPT, 4, now=2.0, deadline=3.0)
+    assert [q.rid for q in gw.queue] == ["big", "urgent"]
+    aws[0].slots.release(0)
+    assert [q.rid for q, _, _ in gw.admit(now=4.0)] == ["big"]
+
+
+def test_drop_searches_all_class_queues():
+    aws = make_pool()
+    gw = Gateway(aws)
+    gw.enqueue("s", PROMPT, 4, slo_class="standard")
+    gw.enqueue("b", PROMPT, 4, slo_class="batch")
+    gw.enqueue("i", PROMPT, 4, slo_class="interactive")
+    dropped = gw.drop("b")
+    assert dropped is not None and dropped.slo_class == "batch"
+    assert gw.drop("b") is None
+    assert gw.depth() == 2 and gw.find("b") is None
+
+
+def test_unknown_slo_class_rejected():
+    gw = Gateway(make_pool())
+    with pytest.raises(ValueError, match="slo_class"):
+        gw.enqueue("x", PROMPT, 4, slo_class="urgent")
 
 
 def test_policies_differ_but_both_decode_correctly():

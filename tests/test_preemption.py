@@ -1,0 +1,193 @@
+"""Preempt-and-requeue tests: planned eviction rides the recovery path.
+
+The bar mirrors the failure tests' exactness claim, applied to evictions
+the scheduler *chose*: a preempted request resumes from its committed
+checkpoint cursor (never from token 0), its tokens are bit-identical to
+the unpreempted run, mid-chunked-prefill and mid-decode alike, and no
+placement/preemption transition ever triggers a new jit trace of the
+decode step."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from conftest import reduced
+from repro.serving.api import RequestSpec
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+LONG_PROMPT = np.arange(1, 33, dtype=np.int32)
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    defaults = dict(max_batch=4, max_seq=64, num_aw=2, num_ew=2)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(7))
+
+
+def run_all(eng, handles, max_steps=500):
+    n = 0
+    while not all(h.done() for h in handles) and n < max_steps:
+        eng.step()
+        for rid in [r.rid for r in eng.requests.values() if r.done]:
+            eng.release_request(rid)
+        n += 1
+    assert all(h.done() for h in handles)
+
+
+# --------------------------------------------------------------------------
+# bit-identity
+# --------------------------------------------------------------------------
+
+def test_preempt_mid_decode_bit_identical():
+    ref = make_engine().generate("r", PROMPT, 14)
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=14,
+                                      slo_class="batch"))
+    for _ in range(4):
+        eng.step()
+    n_before = len(h.tokens())
+    assert eng.preempt_request("r", now=1.0)
+    assert h.state() == "preempted"
+    # planned eviction flushes the watermark: zero tokens rewound
+    assert len(eng.requests["r"].tokens) == n_before
+    while not h.done():
+        eng.step()
+    assert h.tokens() == ref
+    assert h.status().preemptions == 1
+    # direct evictions count in the same place as hook-driven ones
+    assert eng.gateway.stats.preemptions == 1
+    assert eng.store.stats.restores == 1      # resumed via §6.2, once
+
+
+def test_preempt_mid_chunked_prefill_resumes_from_cursor():
+    kw = dict(chunk_token_budget=8, prefill_bucket=16)
+    ref = make_engine(**kw).generate("r", LONG_PROMPT, 10)
+    eng = make_engine(**kw)
+    h = eng.client.submit(RequestSpec(rid="r", prompt=LONG_PROMPT,
+                                      max_new=10, slo_class="batch"))
+    eng.step()
+    r = eng.requests["r"]
+    assert r.prefilling and 0 < r.prefill_cursor < len(LONG_PROMPT) - 1
+    cursor = r.prefill_cursor
+    assert eng.preempt_request("r", now=1.0)
+    while not h.done():
+        eng.step()
+    assert h.tokens() == ref
+    assert eng.chunked.stats.resumed == 1
+    # no from-token-0 re-prefill: the committed prefix [0, cursor) was
+    # restored, so total chunk work equals the prompt exactly
+    assert eng.chunked.stats.prefilled_tokens["r"] == len(LONG_PROMPT) - 1
+    assert eng.chunked.stats.restored_tokens["r"] == cursor
+
+
+def test_repeated_preemption_is_exact():
+    ref = make_engine().generate("r", PROMPT, 16)
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=16,
+                                      slo_class="batch"))
+    for k in range(3):
+        for _ in range(2):
+            eng.step()
+        assert eng.preempt_request("r", now=float(k))
+        eng.step()                    # recovery entry re-admits
+    while not h.done():
+        eng.step()
+    assert h.tokens() == ref
+    assert h.status().preemptions == 3
+
+
+def test_preempt_without_per_token_checkpointing_uses_bulk_path():
+    """checkpoint=False engines have no async stream; planned eviction
+    bulk-checkpoints the victim's whole resident prefix through
+    KVCheckpointer.checkpoint_range and still resumes exactly."""
+    ref = make_engine(checkpoint=False).generate("r", PROMPT, 12)
+    eng = make_engine(checkpoint=False)
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=12,
+                                      slo_class="batch"))
+    for _ in range(4):
+        eng.step()
+    assert eng.store.stats.updates == 0       # nothing streamed so far
+    assert eng.preempt_request("r", now=1.0)
+    assert eng.store.stats.updates > 0        # the bulk segments landed
+    resume_from = eng.store.committed_token("r")
+    assert resume_from == eng.requests["r"].pos - 1
+    while not h.done():
+        eng.step()
+    assert h.tokens() == ref
+
+
+# --------------------------------------------------------------------------
+# gateway-triggered preemption (the admission plane's hook)
+# --------------------------------------------------------------------------
+
+def test_interactive_preempts_saturating_batch():
+    prompts = {f"b{i}": PROMPT + i for i in range(4)}
+    refs = {rid: make_engine().generate(rid, p, 24)
+            for rid, p in prompts.items()}
+    eng = make_engine()
+    bh = [eng.client.submit(RequestSpec(rid=rid, prompt=p, max_new=24,
+                                        slo_class="batch"))
+          for rid, p in prompts.items()]
+    for _ in range(3):
+        eng.step()
+    assert all(not w.has_capacity() for w in eng.aws)
+    hi = eng.client.submit(RequestSpec(rid="int", prompt=PROMPT + 9,
+                                       max_new=4, slo_class="interactive"),
+                           now=1.0)
+    # placed immediately: a batch victim was checkpointed out of its slot
+    assert hi.state() == "placed"
+    assert eng.gateway.stats.preemptions == 1
+    assert sum(1 for h in bh if h.state() == "preempted") == 1
+    victim = next(h for h in bh if h.state() == "preempted")
+    # the youngest admit is the victim (elders are closer to done)
+    assert victim.rid == "b3"
+    assert any(e.kind == "preempted" and e.worker == "b3"
+               for e in eng.request_log)
+    run_all(eng, bh + [hi])
+    for rid, ref in refs.items():
+        assert eng.client.handle(rid).tokens() == ref, rid
+    ref_int = make_engine().generate("int", PROMPT + 9, 4)
+    assert hi.tokens() == ref_int
+
+
+def test_standard_class_never_preempts():
+    eng = make_engine()
+    for i in range(4):
+        eng.client.submit(RequestSpec(rid=f"b{i}", prompt=PROMPT,
+                                      max_new=30, slo_class="batch"))
+    hs = eng.client.submit(RequestSpec(rid="s", prompt=PROMPT, max_new=4,
+                                       slo_class="standard"))
+    assert hs.state() == "queued"
+    assert eng.gateway.stats.preemptions == 0
+
+
+def test_preempt_disabled_by_config():
+    eng = make_engine(preempt=False)
+    for i in range(4):
+        eng.client.submit(RequestSpec(rid=f"b{i}", prompt=PROMPT,
+                                      max_new=30, slo_class="batch"))
+    hi = eng.client.submit(RequestSpec(rid="int", prompt=PROMPT,
+                                       max_new=4,
+                                       slo_class="interactive"))
+    assert hi.state() == "queued"
+    assert eng.gateway.stats.preemptions == 0
+
+
+# --------------------------------------------------------------------------
+# zero-new-jit-trace invariant (the placement plane's bar, extended)
+# --------------------------------------------------------------------------
+
+def test_preemption_triggers_no_new_decode_traces():
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=20,
+                                      slo_class="batch"))
+    for _ in range(3):
+        eng.step()
+    traces = eng._decode._cache_size()
+    assert eng.preempt_request("r", now=1.0)
+    while not h.done():
+        eng.step()
+    assert eng._decode._cache_size() == traces

@@ -1,0 +1,292 @@
+"""Typed request-lifecycle API tests (serving/api.py): RequestSpec/Client/
+RequestHandle semantics — status state machine, incremental streaming,
+per-request sampling, session affinity, cancellation teardown, deadline
+accounting — plus the pinned behaviour of the deprecated
+``InferenceEngine.submit`` shim."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.serving.api import RequestSpec, SamplingParams
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+PROMPT = np.arange(1, 7, dtype=np.int32)
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    defaults = dict(max_batch=4, max_seq=48, num_aw=2, num_ew=2)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(5))
+
+
+def drain_done(eng):
+    for rid in [r.rid for r in eng.requests.values() if r.done]:
+        eng.release_request(rid)
+
+
+# --------------------------------------------------------------------------
+# lifecycle + streaming
+# --------------------------------------------------------------------------
+
+def test_handle_lifecycle_and_streaming():
+    eng = make_engine()
+    ref = eng.generate("ref", PROMPT, 8)
+    eng.release_request("ref")
+
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=8))
+    assert h.state() == "placed"          # admitted, no tokens yet
+    streamed = []
+    while not h.done():
+        eng.step()
+        streamed.extend(h.new_tokens())
+    assert h.state() == "done"
+    assert streamed == ref == h.tokens()
+    st = h.status()
+    assert st.state == "done" and st.tokens_generated == 8
+    assert st.preemptions == 0 and not st.deadline_missed
+
+    # the handle survives engine-side release (final state is pinned)
+    eng.release_request("r")
+    assert "r" not in eng.requests
+    assert h.tokens() == ref and h.state() == "done"
+
+
+def test_queued_state_and_auto_rid():
+    eng = make_engine()
+    handles = [eng.client.submit(RequestSpec(prompt=PROMPT, max_new=30))
+               for _ in range(4)]
+    assert all(h.rid.startswith("req-") for h in handles)
+    extra = eng.client.submit(RequestSpec(prompt=PROMPT, max_new=4))
+    assert extra.state() == "queued"      # pool full: waits, not refused
+    assert eng.gateway.depth() == 1
+    # capacity frees -> admitted by the scheduler's own admission pass
+    handles[0].cancel()
+    eng.step()
+    assert extra.state() in ("placed", "decoding")
+
+
+def test_prefilling_state_via_chunked_plane():
+    eng = make_engine(max_seq=64, chunk_token_budget=8, prefill_bucket=16)
+    long_prompt = np.arange(1, 33, dtype=np.int32)
+    h = eng.client.submit(RequestSpec(rid="r", prompt=long_prompt,
+                                      max_new=4))
+    eng.step()
+    assert h.state() == "prefilling"
+    assert h.status().prefill_cursor > 0
+    while not h.done():
+        eng.step()
+    assert len(h.tokens()) == 4
+
+
+# --------------------------------------------------------------------------
+# per-request sampling + session affinity
+# --------------------------------------------------------------------------
+
+def test_per_request_sampling_overrides_engine_default():
+    # engine default is NON-greedy; a spec pinning greedy=True must still
+    # reproduce the engine-default greedy reference exactly
+    ref = make_engine().generate("ref", PROMPT, 8)
+    eng = make_engine(greedy=False, temperature=1.5, sample_seed=3)
+    h_greedy = eng.client.submit(RequestSpec(
+        rid="g", prompt=PROMPT, max_new=8,
+        sampling=SamplingParams(greedy=True)))
+    h_default = eng.client.submit(RequestSpec(
+        rid="d", prompt=PROMPT, max_new=8))
+    while not (h_greedy.done() and h_default.done()):
+        eng.step()
+    assert h_greedy.tokens() == ref
+    assert h_default.tokens() != ref      # engine-wide sampling still on
+
+
+def test_session_key_drives_affinity_placement():
+    eng = make_engine(max_batch=8, placement="session_affinity")
+    hs = [eng.client.submit(RequestSpec(
+        rid=f"wildly-different-rid-{i}", prompt=PROMPT + i, max_new=4,
+        session="tenant-7")) for i in range(3)]
+    aws = {eng.requests[h.rid].aw for h in hs}
+    assert len(aws) == 1                  # explicit session key co-locates
+
+
+# --------------------------------------------------------------------------
+# cancellation
+# --------------------------------------------------------------------------
+
+def test_cancel_queued_request():
+    eng = make_engine()
+    for i in range(4):
+        eng.client.submit(RequestSpec(rid=f"b{i}", prompt=PROMPT,
+                                      max_new=30))
+    h = eng.client.submit(RequestSpec(rid="w", prompt=PROMPT, max_new=4))
+    assert h.state() == "queued"
+    assert h.cancel()
+    assert h.state() == "cancelled"
+    assert eng.gateway.depth() == 0 and "w" not in eng.requests
+    assert eng.gateway.stats.class_count("standard", "cancelled") == 1
+
+
+def test_cancel_in_flight_releases_slot_and_store():
+    eng = make_engine()
+    h1 = eng.client.submit(RequestSpec(rid="x", prompt=PROMPT, max_new=20))
+    h2 = eng.client.submit(RequestSpec(rid="y", prompt=PROMPT + 1,
+                                       max_new=6))
+    ref_y = make_engine().generate("y", PROMPT + 1, 6)
+    for _ in range(2):
+        eng.step()
+    aw = eng.requests["x"].aw
+    free_before = eng.aws[aw].slots.free_count()
+    assert h1.cancel(now=0.5)
+    assert h1.state() == "cancelled"
+    assert "x" not in eng.requests
+    assert eng.aws[aw].slots.free_count() == free_before + 1
+    assert "x" not in eng.store.active_requests_on(aw)
+    # cancel is not a crash: the co-resident request is untouched
+    while not h2.done():
+        eng.step()
+    assert h2.tokens() == ref_y
+    assert any(e.kind == "cancelled" and e.worker == "x"
+               for e in eng.request_log)
+
+
+def test_cancel_mid_chunked_prefill_drops_stream():
+    eng = make_engine(max_seq=64, chunk_token_budget=8, prefill_bucket=16)
+    long_prompt = np.arange(1, 33, dtype=np.int32)
+    h = eng.client.submit(RequestSpec(rid="r", prompt=long_prompt,
+                                      max_new=4))
+    eng.step()
+    aw = eng.requests["r"].aw
+    assert "r" in eng.aws[aw].prefills
+    assert h.cancel()
+    assert "r" not in eng.aws[aw].prefills      # cursor entry dropped
+    assert "r" not in eng.chunked.jobs          # stream closed
+    assert eng.aws[aw].slots.free_count() == eng.aws[aw].slots.capacity
+    eng.step()                                   # plane keeps ticking
+
+
+def test_cancel_unknown_rid_is_noop():
+    eng = make_engine()
+    assert not eng.cancel_request("nope")
+
+
+def test_forget_drops_terminal_handles_only():
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=3))
+    with pytest.raises(ValueError, match="still live"):
+        eng.client.forget("r")
+    while not h.done():
+        eng.step()
+    assert eng.client.forget("r")
+    assert eng.client.handle("r") is None
+    assert not eng.client.forget("r")
+    assert h.tokens()                      # the caller's reference lives on
+
+
+def test_rid_reuse_after_completion_leaks_nothing():
+    eng = make_engine()
+    free0 = sum(w.slots.free_count() for w in eng.aws)
+    first_handle = first_tokens = None
+    for _ in range(6):                    # > max_batch reuses of one rid
+        h = eng.client.submit(RequestSpec(rid="same", prompt=PROMPT,
+                                          max_new=3))
+        while not h.done():
+            eng.step()
+        if first_handle is None:
+            first_handle, first_tokens = h, h.tokens()
+    # an old handle keeps ITS pinned result across rid reuse
+    assert first_handle.done() and first_handle.tokens() == first_tokens
+    assert len(h.tokens()) == 3
+    eng.release_request("same")
+    assert sum(w.slots.free_count() for w in eng.aws) == free0
+    # an in-flight rid (queued or resident) still refuses reuse
+    h2 = eng.client.submit(RequestSpec(rid="busy", prompt=PROMPT,
+                                       max_new=10))
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.client.submit(RequestSpec(rid="busy", prompt=PROMPT,
+                                      max_new=2))
+
+
+# --------------------------------------------------------------------------
+# deadlines
+# --------------------------------------------------------------------------
+
+def test_deadline_missed_emitted_once_and_request_survives():
+    eng = make_engine()
+    for i in range(4):
+        eng.client.submit(RequestSpec(rid=f"b{i}", prompt=PROMPT,
+                                      max_new=12, slo_class="batch"))
+    # queued past its deadline: flagged, not dropped
+    h = eng.client.submit(RequestSpec(rid="d", prompt=PROMPT, max_new=4,
+                                      slo_class="standard", deadline=0.1),
+                          now=0.0)
+    n = 0
+    while not h.done() and n < 200:
+        eng.step(now=1.0 + 0.02 * n)
+        drain_done(eng)
+        n += 1
+    assert h.done() and len(h.tokens()) == 4
+    assert eng.gateway.stats.class_count("standard", "deadline_missed") == 1
+    assert sum(1 for e in eng.request_log
+               if e.kind == "deadline_missed" and e.worker == "d") == 1
+
+
+def test_crash_recovery_of_on_time_request_is_not_a_deadline_miss():
+    """An AW crash requeues a recovery entry carrying the deadline; if the
+    request's first token was delivered on time, the entry waiting out its
+    deadline in the queue must NOT count as an SLO miss."""
+    eng = make_engine()                    # 4 slots over 2 AWs
+    fills = [eng.client.submit(RequestSpec(rid=f"f{i}", prompt=PROMPT + i,
+                                           max_new=4)) for i in range(3)]
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=12,
+                                      deadline=0.5), now=0.0)
+    aw_r = eng.requests["r"].aw
+    eng.step(now=0.1)                      # first tokens at 0.1 < 0.5
+    assert 0 <= eng.requests["r"].t_first_token <= 0.5
+    eng.fail_aw(aw_r)
+    eng.recover_aw_requests(now=1.0)
+    # the surviving AW is full: r waits in the queue past its deadline
+    assert eng.gateway.find("r") is not None
+    n = 0
+    while not h.done() and n < 100:
+        eng.step(now=1.1 + 0.02 * n)
+        drain_done(eng)
+        n += 1
+    assert h.done()
+    assert eng.gateway.stats.class_count("standard", "deadline_missed") == 0
+    assert not any(e.kind == "deadline_missed" for e in eng.request_log)
+
+
+# --------------------------------------------------------------------------
+# the deprecated submit shim (pinned behaviour)
+# --------------------------------------------------------------------------
+
+def test_submit_shim_deprecated_but_compatible():
+    eng = make_engine()
+    with pytest.warns(DeprecationWarning, match="submit.*deprecated"):
+        ok = eng.submit("r0", PROMPT, 6)
+    assert ok is True and "r0" in eng.requests
+    # historical sync-refuse semantics: a full pool refuses, leaves no
+    # queue residue, and the rid can be resubmitted later
+    for i in range(3):
+        with pytest.warns(DeprecationWarning):
+            assert eng.submit(f"f{i}", PROMPT, 6)
+    with pytest.warns(DeprecationWarning):
+        refused = eng.submit("over", PROMPT, 6)
+    assert refused is False
+    assert eng.gateway.depth() == 0 and "over" not in eng.requests
+    # the shim rides the same plane: requests decode identically
+    ref = make_engine().generate("r0", PROMPT, 6)
+    while not eng.requests["r0"].done:
+        eng.step()
+    assert eng.requests["r0"].tokens == ref
+
+
+def test_generate_does_not_warn():
+    import warnings as w
+    eng = make_engine()
+    with w.catch_warnings():
+        w.simplefilter("error", DeprecationWarning)
+        eng.generate("r", PROMPT, 4)
