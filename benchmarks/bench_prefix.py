@@ -1,0 +1,188 @@
+"""PR-5 tentpole: the prefix-cache plane (serving/prefixcache.py).
+
+Two trajectories on the ``multi_turn_chat`` workload (sessions replaying
+their whole conversation every turn), identical workload and virtual
+clock per comparison:
+
+  * **cold vs warm** — prefix cache off vs on. Warm turns (turn >= 1)
+    adopt the previous turn's committed KV by slot reference and prefill
+    only the new turn chunk, so warm-turn TTFT drops and the hit rate
+    (adopted tokens / warm-turn prompt prefix tokens) is the headline.
+  * **recovery-with-prefix vs recovery-cold** — an AW failure mid-run
+    with checkpoint-backed prefix restoration on vs off. With
+    restoration, the dead AW's cached session prefixes are rebuilt from
+    the checkpoint store on the failover AW, so post-failure turns still
+    hit; without it, every surviving session pays a cold re-prefill.
+
+Prefill work is charged to the virtual clock per real token
+(``prefill_token_time``), so skipped prefill is visible as TTFT, exactly
+as it would be on hardware. Results accumulate in
+benchmarks/results/prefix.json; ``BENCH_SMOKE=1`` shrinks the run for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Row, reduced_engine
+from repro.data.workloads import make_workload
+from repro.serving.scheduler import FailurePlan, run_serving
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "prefix.json")
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+STEP = 0.02
+TOKEN_TIME = 0.002
+
+
+def _engine(prefix_slots, prefix_restore=True):
+    return reduced_engine(seed=0, max_batch=8, max_seq=96,
+                          chunk_token_budget=16,
+                          placement="session_affinity",
+                          prefix_cache_slots=prefix_slots,
+                          prefix_restore=prefix_restore)
+
+
+def _workload(turns):
+    wl = make_workload("multi_turn_chat", rate_rps=8.0,
+                       duration=1.0 if SMOKE else 2.0, seed=1,
+                       chat_turns=turns, chat_turn_gap=0.7,
+                       chat_max_new=4)
+    assert wl, "multi_turn_chat drew no sessions"
+    return wl
+
+
+def _turn_of(rid: str) -> int:
+    return int(rid.rsplit("-t", 1)[1])
+
+
+def _summarize(m, wl):
+    warm_rids = {w.request_id for w in wl if w.turn >= 1}
+    warm_ttft = np.asarray([v for rid, v in m.ttft.items()
+                            if rid in warm_rids and v >= 0])
+    cold_ttft = np.asarray([v for rid, v in m.ttft.items()
+                            if rid not in warm_rids and v >= 0])
+    # hit rate over the prefix tokens warm turns would otherwise prefill
+    warm_prefix_tokens = sum(w.prompt_len - 1 for w in wl
+                             if w.request_id in warm_rids)
+    pf = m.gateway["prefix"]
+    return {
+        "finished": len(m.finished),
+        "requests": len(wl),
+        "ttft_warm_turn_p50_s": float(np.median(warm_ttft))
+        if warm_ttft.size else 0.0,
+        "ttft_warm_turn_p95_s": float(np.percentile(warm_ttft, 95))
+        if warm_ttft.size else 0.0,
+        "ttft_first_turn_p50_s": float(np.median(cold_ttft))
+        if cold_ttft.size else 0.0,
+        "prefix": pf,
+        "hit_rate": pf["hit_tokens"] / warm_prefix_tokens
+        if warm_prefix_tokens else 0.0,
+        "prefill_real_tokens": m.prefill.get("chunked", {}).get(
+            "real_tokens", 0),
+    }
+
+
+def _measure_cold_vs_warm():
+    wl = _workload(turns=3 if SMOKE else 5)
+    out = {"workload": "multi_turn_chat", "requests": len(wl),
+           "sessions": len({w.session for w in wl})}
+    outputs = {}
+    for label, slots in (("cold", 0), ("warm", 3)):
+        eng = _engine(slots)
+        m = run_serving(eng, wl, duration=600.0, step_time=STEP,
+                        prefill_token_time=TOKEN_TIME)
+        out[label] = _summarize(m, wl)
+        outputs[label] = m.outputs
+    # exactness audit rides the bench: warm == cold, token for token
+    mismatches = sum(1 for rid, toks in outputs["cold"].items()
+                     if outputs["warm"].get(rid) != toks)
+    out["output_mismatches"] = mismatches
+    out["warm_ttft_improvement_x"] = (
+        out["cold"]["ttft_warm_turn_p50_s"] /
+        max(out["warm"]["ttft_warm_turn_p50_s"], 1e-9))
+    return out
+
+
+def _measure_recovery():
+    """AW failure between turns: with prefix restoration the failover AW
+    inherits the dead AW's hot session prefixes; without it the sessions
+    re-prefill cold. The failure lands early so most turns are
+    post-failure."""
+    import zlib
+    wl = _workload(turns=3 if SMOKE else 5)
+    t_fail = 0.9
+    # fail the AW the affinity hash pins the most sessions to — the one
+    # holding hot prefixes (failing an empty AW proves nothing)
+    homes = {w.session: zlib.crc32(w.session.encode()) % 2
+             for w in wl if w.turn == 0}
+    aw_fail = max(set(homes.values()),
+                  key=lambda a: sum(1 for h in homes.values() if h == a))
+    # the comparison population: for each session whose prefixes died
+    # with the failed AW, the FIRST warm turn arriving after the failure
+    # — later turns re-warm the cache in both variants, so this is the
+    # turn restoration actually saves
+    first_post: dict = {}
+    for w in sorted(wl, key=lambda w: w.arrival):
+        if w.arrival > t_fail and w.turn >= 1 and \
+                homes.get(w.session) == aw_fail and \
+                w.session not in first_post:
+            first_post[w.session] = w.request_id
+    post_rids = set(first_post.values())
+    out = {"workload": "multi_turn_chat", "t_fail": t_fail,
+           "failed_aw": aw_fail,
+           "post_failure_warm_turns": len(post_rids)}
+    from repro.core.orchestrator import Orchestrator
+    for label, restore in (("recovery_with_prefix", True),
+                           ("recovery_cold", False)):
+        eng = _engine(3, prefix_restore=restore)
+        orch = Orchestrator(eng, worker_init_time=0.5,
+                            weight_push_time=0.1)
+        m = run_serving(eng, wl, duration=600.0, orchestrator=orch,
+                        failures=[FailurePlan(t_fail, "aw", aw_fail)],
+                        step_time=STEP, prefill_token_time=TOKEN_TIME)
+        post_ttft = np.asarray([v for rid, v in m.ttft.items()
+                                if rid in post_rids and v >= 0])
+        out[label] = {
+            "finished": len(m.finished),
+            "prefix": m.gateway["prefix"],
+            "post_failure_ttft_p50_s": float(np.median(post_ttft))
+            if post_ttft.size else 0.0,
+        }
+    wp = out["recovery_with_prefix"]["prefix"]
+    cp = out["recovery_cold"]["prefix"]
+    out["restored_prefixes"] = wp["restored"]
+    out["hit_tokens_delta"] = wp["hit_tokens"] - cp["hit_tokens"]
+    return out
+
+
+def run():
+    payload = {"bench": "prefix", "multi_turn_chat": None,
+               "recovery": None}
+    s = _measure_cold_vs_warm()
+    payload["multi_turn_chat"] = s
+    rows = [Row(
+        "prefix/multi_turn_chat/ttft_warm_turn_p50/warm",
+        s["warm"]["ttft_warm_turn_p50_s"] * 1e6,
+        f"cold={s['cold']['ttft_warm_turn_p50_s']*1e3:.0f}ms "
+        f"improvement={s['warm_ttft_improvement_x']:.1f}x "
+        f"hit_rate={s['warm']['hit_rate']:.2f} "
+        f"mismatches={s['output_mismatches']}")]
+    r = _measure_recovery()
+    payload["recovery"] = r
+    rows.append(Row(
+        "prefix/recovery/post_failure_ttft_p50/with_prefix",
+        r["recovery_with_prefix"]["post_failure_ttft_p50_s"] * 1e6,
+        f"cold_recovery="
+        f"{r['recovery_cold']['post_failure_ttft_p50_s']*1e3:.0f}ms "
+        f"restored={r['restored_prefixes']} "
+        f"hit_tokens_delta={r['hit_tokens_delta']}"))
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows

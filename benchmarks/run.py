@@ -17,6 +17,7 @@ MODULES = [
     "bench_failover",      # Fig 9 / §7.2 headline
     "bench_steady_state",  # Fig 10/11 / §7.3
     "bench_elastic",       # PR-3 tentpole: elastic EW plane
+    "bench_prefix",        # PR-5 tentpole: prefix-cache plane
     "bench_checkpoint",    # §7.4 + App C
     "bench_restoration",   # Fig 12
     "bench_expert_batch",  # App B

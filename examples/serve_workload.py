@@ -22,7 +22,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload",
                     choices=("random", "sharegpt", "long_prompt_burst",
-                             "skewed_expert_load", "mixed_slo"),
+                             "skewed_expert_load", "mixed_slo",
+                             "multi_turn_chat"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
@@ -40,15 +41,25 @@ def main():
                     help="disable preempt-and-requeue (pairs with "
                          "--workload mixed_slo: blocked interactive "
                          "requests then wait out the batch wave)")
+    ap.add_argument("--prefix-slots", type=int, default=0,
+                    help="per-AW prefix-cache slot budget (pairs with "
+                         "--workload multi_turn_chat; needs a chunk "
+                         "budget; 0 = plane off)")
     args = ap.parse_args()
+    if args.prefix_slots and not args.chunk_budget:
+        args.chunk_budget = 16     # the prefix plane rides chunked prefill
 
     cfg = get_config("mixtral_8x7b").reduced()
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    placement = "session_affinity" if args.workload == "multi_turn_chat" \
+        else "least_loaded"
     ecfg = EngineConfig(max_batch=8, max_seq=96, num_aw=2, num_ew=2,
                         chunk_token_budget=args.chunk_budget,
                         prefill_token_cap=8 * args.chunk_budget,
-                        preempt=not args.no_preempt)
+                        preempt=not args.no_preempt,
+                        placement=placement,
+                        prefix_cache_slots=args.prefix_slots)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         auto_rebalance=args.rebalance)
@@ -91,6 +102,13 @@ def main():
             print(f"chunked prefill: {ch['chunks']} chunks in "
                   f"{ch['calls']} calls for {ch['requests']} streams "
                   f"(shapes={ch['shapes']}, resumed={ch['resumed']})")
+    pf = m.gateway.get("prefix", {})
+    if pf.get("hits") or pf.get("misses"):
+        print(f"prefix cache: {pf['hits']} hits / "
+              f"{pf['hits'] + pf['misses']} lookups, "
+              f"{pf['hit_tokens']} prompt tokens adopted, "
+              f"{pf['evictions']} evictions, {pf['restored']} restored, "
+              f"{pf['repins']} session repins")
     if m.gateway.get("by_class"):
         print(f"request plane: preemptions={m.gateway['preemptions']}")
         for cls, counts in sorted(m.gateway["by_class"].items()):

@@ -90,6 +90,19 @@ class CheckpointStore:
         if log is not None:
             self._aw_requests.get(log.aw_id, set()).discard(request_id)
 
+    def rename(self, old: str, new: str):
+        """Re-key a log (prefix-cache adoption: a finished request's log
+        becomes the cache entry's restoration backing under a reserved
+        key, so the original rid can be reused for a fresh request
+        without inheriting — or corrupting — the cached segments)."""
+        assert new not in self._logs, new
+        log = self._logs.pop(old)
+        self._logs[new] = log
+        s = self._aw_requests.get(log.aw_id)
+        if s is not None:
+            s.discard(old)
+            s.add(new)
+
     # -- write path ----------------------------------------------------------
     def next_seq(self, request_id: str) -> int:
         log = self._logs[request_id]

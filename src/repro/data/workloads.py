@@ -19,6 +19,12 @@
   first-token deadlines) over periodic bulk waves of long *batch* requests
   that saturate every slot — without preempt-and-requeue, interactive TTFT
   degenerates to the batch residency time.
+* ``multi_turn_chat`` — the prefix-cache stress case: sessions of
+  ``chat_turns`` requests where every turn's prompt replays the whole
+  conversation so far (turn t = turn chunks 0..t, deterministic per
+  session), so successive turns share a growing exact token prefix —
+  without prefix reuse, the hottest KV in the system is recomputed every
+  turn.
 * Arrivals follow a Poisson process of configurable rate.
 
 Also provides a token-stream iterator for the training example (synthetic
@@ -39,13 +45,21 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     seed: int
-    token_dist: str = "uniform"   # "uniform" | "zipf" (token->expert skew)
+    token_dist: str = "uniform"   # "uniform" | "zipf" | "chat"
     zipf_a: float = 1.3           # Zipf exponent (smaller = heavier skew)
     slo_class: str = "standard"   # interactive | standard | batch
     deadline: float = -1.0        # absolute first-token deadline on the
     #                               virtual clock (-1 = none)
+    session: str = ""             # affinity key (multi-turn conversations)
+    turn: int = 0                 # conversation turn index ("chat" dist)
 
     def prompt_tokens(self, vocab: int) -> np.ndarray:
+        if self.token_dist == "chat":
+            # conversation replay: turn t's prompt is the concatenation of
+            # turn chunks 0..t — successive turns of a session share the
+            # exact token prefix (what the prefix-cache plane exploits);
+            # seed is the *session* seed, shared by all its turns
+            return chat_history_tokens(self.seed, self.turn, vocab)
         rng = np.random.default_rng(self.seed)
         if self.token_dist == "zipf":
             # heavy-tailed token ids: a handful of dominant tokens -> a
@@ -55,6 +69,30 @@ class Request:
             return (toks % vocab).astype(np.int32)
         return rng.integers(0, vocab, size=(self.prompt_len,),
                             dtype=np.int32)
+
+
+def _chat_turn_rng(session_seed: int, k: int) -> np.random.Generator:
+    return np.random.default_rng(session_seed + 7919 * k)
+
+
+def chat_turn_len(session_seed: int, k: int) -> int:
+    """Length of one turn chunk — MUST mirror the first draw inside
+    ``chat_history_tokens`` so ``Request.prompt_len`` metadata matches
+    the actual prompt."""
+    return int(_chat_turn_rng(session_seed, k).integers(4, 10))
+
+
+def chat_history_tokens(session_seed: int, turn: int,
+                        vocab: int) -> np.ndarray:
+    """Deterministic conversation history: per-(session, turn) token
+    chunks, concatenated. ``chat_history_tokens(s, t)`` is a strict prefix
+    of ``chat_history_tokens(s, t+1)``."""
+    parts = []
+    for k in range(turn + 1):
+        rng = _chat_turn_rng(session_seed, k)
+        n = int(rng.integers(4, 10))
+        parts.append(rng.integers(0, vocab, size=(n,), dtype=np.int32))
+    return np.concatenate(parts)
 
 
 def poisson_arrivals(rate_rps: float, duration: float,
@@ -79,9 +117,30 @@ def make_workload(kind: str, rate_rps: float, duration: float,
                   max_new: int = 256, long_frac: float = 0.3,
                   zipf_a: float = 1.3,
                   interactive_deadline: float = 0.5,
-                  batch_wave: int = 8, batch_every: float = 2.0) -> \
+                  batch_wave: int = 8, batch_every: float = 2.0,
+                  chat_turns: int = 4, chat_turn_gap: float = 0.6,
+                  chat_max_new: int = 4) -> \
         List[Request]:
     rng = np.random.default_rng(seed)
+    if kind == "multi_turn_chat":
+        # the prefix-cache stress case: sessions replay their whole
+        # conversation every turn (turn t's prompt = turns 0..t of the
+        # history), so all but the newest turn chunk is KV the serving
+        # stack already computed. Session starts are Poisson; turns are
+        # spaced ``chat_turn_gap`` apart (think time), enough for the
+        # previous turn to finish and its slot to be adopted by the cache.
+        reqs = []
+        starts = poisson_arrivals(max(rate_rps, 1e-6) / chat_turns,
+                                  duration, rng)
+        for s, t0 in enumerate(starts):
+            sseed = seed * 100003 + 6151 * (s + 1)
+            for t in range(chat_turns):
+                plen = sum(chat_turn_len(sseed, k) for k in range(t + 1))
+                reqs.append(Request(
+                    f"chat-s{s}-t{t}", float(t0 + t * chat_turn_gap),
+                    plen, chat_max_new, sseed, token_dist="chat",
+                    session=f"chat-s{s}", turn=t))
+        return sorted(reqs, key=lambda r: (r.arrival, r.request_id))
     if kind == "mixed_slo":
         # interactive Poisson stream: short prompts, short outputs, a
         # first-token deadline ``interactive_deadline`` after arrival

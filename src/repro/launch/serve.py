@@ -50,7 +50,7 @@ def main():
     ap.add_argument("--arch", default="mixtral_8x7b")
     ap.add_argument("--workload",
                     choices=("random", "sharegpt", "skewed_expert_load",
-                             "mixed_slo"),
+                             "mixed_slo", "multi_turn_chat"),
                     default="random")
     ap.add_argument("--rps", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=2.0)
@@ -78,19 +78,33 @@ def main():
     ap.add_argument("--no-preempt", action="store_true",
                     help="disable preempt-and-requeue (blocked interactive "
                          "requests wait instead of evicting batch victims)")
+    ap.add_argument("--prefix-slots", type=int, default=0,
+                    help="per-AW prefix-cache slot budget (0 = plane off; "
+                         "enables chunked prefill implicitly)")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="chunked-prefill token budget per tick "
+                         "(0 = whole-prompt prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.prefix_slots and not args.chunk_budget:
+        args.chunk_budget = 16
 
     cfg = get_config(args.arch).reduced()
     if cfg.moe.enabled:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    if args.workload == "multi_turn_chat" and \
+            args.placement == "least_loaded":
+        args.placement = "session_affinity"
     ecfg = EngineConfig(max_batch=args.max_batch, max_seq=96,
                         num_aw=args.num_aw, num_ew=args.num_ew,
                         max_ew=args.max_ew,
                         tarragon=not args.no_tarragon,
                         placement=args.placement,
-                        preempt=not args.no_preempt)
+                        preempt=not args.no_preempt,
+                        chunk_token_budget=args.chunk_budget,
+                        prefill_token_cap=8 * args.chunk_budget,
+                        prefix_cache_slots=args.prefix_slots)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         ew_policy=args.ew_policy,
@@ -126,6 +140,11 @@ def main():
         print(f"  expert plane: gen={mgr.plan.generation} "
               f"pool={sorted(eng.live_ews)} "
               f"imbalance={mgr.imbalance():.2f}")
+    pf = m.gateway.get("prefix", {})
+    if pf.get("hits") or pf.get("misses"):
+        print(f"  prefix cache: {pf['hits']} hits, "
+              f"{pf['hit_tokens']} tokens adopted, "
+              f"{pf['restored']} restored, {pf['repins']} repins")
     if m.gateway.get("by_class"):
         print(f"  request plane: preemptions={m.gateway['preemptions']}")
         for cls, counts in sorted(m.gateway["by_class"].items()):

@@ -79,6 +79,10 @@ class RequestSpec:
     sampling: Optional[SamplingParams] = None
     slo_class: str = STANDARD
     deadline: Optional[float] = None   # virtual-clock first-token deadline
+    completion_deadline: Optional[float] = None  # virtual-clock deadline
+    #                                    for the LAST token: overrun marks
+    #                                    deadline_missed at completion time
+    #                                    (the request is never dropped)
     session: Optional[str] = None      # affinity key (session_affinity)
     frames: Optional[np.ndarray] = None
     # lazy prompt generation (used when prompt is None)
@@ -131,6 +135,10 @@ class RequestStatus:
     preemptions: int = 0
     deadline: Optional[float] = None
     deadline_missed: bool = False
+    completion_deadline: Optional[float] = None
+    completion_deadline_missed: bool = False
+    prefix_hit: int = 0                # prompt tokens adopted from the
+    #                                    prefix cache at admission
     ttft: float = -1.0
 
 
@@ -176,12 +184,15 @@ class RequestHandle:
         r = self._lookup()
         st = RequestStatus(self.rid, self.state(),
                            slo_class=self.spec.slo_class,
-                           deadline=self.spec.deadline)
+                           deadline=self.spec.deadline,
+                           completion_deadline=self.spec.completion_deadline)
         if r is not None:
             st.tokens_generated = len(r.tokens)
             st.prefill_cursor = r.prefill_cursor
             st.preemptions = r.preemptions
             st.deadline_missed = r.deadline_flagged
+            st.completion_deadline_missed = r.completion_flagged
+            st.prefix_hit = r.prefix_hit
             st.ttft = r.ttft
         return st
 
@@ -255,6 +266,7 @@ class Client:
         self.engine.gateway.enqueue(
             spec.rid, prompt, spec.max_new, now=now, frames=spec.frames,
             slo_class=spec.slo_class, deadline=spec.deadline,
+            completion_deadline=spec.completion_deadline,
             sampling=spec.sampling, session=spec.session)
         handle = RequestHandle(self, spec)
         self._handles[spec.rid] = handle

@@ -228,6 +228,7 @@ class ContinuousBatchScheduler:
             st.t_first_token = now
             if len(st.tokens) >= st.max_new:   # max_new=1: done at prefill
                 st.done = True
+                st.t_done = now
         eng.requests[q.rid] = st
 
         if eng.ecfg.checkpoint:
@@ -358,6 +359,7 @@ class ContinuousBatchScheduler:
                     r.rid, written_pos, seg, token_value=nxt)
             if len(r.tokens) >= r.max_new or r.pos >= eng.ecfg.max_seq - 1:
                 r.done = True
+                r.t_done = t_log
         for w in eng.aws:
             w.checkpointer.flush()
         eng.steps += 1

@@ -118,23 +118,48 @@ class ChunkedPrefillPlane:
                    for j in self.jobs.values() if j.rid in eng.requests)
 
     def start(self, q, aw: int, slot: int, now: float):
-        """Open a fresh prefill stream for an admitted request."""
+        """Open a fresh prefill stream for an admitted request.
+
+        Prefix-cache adoption (serving/prefixcache.py): when placement
+        matched a cached prefix (``q.prefix_hit`` > 0), the slot already
+        holds its KV — the stale tail is scrubbed instead of clearing the
+        slot, the stream starts at ``prefill_cursor = matched_len``, and
+        the adopted prefix is re-checkpointed into THIS request's store
+        log through the bulk-segment path, so a later crash restores the
+        hit just like any committed chunk prefix (the recovery entry
+        resumes with the hit intact). A fully-cached prompt skips the
+        chunk stream entirely and goes straight to decode."""
         eng = self.engine
         n = len(q.prompt)
-        eng.cache = eng.layout.clear_slot(eng.cache, slot)
+        hit = min(getattr(q, "prefix_hit", 0), n - 1)
+        if hit > 0:
+            eng.cache = eng.layout.scrub_slot(eng.cache, slot, hit)
+        else:
+            eng.cache = eng.layout.clear_slot(eng.cache, slot)
         r = eng.make_request_state(q, slot)
         r._aw = aw
         r.t_admit = now
         r.prefilling = True
-        r.prefill_cursor = 0
+        r.prefill_cursor = hit
         eng.requests[q.rid] = r
         if eng.ecfg.checkpoint:
             eng.aws[aw].checkpointer.register(q.rid, prompt_len=n)
-        self.jobs[q.rid] = _PrefillJob(q.rid, np.asarray(q.prompt), aw, slot,
-                                       n_pre=n - 1)
-        eng.aws[aw].prefills[q.rid] = 0
+            if hit > 0:
+                # the adopted prefix becomes this request's own
+                # checkpointed state — its recovery never depends on the
+                # donor entry (whose log was released at adoption)
+                eng._bulk_checkpoint(r, 0, hit - 1)
+                eng.aws[aw].checkpointer.flush()
         self.stats.requests += 1
         self.stats.prefilled_tokens.setdefault(q.rid, 0)
+        if hit >= n - 1:
+            # whole prompt prefix cached: first decode step emits the
+            # first token — warm-turn TTFT is one step
+            self._finalize(r)
+            return
+        self.jobs[q.rid] = _PrefillJob(q.rid, np.asarray(q.prompt), aw, slot,
+                                       n_pre=n - 1)
+        eng.aws[aw].prefills[q.rid] = hit
 
     def resume(self, r, aw: int, slot: int, cursor: int, now: float):
         """Re-open a stream after mid-prefill failure recovery: the

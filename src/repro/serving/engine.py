@@ -48,6 +48,7 @@ from repro.serving.batching import ContinuousBatchScheduler
 from repro.serving.chunked import ChunkedPrefillPlane
 from repro.serving.gateway import Gateway, QueuedRequest
 from repro.serving.kvcache import CacheLayout
+from repro.serving.prefixcache import PrefixCachePlane
 from repro.serving.workers import (AttentionWorker, ClusterSlotView,
                                    ExpertWorker)
 
@@ -82,6 +83,24 @@ class EngineConfig:
     preempt: bool = True                 # blocked interactive heads may
     #                                      checkpoint-and-evict a batch
     #                                      victim (preempt-and-requeue)
+    victim_policy: str = "remaining_work"  # preemption victim selection:
+    #                                      "remaining_work" (most tokens
+    #                                      left, prefill debt included) or
+    #                                      "youngest" (latest arrival —
+    #                                      the pre-PR-5 behavior)
+    # ---- prefix-cache plane (serving/prefixcache.py) ---------------------
+    prefix_cache_slots: int = 0          # per-AW cached-prefix slot budget
+    #                                      (0 = plane off; requires the
+    #                                      chunked plane)
+    prefix_cache_tokens: int = 0         # per-AW cached-token budget
+    #                                      (0 = slot budget only)
+    prefix_min_match: int = 4            # shortest prefix worth adopting
+    #                                      (adoption truncates the entry —
+    #                                      a trivial coincidental match
+    #                                      must not eat a long prefix)
+    prefix_restore: bool = True          # restore a dead AW's cached
+    #                                      prefixes from the checkpoint
+    #                                      store onto healthy AWs
 
 
 @dataclass
@@ -102,15 +121,20 @@ class RequestState:
     # typed request-lifecycle fields (serving/api.py)
     slo_class: str = STANDARD
     deadline: Optional[float] = None   # virtual-clock first-token deadline
+    completion_deadline: Optional[float] = None  # last-token deadline
     sampling: Optional[SamplingParams] = None
     session: Optional[str] = None
     preemptions: int = 0          # planned evictions survived
     cancelled: bool = False
     deadline_flagged: bool = False
+    completion_flagged: bool = False   # completion overrun already counted
+    prefix_hit: int = 0           # prompt tokens adopted from the prefix
+    #                               cache at admission (0 = cold)
     # virtual-clock timeline (all on the serving loop's clock)
     t_enqueue: float = 0.0
     t_admit: float = -1.0
     t_first_token: float = -1.0
+    t_done: float = -1.0
 
     _aw: int = -1
 
@@ -244,6 +268,22 @@ class InferenceEngine:
             self.gateway.prefill_load = self.chunked.outstanding_tokens
         self.gateway.prefill_token_cap = ecfg.prefill_token_cap
 
+        # ---- prefix-cache plane (serving/prefixcache.py) ------------------
+        # per-AW radix index over committed KV prefixes: finished slots are
+        # adopted instead of cleared, and later prompts sharing a prefix
+        # chunk-prefill only the uncached tail. Requires the chunked plane
+        # (adoption IS a mid-prompt resume of the chunk stream).
+        self.prefix_plane: Optional[PrefixCachePlane] = None
+        if ecfg.prefix_cache_slots > 0:
+            assert self.chunked is not None, (
+                "prefix_cache_slots > 0 requires the chunked-prefill plane "
+                "(chunk_token_budget > 0 on a full-attention cache family)")
+            self.prefix_plane = PrefixCachePlane(
+                self, ecfg.prefix_cache_slots, ecfg.prefix_cache_tokens,
+                min_match=ecfg.prefix_min_match)
+        assert ecfg.victim_policy in ("remaining_work", "youngest"), (
+            f"unknown victim_policy {ecfg.victim_policy!r}")
+
     # ------------------------------------------------------------------
     # decode routing capacity (§5.2): the decode path may run at a tighter
     # capacity factor than prefill — fewer tokens per step means the
@@ -307,9 +347,12 @@ class InferenceEngine:
         return RequestState(rid=q.rid, slot=slot, prompt=q.prompt,
                             max_new=q.max_new, t_enqueue=q.t_enqueue,
                             slo_class=q.slo_class, deadline=q.deadline,
+                            completion_deadline=q.completion_deadline,
                             sampling=q.sampling, session=q.session,
+                            prefix_hit=q.prefix_hit,
                             # a miss flagged while queued is not re-flagged
-                            deadline_flagged=q.deadline_flagged)
+                            deadline_flagged=q.deadline_flagged,
+                            completion_flagged=q.completion_flagged)
 
     @property
     def client(self) -> Client:
@@ -408,19 +451,33 @@ class InferenceEngine:
 
     def drain_request_events(self) -> List[WorkerEvent]:
         evs, self.request_log = self.request_log, []
+        # placement-plane events (session_repinned) ride the same timeline
+        evs = evs + self.gateway.drain_events()
         return evs
 
+    @staticmethod
+    def _remaining_work(r: RequestState) -> int:
+        """Remaining-work estimate for victim selection: decode tokens
+        still owed plus the prefill debt (un-prefilled prompt tokens) —
+        a mid-prefill request has barely invested anything yet, so it is
+        the cheapest to push aside."""
+        debt = (len(r.prompt) - 1 - r.prefill_cursor) if r.prefilling else 0
+        return (r.max_new - len(r.tokens)) + debt
+
     def _choose_victim(self, exclude: str = "") -> Optional[RequestState]:
-        """Pick the preemption victim: the *youngest-arriving*
-        preemptible-class request resident on a live AW (its elders are
-        closer to done — evicting the latest arrival preserves finishing
-        work). Keyed on ``t_enqueue``, which is stable across restores —
-        ``t_admit`` resets on every re-admission, which would pin the
-        same just-restored victim in an evict/restore ping-pong. Among
-        same-arrival candidates (a bulk wave), the one evicted the fewest
-        times goes first, so repeated preemptions rotate through the wave
-        instead of starving one rid; final tie-break on rid for
-        determinism."""
+        """Pick the preemption victim among preemptible-class requests
+        resident on live AWs.
+
+        ``victim_policy="remaining_work"`` (default): evict the request
+        with the MOST work left (``max_new - emitted`` plus prefill debt)
+        — it has invested the least and wastes the fewest finished
+        tokens. ``victim_policy="youngest"``: the pre-PR-5 behavior — the
+        latest arrival by ``t_enqueue`` (stable across restores, unlike
+        ``t_admit``, which resets on every re-admission and would pin the
+        same just-restored victim in an evict/restore ping-pong). Both
+        policies prefer, among equals, the candidate evicted the fewest
+        times (repeated preemptions rotate through a wave instead of
+        starving one rid), with a final rid tie-break for determinism."""
         cands = [r for r in self.requests.values()
                  if r.slo_class in PREEMPTIBLE_CLASSES and not r.done
                  and not r.paused and not r.cancelled
@@ -428,8 +485,11 @@ class InferenceEngine:
                  and r._aw >= 0 and self.aws[r._aw].alive]
         if not cands:
             return None
-        return max(cands, key=lambda r: (r.t_enqueue, -r.preemptions,
-                                         r.rid))
+        if self.ecfg.victim_policy == "youngest":
+            return max(cands, key=lambda r: (r.t_enqueue, -r.preemptions,
+                                             r.rid))
+        return max(cands, key=lambda r: (self._remaining_work(r),
+                                         -r.preemptions, r.rid))
 
     def _preempt_for(self, head: QueuedRequest, now: float) -> bool:
         """Gateway preemptor hook: a blocked interactive head asks for a
@@ -460,6 +520,11 @@ class InferenceEngine:
         if self.chunked is not None:
             self.chunked.drop(rid)
         aw.prefills.pop(rid, None)
+        if self.prefix_plane is not None:
+            # an adopted prefix entry cannot outlive the eviction: the
+            # slot is about to be cleared (the victim's own log carries
+            # everything it needs to resume)
+            self.prefix_plane.forget_slot(r._aw, r.slot)
         self.cache = self.layout.clear_slot(self.cache, r.slot)
         aw.slots.release(r.slot)
         r.paused = True
@@ -468,6 +533,8 @@ class InferenceEngine:
         self.gateway.requeue_recovery([QueuedRequest(
             rid, r.prompt, r.max_new, frames=None, t_enqueue=now,
             slo_class=r.slo_class, deadline=r.deadline,
+            completion_deadline=r.completion_deadline,
+            completion_flagged=r.completion_flagged,
             sampling=r.sampling, session=r.session)])
         self.gateway.stats.preemptions += 1
         self.gateway.stats.bump(r.slo_class, "preempted")
@@ -572,44 +639,64 @@ class InferenceEngine:
         self.release_request(rid)
         return True
 
+    def _deadline_pass(self, now: float, *, completion: bool):
+        """One flag-once sweep for one deadline kind, over both the
+        Gateway queues and the resident requests. The kind differs only
+        in which field/flag/counter it touches and in its met-SLO rule:
+        first-token misses are excused when the first token landed in
+        time (a crash-recovery entry of a request that already met its
+        SLO is not a fresh miss), completion misses when the request is
+        done."""
+        attr = "completion_flagged" if completion else "deadline_flagged"
+        counter = "completion_deadline_missed" if completion \
+            else "deadline_missed"
+        tag = "completion, " if completion else ""
+
+        def deadline_of(x):
+            return x.completion_deadline if completion else x.deadline
+
+        for cls, q in self.gateway.queues.items():
+            for e in q:
+                dl = deadline_of(e)
+                if dl is None or getattr(e, attr) or now <= dl:
+                    continue
+                setattr(e, attr, True)
+                r = self.requests.get(e.rid)
+                if r is not None:
+                    if getattr(r, attr):
+                        continue
+                    if not completion and 0 <= r.t_first_token <= dl:
+                        continue
+                    setattr(r, attr, True)
+                self.gateway.stats.bump(cls, counter)
+                self._note_request_event("deadline_missed", e.rid, now,
+                                         f"{tag}queued, deadline={dl:g}")
+        for r in self.requests.values():
+            dl = deadline_of(r)
+            if dl is None or getattr(r, attr):
+                continue
+            if not completion and r.t_first_token >= 0:
+                # admitted-late case: the first token itself arrived past
+                # the deadline (possibly in the same tick as admission)
+                if r.t_first_token <= dl:
+                    continue
+            elif r.done or now <= dl:
+                continue
+            setattr(r, attr, True)
+            self.gateway.stats.bump(r.slo_class, counter)
+            self._note_request_event("deadline_missed", r.rid, now,
+                                     f"{tag}{r.state}, deadline={dl:g}")
+
     def check_deadlines(self, now: float):
         """Emit ``deadline_missed`` once per request whose first-token
         deadline passed — whether it is still queued at the Gateway or
-        resident without a first token. The request is NOT dropped: the
-        deadline is an SLO signal (per-class counters in GatewayStats),
-        not an admission filter."""
-        for cls, q in self.gateway.queues.items():
-            for e in q:
-                if e.deadline is None or e.deadline_flagged or \
-                        now <= e.deadline:
-                    continue
-                e.deadline_flagged = True
-                r = self.requests.get(e.rid)
-                if r is not None:
-                    if r.deadline_flagged:
-                        continue
-                    if 0 <= r.t_first_token <= r.deadline:
-                        # a crash-recovery entry of a request that already
-                        # met its first-token SLO is not a miss
-                        continue
-                    r.deadline_flagged = True
-                self.gateway.stats.bump(cls, "deadline_missed")
-                self._note_request_event("deadline_missed", e.rid, now,
-                                         f"queued, deadline={e.deadline:g}")
-        for r in self.requests.values():
-            if r.deadline is None or r.deadline_flagged:
-                continue
-            if r.t_first_token >= 0:
-                # admitted-late case: the first token itself arrived past
-                # the deadline (possibly in the same tick as admission)
-                if r.t_first_token <= r.deadline:
-                    continue
-            elif r.done or now <= r.deadline:
-                continue
-            r.deadline_flagged = True
-            self.gateway.stats.bump(r.slo_class, "deadline_missed")
-            self._note_request_event("deadline_missed", r.rid, now,
-                                     f"{r.state}, deadline={r.deadline:g}")
+        resident without a first token — and once per request whose
+        **completion deadline** passed before its last token (counted
+        separately as ``completion_deadline_missed``). The request is NOT
+        dropped either way: deadlines are SLO signals (per-class counters
+        in GatewayStats), not admission filters."""
+        self._deadline_pass(now, completion=False)
+        self._deadline_pass(now, completion=True)
 
     # ------------------------------------------------------------------
     # failure injection & recovery (delegates to the worker objects)
@@ -642,6 +729,10 @@ class InferenceEngine:
         stranded in a paused state forever. Requests caught mid-prefill are
         preempted the same way: their chunk stream stops and recovery will
         resume it from the committed cursor."""
+        if self.prefix_plane is not None:
+            # snapshot the dying AW's cached prefixes before fail() clears
+            # them: checkpoint-backed entries become restorable orphans
+            self.prefix_plane.note_aw_failed(aw)
         self.route_state = self.aws[aw].fail(self.route_state)
         recoverable = set(self.store.active_requests_on(aw))
         if self.chunked is not None and self.ecfg.checkpoint:
@@ -668,9 +759,16 @@ class InferenceEngine:
                 entries.append(QueuedRequest(
                     rid, r.prompt, r.max_new, t_enqueue=now,
                     slo_class=r.slo_class, deadline=r.deadline,
+                    completion_deadline=r.completion_deadline,
+                    completion_flagged=r.completion_flagged,
                     sampling=r.sampling, session=r.session))
         self.gateway.requeue_recovery(entries)
         admitted = set(self.scheduler.admit(now))
+        if self.prefix_plane is not None:
+            # live requests took their slots first; now carry the dead
+            # AWs' cached session prefixes over to healthy AWs (§6.2
+            # applied to cache state) so future turns still hit
+            self.prefix_plane.restore_orphans(now)
         return [q.rid for q in entries if q.rid in admitted]
 
     def provision_aw(self, aw: int):
@@ -791,7 +889,12 @@ class InferenceEngine:
         chunk stream, any stale recovery entry, the owning AW's slot +
         prefill cursor + pending checkpoint WRs, and the store log. Safe
         for done, cancelled, preempted, and crash-paused requests alike
-        (the slot is only released when this request still holds it)."""
+        (the slot is only released when this request still holds it).
+
+        With the prefix-cache plane on, a *completed* request's slot is
+        offered to the owning AW's cache instead of being cleared: the
+        cache adopts the slot AND the store log (the entry's restoration
+        backing), so neither is freed here on a successful offer."""
         r = self.requests.pop(rid, None)
         if r is None:
             return
@@ -805,19 +908,46 @@ class InferenceEngine:
                                      r.t_first_token,
                                      f"first token at {r.t_first_token:g} "
                                      f"> deadline {r.deadline:g}")
+        # completion-deadline backstop: finished late, released before the
+        # next check_deadlines tick
+        if r.completion_deadline is not None and not r.completion_flagged \
+                and r.t_done > r.completion_deadline:
+            r.completion_flagged = True
+            self.gateway.stats.bump(r.slo_class, "completion_deadline_missed")
+            self._note_request_event(
+                "deadline_missed", rid, r.t_done,
+                f"completion at {r.t_done:g} > deadline "
+                f"{r.completion_deadline:g}")
         if self.chunked is not None:
             self.chunked.drop(rid)
         if r.queued_for_recovery:
             # cancel the pending re-admission: a stale recovery entry must
             # not reach the scheduler after the request is gone
             self.gateway.drop(rid)
+        cached = False
         if r._aw >= 0 and self.aws[r._aw].alive:
+            aw = self.aws[r._aw]
+            if not r.paused and self.prefix_plane is not None and \
+                    r.done and not r.cancelled:
+                # commit the resident tail, then offer the slot (with its
+                # KV and store log) to the AW's prefix cache
+                aw.checkpointer.flush()
+                cached = self.prefix_plane.offer(r)
             # pending WRs and the prefill cursor die with the request, not
             # with the worker (they reference a log about to be released)
-            self.aws[r._aw].drop_request(rid)
-            if not r.paused:
+            aw.drop_request(rid)
+            if not r.paused and not cached:
+                if self.prefix_plane is not None:
+                    # e.g. a cancelled adopter: its slot's live cache
+                    # entry must not survive the clear below
+                    self.prefix_plane.forget_slot(r._aw, r.slot)
                 self.cache = self.layout.clear_slot(self.cache, r.slot)
-                self.aws[r._aw].slots.release(r.slot)
+                aw.slots.release(r.slot)
+        # always safe: a cached entry's backing log was renamed to its
+        # reserved ~prefix key (release of the original rid is then a
+        # no-op), and on checkpoint=False engines a cached slot may still
+        # own a stale log a preemption created under this rid — leaving
+        # it would corrupt a later submission reusing the rid
         self.store.release(rid)
         for hook in self._release_hooks:
             hook(r)

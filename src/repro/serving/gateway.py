@@ -18,10 +18,15 @@ retried next tick, never dropped or overtaken within its class.
 Placement policies (select a healthy AW with free capacity, or None):
   * ``least_loaded``     — most free slots wins (default; ties -> lowest id)
   * ``round_robin``      — cycle over healthy AWs, skipping full ones
-  * ``session_affinity`` — stable hash of the request's session key (the
-    explicit ``session`` field when given, else the session prefix of the
-    request id, ``rid.rsplit('-', 1)[0]``), falling back to least-loaded
-    when the home AW is dead or full.
+  * ``session_affinity`` — session-sticky pinning, prefix-cache aware: a
+    session's first placement picks the AW holding the longest cached
+    prefix of the prompt (else the stable hash of the session key — the
+    explicit ``session`` field when given, else the rid's session prefix
+    ``rid.rsplit('-', 1)[0]``) and pins the session there. A full home
+    spills to least-loaded per-request; a dead home re-pins the session
+    (``session_repinned`` event). Free capacity counts the prefix
+    cache's evictable slots, and admission adopts a matching cached
+    prefix by slot reference (``QueuedRequest.prefix_hit``).
 
 Preempt-and-requeue: when an *interactive* head cannot be placed, the
 Gateway consults the engine-installed ``preemptor`` hook, which may
@@ -43,6 +48,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.orchestrator import WorkerEvent
 from repro.serving.api import (CLASS_WEIGHTS, PREEMPTING_CLASSES,
                                SLO_CLASSES, STANDARD, SamplingParams)
 from repro.serving.workers import AttentionWorker
@@ -59,9 +65,13 @@ class QueuedRequest:
     retries: int = 0                # ticks spent blocked at the queue head
     slo_class: str = STANDARD
     deadline: Optional[float] = None   # virtual-clock first-token deadline
+    completion_deadline: Optional[float] = None  # last-token deadline
     sampling: Optional[SamplingParams] = None
     session: Optional[str] = None      # affinity key for placement
     deadline_flagged: bool = False     # deadline_missed already emitted
+    completion_flagged: bool = False   # completion overrun already emitted
+    prefix_hit: int = 0             # tokens adopted from the prefix cache
+    #                                 at placement (0 = cold admission)
 
     @property
     def deadline_key(self) -> float:
@@ -86,8 +96,8 @@ class LeastLoadedPolicy:
     """Most free slots wins; ties break toward the lowest AW id (matches the
     original engine's admission behaviour)."""
 
-    def __call__(self, workers: List[AttentionWorker],
-                 rid: str) -> Optional[int]:
+    def __call__(self, workers: List[AttentionWorker], rid: str,
+                 prompt=None, now: float = 0.0) -> Optional[int]:
         best, best_free = None, 0
         for w in workers:
             f = w.free_slots()
@@ -102,8 +112,8 @@ class RoundRobinPolicy:
     def __init__(self):
         self._next = 0
 
-    def __call__(self, workers: List[AttentionWorker],
-                 rid: str) -> Optional[int]:
+    def __call__(self, workers: List[AttentionWorker], rid: str,
+                 prompt=None, now: float = 0.0) -> Optional[int]:
         n = len(workers)
         for i in range(n):
             w = workers[(self._next + i) % n]
@@ -114,25 +124,82 @@ class RoundRobinPolicy:
 
 
 class SessionAffinityPolicy:
-    """Stable-hash the placement key verbatim onto the AW ring; fall back
-    to least-loaded when the home AW cannot take the request. The caller
-    (``QueuedRequest.placement_key``) supplies either the explicit session
-    or the rid-derived session prefix — the policy never truncates."""
+    """Session-sticky placement with prefix-cache awareness.
+
+    A session's first placement chooses its home — the AW holding the
+    longest cached prefix of the prompt when the prefix-cache plane is on,
+    else the stable hash of the key onto the AW ring — and *pins* the
+    session there, so every later turn lands where its KV already lives.
+    A pinned-but-full home spills to least-loaded for that request only
+    (the pin survives: the session returns home when capacity frees). A
+    pinned-but-**dead** home re-pins the session to the healthy AW the
+    same choice rule selects, and emits a ``session_repinned`` event —
+    the stale pin can never strand a session on a failed worker. The
+    caller (``QueuedRequest.placement_key``) supplies either the explicit
+    session or the rid-derived session prefix — the policy never
+    truncates."""
 
     def __init__(self):
         self._fallback = LeastLoadedPolicy()
+        self.pins: Dict[str, int] = {}
+        self.events: List[WorkerEvent] = []
+        self.stats = None            # bound by the owning Gateway
 
     @staticmethod
     def session_key(rid: str) -> str:
         """Session prefix of a request id (``sess-3`` -> ``sess``)."""
         return rid.rsplit("-", 1)[0]
 
-    def __call__(self, workers: List[AttentionWorker],
-                 key: str) -> Optional[int]:
+    def _prefix_best(self, workers, prompt) -> Optional[int]:
+        """The healthy AW with capacity holding the longest cached prefix
+        of ``prompt`` (None when no AW has a match, or no prefix caches
+        exist)."""
+        if prompt is None:
+            return None
+        best, best_len = None, 0
+        for w in workers:
+            if w.prefix_cache is None or not w.has_capacity():
+                continue
+            lcp = w.prefix_cache.match_len(prompt)
+            if lcp > best_len:
+                best, best_len = w.aw_id, lcp
+        return best
+
+    def _choose_home(self, workers, key: str, prompt) -> Optional[int]:
+        best = self._prefix_best(workers, prompt)
+        if best is not None:
+            return best
         home = zlib.crc32(key.encode()) % len(workers)
         if workers[home].has_capacity():
             return home
         return self._fallback(workers, key)
+
+    def __call__(self, workers: List[AttentionWorker], key: str,
+                 prompt=None, now: float = 0.0) -> Optional[int]:
+        if not key:
+            return self._fallback(workers, key)
+        pin = self.pins.get(key)
+        if pin is not None:
+            w = workers[pin]
+            if w.alive and w.has_capacity():
+                return pin
+            if w.alive:
+                # home is full but healthy: spill without re-pinning
+                return self._fallback(workers, key)
+            new = self._choose_home(workers, key, prompt)
+            if new is None:
+                return None        # nothing placeable now; keep the pin
+            #                        and retry (re-pin on a real placement)
+            self.pins[key] = new
+            self.events.append(WorkerEvent(
+                now, "session_repinned", key, f"aw{pin}->aw{new}"))
+            if self.stats is not None:
+                self.stats.session_repins += 1
+            return new
+        choice = self._choose_home(workers, key, prompt)
+        if choice is not None:
+            self.pins[key] = choice
+        return choice
 
 
 PLACEMENT_POLICIES = {
@@ -149,6 +216,13 @@ class GatewayStats:
     requeued: int = 0               # recovery re-admissions queued
     blocked_ticks: int = 0          # head-of-queue retries
     preemptions: int = 0            # victims evicted to place a higher class
+    # prefix-cache plane accounting (serving/prefixcache.py)
+    prefix_hits: int = 0            # admissions that adopted a cached prefix
+    prefix_misses: int = 0          # cache-eligible admissions without a hit
+    prefix_hit_tokens: int = 0      # prompt tokens adopted (prefill skipped)
+    prefix_evictions: int = 0       # cached prefixes evicted (budget/pressure)
+    prefix_restored: int = 0        # dead-AW prefixes restored on failover
+    session_repins: int = 0         # sessions re-pinned off a dead AW
     queue_delay: Dict[str, float] = field(default_factory=dict)
     # per-class lifecycle counters:
     #   class -> {enqueued, admitted, preempted, cancelled, deadline_missed}
@@ -175,6 +249,8 @@ class Gateway:
         self.queues: Dict[str, Deque[QueuedRequest]] = {
             cls: deque() for cls in SLO_CLASSES}
         self.stats = GatewayStats()
+        if isinstance(policy, SessionAffinityPolicy):
+            policy.stats = self.stats
         # token-based admission (chunked-prefill plane): cap on prompt
         # tokens admitted but not yet prefilled. ``prefill_load`` is a
         # probe supplied by the engine (the plane's outstanding_tokens);
@@ -197,6 +273,7 @@ class Gateway:
                 now: float = 0.0, frames: Optional[np.ndarray] = None,
                 slo_class: str = STANDARD,
                 deadline: Optional[float] = None,
+                completion_deadline: Optional[float] = None,
                 sampling: Optional[SamplingParams] = None,
                 session: Optional[str] = None):
         if slo_class not in SLO_CLASSES:
@@ -204,8 +281,9 @@ class Gateway:
                              f"one of {SLO_CLASSES}")
         entry = QueuedRequest(rid, np.asarray(prompt, np.int32), max_new,
                               frames, now, slo_class=slo_class,
-                              deadline=deadline, sampling=sampling,
-                              session=session)
+                              deadline=deadline,
+                              completion_deadline=completion_deadline,
+                              sampling=sampling, session=session)
         self._insert(entry)
         self.stats.enqueued += 1
         self.stats.bump(slo_class, "enqueued")
@@ -258,8 +336,29 @@ class Gateway:
         return e
 
     # -- placement ----------------------------------------------------------
-    def choose_aw(self, rid: str = "") -> Optional[int]:
-        return self.policy(self.workers, rid)
+    def choose_aw(self, rid: str = "", prompt=None,
+                  now: float = 0.0) -> Optional[int]:
+        return self.policy(self.workers, rid, prompt=prompt, now=now)
+
+    def _cached_match_len(self, prompt) -> int:
+        """Best cached-prefix match for ``prompt`` across live AWs — the
+        token-cap gate's estimate of how much of the prompt would be
+        adopted rather than prefilled (the exact tail is charged after
+        placement)."""
+        best = 0
+        for w in self.workers:
+            if w.alive and w.prefix_cache is not None:
+                best = max(best, w.prefix_cache.match_len(prompt))
+        return best
+
+    def drain_events(self) -> List[WorkerEvent]:
+        """Placement-plane events (``session_repinned``) accumulated by
+        the policy; drained into the engine's request-event timeline."""
+        evs = getattr(self.policy, "events", None)
+        if not evs:
+            return []
+        self.policy.events = []
+        return evs
 
     def admit(self, now: float = 0.0
               ) -> List[Tuple[QueuedRequest, int, int]]:
@@ -295,14 +394,22 @@ class Gateway:
                     if self.prefill_token_cap and not head.recovery:
                         load = new_tokens + \
                             (self.prefill_load() if self.prefill_load else 0)
+                        # a mostly-cached warm prompt only brings its
+                        # uncached tail to the prefill plane — gate on
+                        # that estimate, not the raw prompt length
+                        need = len(head.prompt) - \
+                            self._cached_match_len(head.prompt)
                         if load > 0 and \
-                                load + len(head.prompt) > \
-                                self.prefill_token_cap:
+                                load + need > self.prefill_token_cap:
                             head.retries += 1
                             self.stats.blocked_ticks += 1
                             blocked.add(cls)
                             break
-                    aw = self.choose_aw(head.placement_key)
+                    # the policy sees the prompt (prefix-aware routing);
+                    # recovery entries restore their own KV — no matching
+                    match_prompt = None if head.recovery else head.prompt
+                    aw = self.choose_aw(head.placement_key,
+                                        prompt=match_prompt, now=now)
                     if aw is None and cls in PREEMPTING_CLASSES and \
                             self.preemptor is not None:
                         # preempt-and-requeue: evict a batch victim (its KV
@@ -312,16 +419,27 @@ class Gateway:
                         # itself, so direct/policy-driven evictions count
                         # in the same place as hook-driven ones
                         if self.preemptor(head, now):
-                            aw = self.choose_aw(head.placement_key)
+                            aw = self.choose_aw(head.placement_key,
+                                                prompt=match_prompt, now=now)
                     if aw is None:
                         head.retries += 1
                         self.stats.blocked_ticks += 1
                         blocked.add(cls)
                         break
                     q.popleft()
+                    slot, head.prefix_hit = self.workers[aw].take_slot(
+                        match_prompt, now)
                     if not head.recovery:
-                        new_tokens += len(head.prompt)
-                    slot = self.workers[aw].slots.alloc()
+                        # charge only the uncached tail against the cap:
+                        # adopted tokens never enter the prefill plane
+                        new_tokens += len(head.prompt) - head.prefix_hit
+                    if self.workers[aw].prefix_cache is not None and \
+                            match_prompt is not None:
+                        if head.prefix_hit:
+                            self.stats.prefix_hits += 1
+                            self.stats.prefix_hit_tokens += head.prefix_hit
+                        else:
+                            self.stats.prefix_misses += 1
                     self.stats.admitted += 1
                     self.stats.bump(cls, "admitted")
                     # total time spent waiting at the gateway, summed over

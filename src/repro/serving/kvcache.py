@@ -186,6 +186,24 @@ class CacheLayout:
             out.append(s)
         return out
 
+    def scrub_slot(self, cache, slot: int, valid_len: int):
+        """Invalidate positions >= ``valid_len`` of one slot in place:
+        attention ``pos`` entries past the valid prefix become -1 (masked
+        by the decode kernels); K/V payloads stay — unreachable once the
+        position is invalid. This is prefix-cache adoption's counterpart
+        of ``clear_slot``: the adopted prefix [0, valid_len) survives, the
+        donor's stale tail does not. Only meaningful for pure attention
+        caches (slot index == absolute position)."""
+        leaves, treedef = self._leaves(cache)
+        out = []
+        for leaf, ax, kind in zip(leaves, self.batch_axis, self.leaf_kind):
+            if kind == "attn_pos":
+                per = self._take(leaf, ax, slot)
+                per = jnp.where(per >= valid_len, -1, per)
+                leaf = self._put(leaf, ax, slot, per)
+            out.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def clear_slot(self, cache, slot: int):
         """Reset one slot (releases a finished/failed request)."""
         leaves, treedef = self._leaves(cache)

@@ -1,0 +1,499 @@
+"""Prefix-cache plane: per-AW radix KV reuse with checkpoint-backed
+restoration.
+
+Tarragon makes resident KV a first-class, recoverable asset (§6.1/§6.2);
+this plane stops throwing it away at request completion. Each
+AttentionWorker keeps a **radix index over committed KV prefixes**: when a
+request finishes, its slot is not cleared — the cache *adopts* it, keyed
+by the token sequence whose KV the slot holds. A later request whose
+prompt shares a prefix (the multi-turn chat pattern: every turn replays
+the whole conversation) adopts the cached slot **by reference** — no KV
+copy — scrubs the stale tail, and starts its chunked-prefill stream at
+``prefill_cursor = matched_prefix_len``. Only the uncached tail is ever
+prefilled, and the result is bit-identical to a cold run (resuming a
+chunk stream mid-prompt is exactly the machinery mid-prefill recovery
+already exercises).
+
+Sharing is slot-level and refcounted: an index entry holds its slot, and
+a live request adopting that slot marks the entry *live* — live entries
+are never evicted (the slot is the request's working state). Eviction is
+LRU with a recompute-cost tie-break (older first; among equals, the
+shortest prefix — the cheapest to rebuild — goes first), under a
+configurable per-AW slot budget and optional token budget. Under slot
+pressure the cache yields: an AW's free capacity counts evictable cached
+slots, and allocation evicts transparently.
+
+The resilience twist (FailSafe's warm-standby insight applied to KV):
+cached prefixes are **checkpoint-backed**. On adoption the prefix is
+re-streamed into the adopting request's own store log through the
+existing bulk-segment path, so its recovery never depends on the donor;
+and when an AW dies, its non-live cached entries become *orphans* whose
+KV still lives in the checkpoint store — recovery restores each hot
+session prefix per-request onto the failover AW (§6.2 applied to cache
+state), so the session's next turn still hits. Every transition here is
+a host-side array/bookkeeping update: zero new jit traces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+def _common_len(a, b) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class _RadixNode:
+    __slots__ = ("edge", "children", "slot")
+
+    def __init__(self, edge=()):
+        self.edge: Tuple[int, ...] = tuple(edge)  # tokens on the edge in
+        self.children: Dict[int, "_RadixNode"] = {}
+        self.slot: int = -1      # slot whose cached prefix ends exactly here
+
+
+class RadixIndex:
+    """Compressed radix trie over token sequences. Each inserted sequence
+    ends at a node carrying the slot id whose cache holds that prefix's
+    KV. ``match`` returns the usable entry with the longest common prefix
+    against a query — the LCP may end mid-edge (the divergence point):
+    any entry below it still shares exactly that many leading tokens."""
+
+    def __init__(self):
+        self.root = _RadixNode()
+
+    # -- mutation -----------------------------------------------------------
+    def insert(self, tokens, slot: int):
+        toks = tuple(int(t) for t in tokens)
+        node, i = self.root, 0
+        while i < len(toks):
+            child = node.children.get(toks[i])
+            if child is None:
+                leaf = _RadixNode(toks[i:])
+                leaf.slot = slot
+                node.children[toks[i]] = leaf
+                return
+            k = _common_len(child.edge, toks[i:])
+            if k == len(child.edge):
+                node = child
+                i += k
+                continue
+            # split the child's edge at the divergence point
+            mid = _RadixNode(child.edge[:k])
+            child.edge = child.edge[k:]
+            mid.children[child.edge[0]] = child
+            node.children[toks[i]] = mid
+            if i + k == len(toks):
+                mid.slot = slot
+            else:
+                leaf = _RadixNode(toks[i + k:])
+                leaf.slot = slot
+                mid.children[toks[i + k]] = leaf
+            return
+        node.slot = slot
+
+    def remove(self, tokens, slot: int):
+        """Clear the entry at the exact path ``tokens`` if it holds
+        ``slot`` (collision-safe: a different slot at that path is left
+        alone). Stale slot-less nodes are kept — they are harmless to
+        matching and trivial at slot-count scale."""
+        toks = tuple(int(t) for t in tokens)
+        node, i = self.root, 0
+        while i < len(toks):
+            child = node.children.get(toks[i])
+            if child is None:
+                return
+            if child.edge != toks[i:i + len(child.edge)]:
+                return
+            node = child
+            i += len(child.edge)
+        if node.slot == slot:
+            node.slot = -1
+
+    def exact_slot(self, tokens) -> int:
+        toks = tuple(int(t) for t in tokens)
+        node, i = self.root, 0
+        while i < len(toks):
+            child = node.children.get(toks[i])
+            if child is None or child.edge != toks[i:i + len(child.edge)]:
+                return -1
+            node = child
+            i += len(child.edge)
+        return node.slot
+
+    # -- lookup -------------------------------------------------------------
+    def _any_slot(self, node: _RadixNode, usable: Set[int]) -> int:
+        if node.slot in usable:
+            return node.slot
+        for child in node.children.values():
+            s = self._any_slot(child, usable)
+            if s >= 0:
+                return s
+        return -1
+
+    def match(self, tokens, usable: Set[int]) -> Tuple[int, int]:
+        """(slot, lcp) of the usable entry sharing the longest prefix with
+        ``tokens`` — (-1, 0) when nothing usable matches at least one
+        token. Walk the query down the trie; the deepest reachable subtree
+        gives the longest guaranteed LCP, shallower fully-matched nodes
+        give progressively shorter ones."""
+        toks = tuple(int(t) for t in tokens)
+        path: List[Tuple[_RadixNode, int]] = []
+        node, i = self.root, 0
+        deep: Optional[Tuple[_RadixNode, int]] = None
+        while i < len(toks):
+            child = node.children.get(toks[i])
+            if child is None:
+                break
+            k = _common_len(child.edge, toks[i:])
+            if k < len(child.edge):
+                # diverged (or query exhausted) inside the edge: everything
+                # below shares exactly i + k leading tokens with the query
+                deep = (child, i + k)
+                break
+            node = child
+            i += len(child.edge)
+            path.append((node, i))
+        if deep is not None and deep[1] > 0:
+            s = self._any_slot(deep[0], usable)
+            if s >= 0:
+                return s, deep[1]
+        for n, depth in reversed(path):
+            s = self._any_slot(n, usable)
+            if s >= 0:
+                return s, depth
+        return -1, 0
+
+
+@dataclass
+class PrefixEntry:
+    """One cached prefix: ``slot`` holds committed KV for ``tokens``
+    (positions [0, len(tokens))). ``rid`` names the checkpoint-store log
+    backing the entry across AW failures ('' = unbacked — a live entry's
+    adopter carries the prefix in its own log). ``live`` is the slot-level
+    refcount bit: a resident request shares the slot, so the entry can be
+    neither evicted nor re-adopted until it completes or releases."""
+    slot: int
+    tokens: np.ndarray
+    rid: str
+    session: Optional[str]
+    last_use: float
+    live: bool = False
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass
+class PrefixCacheStats:
+    offered: int = 0
+    cached: int = 0
+    refused: int = 0
+
+    def snapshot(self) -> dict:
+        return {"offered": self.offered, "cached": self.cached,
+                "refused": self.refused}
+
+
+class AWPrefixCache:
+    """Per-AW prefix cache: the radix index plus slot bookkeeping over the
+    worker's own ``SlotPartition``. Pure host-side metadata — the KV
+    itself stays resident in the engine's slot cache (or in the
+    checkpoint store, for failover restoration)."""
+
+    def __init__(self, partition, max_slots: int, max_tokens: int = 0,
+                 min_match: int = 4, release_log=None, stats=None):
+        self.partition = partition
+        self.max_slots = max(1, max_slots)
+        self.max_tokens = max(0, max_tokens)
+        # adoption truncates the matched entry to the LCP, so a trivial
+        # (coincidental) match must not be allowed to destroy a long
+        # cached prefix for a few-token prefill saving
+        self.min_match = max(1, min_match)
+        self.release_log = release_log or (lambda rid: None)
+        self.stats = stats           # GatewayStats (shared hit accounting)
+        self.entries: Dict[int, PrefixEntry] = {}
+        self.index = RadixIndex()
+        self.local = PrefixCacheStats()
+
+    # -- capacity view ------------------------------------------------------
+    def evictable_count(self) -> int:
+        return sum(1 for e in self.entries.values() if not e.live)
+
+    def cached_tokens(self) -> int:
+        return sum(e.length for e in self.entries.values() if not e.live)
+
+    def match_len(self, prompt) -> int:
+        """Routing probe (no side effects): longest cached prefix of
+        ``prompt`` on this AW, live entries included — the session's KV
+        being in use right now is still a reason to route here. Matches
+        below ``min_match`` report 0 (they would not be adopted)."""
+        if prompt is None or len(prompt) < 2:
+            return 0
+        _, lcp = self.index.match(prompt, set(self.entries.keys()))
+        lcp = min(lcp, len(prompt) - 1)
+        return lcp if lcp >= self.min_match else 0
+
+    # -- allocation: match-or-evict ----------------------------------------
+    def take_slot(self, prompt, now: float = 0.0) -> Tuple[int, int]:
+        """Hand out a slot for an admission. Prefix match first: a usable
+        (non-live) entry sharing >= ``min_match`` tokens is adopted by
+        reference — the entry truncates to the matched prefix, goes live,
+        and the caller prefills only the tail. Otherwise a partition
+        slot, else the LRU cached entry is evicted and its slot reused."""
+        if prompt is not None and len(prompt) >= 2:
+            usable = {s for s, e in self.entries.items() if not e.live}
+            slot, lcp = self.index.match(prompt, usable)
+            lcp = min(lcp, len(prompt) - 1)
+            if slot >= 0 and lcp >= self.min_match:
+                e = self.entries[slot]
+                self.index.remove(e.tokens, slot)
+                # truncate to the match: the adopter overwrites [lcp, ...)
+                e.tokens = np.asarray(e.tokens[:lcp], np.int32)
+                e.live = True
+                e.last_use = now
+                if e.rid:
+                    # the adopter re-checkpoints the prefix into its own
+                    # log (bulk-segment path); the donor log is done
+                    self.release_log(e.rid)
+                    e.rid = ""
+                self.index.insert(e.tokens, slot)
+                return slot, lcp
+        if self.partition.free_count() > 0:
+            return self.partition.alloc(), 0
+        victim = self._pick_victim()
+        assert victim is not None, "take_slot called with no capacity"
+        self._evict(victim, free_slot=False)
+        return victim.slot, 0
+
+    # -- population ---------------------------------------------------------
+    def offer(self, slot: int, tokens: np.ndarray, rid: str,
+              session: Optional[str], now: float) -> bool:
+        """A finished request's slot is offered for caching. Replaces the
+        slot's live entry (the completed adoption), enforces the slot and
+        token budgets by evicting LRU entries, and refuses (slot returns
+        to the free list) when the sequence is trivial, duplicates an
+        existing path, or cannot fit."""
+        self.local.offered += 1
+        old = self.entries.pop(slot, None)
+        if old is not None:
+            self.index.remove(old.tokens, slot)
+            if old.rid:
+                self.release_log(old.rid)
+        n = len(tokens)
+        if n < 2 or (self.max_tokens and n > self.max_tokens) or \
+                self.index.exact_slot(tokens) >= 0:
+            self.local.refused += 1
+            return False
+        while self.evictable_count() >= self.max_slots or \
+                (self.max_tokens and
+                 self.cached_tokens() + n > self.max_tokens):
+            victim = self._pick_victim()
+            if victim is None:
+                self.local.refused += 1
+                return False
+            self._evict(victim, free_slot=True)
+        self.entries[slot] = PrefixEntry(slot, np.asarray(tokens, np.int32),
+                                         rid, session, now)
+        self.index.insert(tokens, slot)
+        self.local.cached += 1
+        return True
+
+    def insert_restored(self, slot: int, tokens: np.ndarray, rid: str,
+                        session: Optional[str], now: float) -> bool:
+        """Failover path: an orphaned prefix restored from the checkpoint
+        store joins this AW's index (same budget discipline as offer)."""
+        return self.offer(slot, tokens, rid, session, now)
+
+    # -- teardown -----------------------------------------------------------
+    def forget_slot(self, slot: int):
+        """Drop the entry at ``slot`` without touching the slot itself
+        (the caller owns it: cancellation, preemption, failed offer)."""
+        e = self.entries.pop(slot, None)
+        if e is not None:
+            self.index.remove(e.tokens, slot)
+            if e.rid:
+                self.release_log(e.rid)
+
+    def clear(self):
+        """AW crash: the metadata dies with the worker (orphan snapshots
+        are taken by the plane *before* the worker's fail())."""
+        self.entries = {}
+        self.index = RadixIndex()
+
+    # -- eviction -----------------------------------------------------------
+    def _pick_victim(self) -> Optional[PrefixEntry]:
+        """LRU + cost-aware: oldest ``last_use`` first; among equals the
+        shortest prefix (cheapest to recompute) goes first; slot id breaks
+        the final tie for determinism. Live entries are untouchable."""
+        cands = [e for e in self.entries.values() if not e.live]
+        if not cands:
+            return None
+        return min(cands, key=lambda e: (e.last_use, e.length, e.slot))
+
+    def _evict(self, e: PrefixEntry, free_slot: bool):
+        del self.entries[e.slot]
+        self.index.remove(e.tokens, e.slot)
+        if e.rid:
+            self.release_log(e.rid)
+        if free_slot:
+            self.partition.release(e.slot)
+        if self.stats is not None:
+            self.stats.prefix_evictions += 1
+
+
+class PrefixCachePlane:
+    """Engine-level coordinator: attaches an ``AWPrefixCache`` to every
+    AttentionWorker, owns the offer/forget lifecycle hooks the engine
+    calls, and carries dead AWs' cached prefixes across failover via the
+    checkpoint store."""
+
+    def __init__(self, engine, max_slots: int, max_tokens: int = 0,
+                 min_match: int = 4):
+        self.engine = engine
+        self.orphans: List[PrefixEntry] = []
+        self._log_seq = 0        # unique suffix for adopted-log keys
+        for w in engine.aws:
+            w.prefix_cache = AWPrefixCache(
+                w.slots, max_slots, max_tokens, min_match=min_match,
+                release_log=engine.store.release,
+                stats=engine.gateway.stats)
+
+    # -- completion: adopt the slot ----------------------------------------
+    def offer(self, r) -> bool:
+        """Cache a finished request's resident prefix. The cached length
+        is clamped to the store's commit watermark (what restoration can
+        actually rebuild); on checkpoint=False engines the resident extent
+        is trusted but the entry is not failure-restorable."""
+        eng = self.engine
+        aw = eng.aws[r._aw]
+        if aw.prefix_cache is None:
+            return False
+        n = r.pos                       # positions [0, pos) hold KV
+        rid = ""
+        if eng.ecfg.checkpoint:
+            n = min(n, eng.store.committed_token(r.rid) + 1)
+        if n < 2:
+            return False
+        if eng.ecfg.checkpoint:
+            # the log outlives the request under a reserved key, so the
+            # original rid stays reusable for a fresh submission
+            rid = f"~prefix{self._log_seq}:{r.rid}"
+            self._log_seq += 1
+            eng.store.rename(r.rid, rid)
+        seq = np.concatenate(
+            [np.asarray(r.prompt, np.int32),
+             np.asarray(r.tokens, np.int32)])[:n]
+        now = r.t_done if r.t_done >= 0 else float(eng.steps)
+        ok = aw.prefix_cache.offer(r.slot, seq, rid, r.session, now)
+        if not ok and rid:
+            # refused: hand the log back so the caller's release path
+            # (store.release(r.rid)) finds it under the original key
+            eng.store.rename(rid, r.rid)
+        return ok
+
+    def forget_slot(self, aw_id: int, slot: int):
+        cache = self.engine.aws[aw_id].prefix_cache
+        if cache is not None:
+            cache.forget_slot(slot)
+
+    # -- failover: orphan + restore ----------------------------------------
+    def note_aw_failed(self, aw_id: int):
+        """Snapshot the dying AW's cache *before* worker.fail() clears it:
+        checkpoint-backed non-live entries become restorable orphans; the
+        rest release their store logs (a live entry's adopter already
+        carries the prefix in its own log)."""
+        eng = self.engine
+        cache = eng.aws[aw_id].prefix_cache
+        if cache is None:
+            return
+        restorable = eng.ecfg.checkpoint and eng.ecfg.prefix_restore
+        for e in list(cache.entries.values()):
+            if restorable and e.rid and not e.live:
+                self.orphans.append(e)
+            elif e.rid:
+                eng.store.release(e.rid)
+
+    def restore_orphans(self, now: float = 0.0) -> int:
+        """§6.2 applied to cache state: inject each orphaned prefix's
+        committed segments into a fresh slot on a healthy AW (the
+        session's re-pinned home when affinity placement is active) and
+        re-index it there. Pure host-side writes — zero new jit traces.
+        Orphans that cannot land (no free partition slot anywhere, or a
+        refused offer) release their store log instead of leaking."""
+        eng = self.engine
+        restored = 0
+        orphans, self.orphans = self.orphans, []
+        for e in orphans:
+            target = self._pick_target(e, now)
+            if target is None:
+                eng.store.release(e.rid)
+                continue
+            committed, _tv, segs = eng.store.restore_request(e.rid)
+            n = min(e.length, committed + 1)
+            if n < 2 or any(t not in segs for t in range(n)):
+                target = None
+            if target is None:
+                eng.store.release(e.rid)
+                continue
+            slot = target.slots.alloc()
+            cache = eng.layout.clear_slot(eng.cache, slot)
+            for t in range(n):
+                cache = eng.layout.write_token_segment(cache, slot, t,
+                                                       segs[t])
+            eng.cache = cache
+            eng.store.reassign(e.rid, target.aw_id)
+            if target.prefix_cache.insert_restored(
+                    slot, e.tokens[:n], e.rid, e.session, now):
+                restored += 1
+                eng.gateway.stats.prefix_restored += 1
+                eng._note_request_event(
+                    "prefix_restored", e.rid, now,
+                    f"aw{target.aw_id}, {n} tokens"
+                    + (f", session={e.session}" if e.session else ""))
+            else:
+                eng.cache = eng.layout.clear_slot(eng.cache, slot)
+                target.slots.release(slot)
+                eng.store.release(e.rid)
+        return restored
+
+    def _pick_target(self, e: PrefixEntry, now: float):
+        """Failover home for an orphaned prefix: the affinity policy's
+        (re-pinned) choice for the entry's session when available, else
+        the AW with the most free partition slots. Restoration never
+        evicts the target's own entries — it only takes genuinely free
+        slots."""
+        from repro.serving.gateway import SessionAffinityPolicy
+        eng = self.engine
+        pol = eng.gateway.policy
+        if e.session and isinstance(pol, SessionAffinityPolicy):
+            aw_id = pol(eng.gateway.workers, e.session, now=now)
+            if aw_id is not None:
+                w = eng.aws[aw_id]
+                if w.alive and w.slots.free_count() > 0:
+                    return w
+        best, best_free = None, 0
+        for w in eng.aws:
+            if w.alive and w.slots.free_count() > best_free:
+                best, best_free = w, w.slots.free_count()
+        return best
+
+    # -- metrics ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        per_aw = {}
+        for w in self.engine.aws:
+            if w.prefix_cache is not None:
+                per_aw[w.aw_id] = {
+                    "entries": len(w.prefix_cache.entries),
+                    "live": sum(1 for e in w.prefix_cache.entries.values()
+                                if e.live),
+                    "cached_tokens": w.prefix_cache.cached_tokens(),
+                    **w.prefix_cache.local.snapshot()}
+        return per_aw

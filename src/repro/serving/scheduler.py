@@ -158,7 +158,8 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                        r.max_new_tokens, now=r.arrival,
                        slo_class=getattr(r, "slo_class", "standard"),
                        deadline=r.deadline if getattr(r, "deadline", -1.0)
-                       >= 0 else None)
+                       >= 0 else None,
+                       session=getattr(r, "session", "") or None)
             m.slo_class[r.request_id] = getattr(r, "slo_class", "standard")
             qi += 1
         pf0 = engine.prefill_tokens_done()
@@ -211,5 +212,11 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     m.gateway = {"preemptions": gw.stats.preemptions,
                  "blocked_ticks": gw.stats.blocked_ticks,
                  "by_class": {c: dict(v)
-                              for c, v in gw.stats.by_class.items()}}
+                              for c, v in gw.stats.by_class.items()},
+                 "prefix": {"hits": gw.stats.prefix_hits,
+                            "misses": gw.stats.prefix_misses,
+                            "hit_tokens": gw.stats.prefix_hit_tokens,
+                            "evictions": gw.stats.prefix_evictions,
+                            "restored": gw.stats.prefix_restored,
+                            "repins": gw.stats.session_repins}}
     return m

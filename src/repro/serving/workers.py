@@ -88,14 +88,34 @@ class AttentionWorker:
         # prefill_cursor (prompt tokens already written to its slot).
         # Dies with the worker like the slot partition does.
         self.prefills: dict = {}
+        # per-AW prefix cache (serving/prefixcache.py), attached by the
+        # engine's PrefixCachePlane when the plane is enabled. Cached
+        # slots are *this worker's* retained KV: they count as evictable
+        # capacity and die with the worker (metadata is orphaned to the
+        # checkpoint store by the plane before fail()).
+        self.prefix_cache = None
         self.alive = True
 
     # -- placement view -----------------------------------------------------
     def free_slots(self) -> int:
-        return self.slots.free_count() if self.alive else 0
+        if not self.alive:
+            return 0
+        free = self.slots.free_count()
+        if self.prefix_cache is not None:
+            free += self.prefix_cache.evictable_count()
+        return free
 
     def has_capacity(self) -> bool:
-        return self.alive and self.slots.free_count() > 0
+        return self.alive and self.free_slots() > 0
+
+    def take_slot(self, prompt=None, now: float = 0.0):
+        """Allocate a slot for an admission. With a prefix cache, a
+        matching cached prefix is adopted by reference (returning its
+        matched length); otherwise a free-list slot, else the cache's LRU
+        entry is evicted. Returns (slot, matched_prefix_len)."""
+        if self.prefix_cache is not None:
+            return self.prefix_cache.take_slot(prompt, now)
+        return self.slots.alloc(), 0
 
     def drop_request(self, rid: str) -> int:
         """Planned teardown of one request's residency on this AW (cancel,
@@ -114,6 +134,8 @@ class AttentionWorker:
         self.alive = False
         self.slots.drop()
         self.prefills.clear()
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
         self.checkpointer.drop_pending()
         return selfheal.fail_aw(route_state, self.aw_id)
 

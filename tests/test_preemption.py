@@ -177,6 +177,86 @@ def test_preempt_disabled_by_config():
 
 
 # --------------------------------------------------------------------------
+# victim selection policies
+# --------------------------------------------------------------------------
+
+def test_remaining_work_policy_evicts_most_remaining():
+    """Default victim selection: the batch request with the MOST work left
+    is evicted — it has invested the least. Here b-short is younger but
+    nearly done; b-long (older, huge max_new) must be the victim."""
+    eng = make_engine()          # victim_policy defaults to remaining_work
+    hl = eng.client.submit(RequestSpec(rid="b-long", prompt=PROMPT,
+                                       max_new=40, slo_class="batch"))
+    for _ in range(2):
+        eng.step()
+    hs = [eng.client.submit(RequestSpec(rid=f"b-short{i}", prompt=PROMPT + i,
+                                        max_new=6, slo_class="batch"),
+                            now=1.0) for i in range(3)]
+    for _ in range(2):
+        eng.step()
+    assert all(not w.has_capacity() for w in eng.aws)
+    hi = eng.client.submit(RequestSpec(rid="int", prompt=PROMPT + 9,
+                                       max_new=2, slo_class="interactive"),
+                           now=2.0)
+    assert hi.state() == "placed"
+    # under youngest-admit the victim would be a b-short; remaining-work
+    # picks the long request despite its earlier arrival
+    assert hl.state() == "preempted"
+    assert all(h.state() != "preempted" for h in hs)
+
+
+def test_remaining_work_weighs_prefill_debt():
+    """A mid-prefill victim owes its whole prompt tail on top of its
+    decode budget: with equal max_new, the request still prefilling is
+    the cheapest to push aside (and resumes from its cursor)."""
+    kw = dict(chunk_token_budget=4, prefill_bucket=16)
+    eng = make_engine(**kw)
+    done_h = [eng.client.submit(RequestSpec(rid=f"d{i}", prompt=PROMPT + i,
+                                            max_new=20, slo_class="batch"))
+              for i in range(3)]
+    for _ in range(3):
+        eng.step()                 # d* finish prefill, start decoding
+    hp = eng.client.submit(RequestSpec(rid="pf", prompt=LONG_PROMPT,
+                                       max_new=20, slo_class="batch"),
+                           now=1.0)
+    eng.step()                     # pf mid-chunked-prefill
+    r = eng.requests["pf"]
+    assert r.prefilling and r.prefill_cursor < len(LONG_PROMPT) - 1
+    hi = eng.client.submit(RequestSpec(rid="int", prompt=PROMPT + 9,
+                                       max_new=2, slo_class="interactive"),
+                           now=2.0)
+    assert hi.state() in ("placed", "prefilling")   # admitted immediately
+    assert hp.state() == "preempted"       # largest prefill debt
+    assert all(h.state() != "preempted" for h in done_h)
+    run_all(eng, done_h + [hp, hi])
+    ref = make_engine(**kw).generate("pf", LONG_PROMPT, 20)
+    assert hp.tokens() == ref              # resume is still exact
+
+
+def test_youngest_policy_pinned_behavior():
+    """victim_policy="youngest" preserves the pre-remaining-work
+    behavior: the latest arrival is evicted even if it has less work
+    left than an older resident."""
+    eng = make_engine(victim_policy="youngest")
+    hl = eng.client.submit(RequestSpec(rid="b-long", prompt=PROMPT,
+                                       max_new=40, slo_class="batch"))
+    for _ in range(2):
+        eng.step()
+    hy = [eng.client.submit(RequestSpec(rid=f"b-young{i}",
+                                        prompt=PROMPT + i, max_new=6,
+                                        slo_class="batch"), now=1.0)
+          for i in range(3)]
+    for _ in range(2):
+        eng.step()
+    hi = eng.client.submit(RequestSpec(rid="int", prompt=PROMPT + 9,
+                                       max_new=2, slo_class="interactive"),
+                           now=2.0)
+    assert hi.state() == "placed"
+    assert hl.state() != "preempted"
+    assert sum(1 for h in hy if h.state() == "preempted") == 1
+
+
+# --------------------------------------------------------------------------
 # zero-new-jit-trace invariant (the placement plane's bar, extended)
 # --------------------------------------------------------------------------
 

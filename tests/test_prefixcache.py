@@ -1,0 +1,424 @@
+"""Prefix-cache plane (serving/prefixcache.py): radix matching, slot
+adoption, LRU+cost eviction under pressure, live-entry protection, and
+checkpoint-backed restoration of cached prefixes across AW failure.
+
+Acceptance bar (ISSUE 5):
+  * prefix-hit generation is bit-identical to a cache-disabled run;
+  * a full cache evicts LRU prefixes to admit new requests, never evicts
+    refcounted-live prefixes, and admission still succeeds;
+  * AW failure restores cached session prefixes on the failover AW with
+    zero new jit traces, and the session's next turn still hits;
+  * ``session_affinity`` re-pins a session whose pinned AW died and emits
+    a ``session_repinned`` event.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.checkpoint import CheckpointStore
+from repro.data.workloads import chat_history_tokens, make_workload
+from repro.serving.api import RequestSpec
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.prefixcache import AWPrefixCache, RadixIndex
+from repro.serving.scheduler import FailurePlan, run_serving
+from repro.serving.workers import AttentionWorker
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    defaults = dict(max_batch=4, max_seq=64, num_aw=2, num_ew=2,
+                    chunk_token_budget=8, placement="session_affinity",
+                    prefix_cache_slots=2)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(0))
+
+
+def run_to_done(eng, handles, release=True, max_steps=300):
+    hs = handles if isinstance(handles, list) else [handles]
+    n = 0
+    while not all(h.done() for h in hs) and n < max_steps:
+        eng.step()
+        if release:
+            # release as the serving loop does: finished slots are offered
+            # to the prefix cache (or freed) every tick
+            for rid in [r.rid for r in eng.requests.values() if r.done]:
+                eng.release_request(rid)
+        n += 1
+    assert all(h.done() for h in hs)
+    if release:
+        for rid in [r.rid for r in eng.requests.values() if r.done]:
+            eng.release_request(rid)
+
+
+def submit_run(eng, rid, prompt, max_new=4, session=None, release=True):
+    h = eng.client.submit(RequestSpec(rid=rid, prompt=prompt,
+                                      max_new=max_new, session=session))
+    run_to_done(eng, h, release=release)
+    return h.tokens()
+
+
+def prompts(lens, seed=11, vocab=200):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+# --------------------------------------------------------------------------
+# radix index unit tests (no engine)
+# --------------------------------------------------------------------------
+
+def test_radix_insert_match_remove():
+    idx = RadixIndex()
+    idx.insert([1, 2, 3, 4], slot=0)
+    idx.insert([1, 2, 9, 9], slot=1)          # splits the [1,2,3,4] edge
+    idx.insert([7, 7], slot=2)
+    usable = {0, 1, 2}
+    # exact and extending matches walk to the deepest entry
+    assert idx.match([1, 2, 3, 4, 5, 6], usable) == (0, 4)
+    assert idx.match([1, 2, 9, 9, 1], usable) == (1, 4)
+    # divergence mid-edge: shares exactly the common prefix
+    s, lcp = idx.match([1, 2, 3, 8], usable)
+    assert (s, lcp) == (0, 3)
+    s, lcp = idx.match([1, 2, 5], usable)     # diverges at the split node
+    assert s in (0, 1) and lcp == 2
+    assert idx.match([9, 9], usable) == (-1, 0)
+    # usable filtering: skip slot 0, fall back to the sibling branch
+    s, lcp = idx.match([1, 2, 3, 4], {1, 2})
+    assert (s, lcp) == (1, 2)
+    # removal is collision-safe and path-exact
+    idx.remove([1, 2, 3, 4], slot=5)          # wrong slot: no-op
+    assert idx.exact_slot([1, 2, 3, 4]) == 0
+    idx.remove([1, 2, 3, 4], slot=0)
+    assert idx.exact_slot([1, 2, 3, 4]) == -1
+    assert idx.match([1, 2, 3, 4], usable) == (1, 2)
+
+
+def test_aw_prefix_cache_budgets_and_lru():
+    """Slot/token budgets enforced at offer time; eviction is LRU with a
+    shortest-first (cheapest recompute) tie-break."""
+    w = AttentionWorker(0, 0, 4, CheckpointStore())
+    cache = AWPrefixCache(w.slots, max_slots=2, max_tokens=0)
+    w.prefix_cache = cache
+    sa, sb, sc = w.slots.alloc(), w.slots.alloc(), w.slots.alloc()
+    assert cache.offer(sa, np.arange(1, 6), "ra", None, now=1.0)
+    assert cache.offer(sb, np.arange(50, 60), "rb", None, now=2.0)
+    assert cache.evictable_count() == 2
+    # at the slot budget: offering a third evicts the LRU entry (sa) and
+    # returns its slot to the partition
+    free0 = w.slots.free_count()
+    assert cache.offer(sc, np.arange(80, 88), "rc", None, now=3.0)
+    assert cache.evictable_count() == 2
+    assert w.slots.free_count() == free0 + 1
+    assert cache.match_len(np.arange(1, 6)) == 0          # sa evicted
+    assert cache.match_len(np.arange(50, 60)) == 9        # sb kept
+    # token budget refuses an oversized sequence outright
+    tiny = AWPrefixCache(w.slots, max_slots=4, max_tokens=4)
+    s = w.slots.alloc()
+    assert not tiny.offer(s, np.arange(0, 9), "rx", None, now=0.0)
+
+
+# --------------------------------------------------------------------------
+# bit-identity + hit accounting
+# --------------------------------------------------------------------------
+
+def test_warm_turn_bit_identical_and_counted():
+    """Turn 2 of a session shares turn 1's prompt as a prefix: the warm
+    engine adopts the cached slot, prefills only the tail, produces
+    bit-identical tokens, and triggers zero new decode traces."""
+    p1, tail = prompts([12, 7], seed=3)
+    p2 = np.concatenate([p1, tail])
+
+    cold = make_engine(prefix_cache_slots=0)
+    ref1 = submit_run(cold, "s-1", p1, session="sessA")
+    ref2 = submit_run(cold, "s-2", p2, session="sessA")
+
+    warm = make_engine()
+    assert warm.prefix_plane is not None
+    assert submit_run(warm, "s-1", p1, session="sessA") == ref1
+    traces = warm._decode._cache_size()
+    assert submit_run(warm, "s-2", p2, session="sessA") == ref2
+    st = warm.gateway.stats
+    assert st.prefix_hits == 1 and st.prefix_misses == 1
+    assert st.prefix_hit_tokens >= len(p1)
+    # only the uncached tail was chunk-prefilled
+    n_pre = len(p2) - 1
+    assert warm.chunked.stats.prefilled_tokens["s-2"] == \
+        n_pre - st.prefix_hit_tokens
+    assert warm._decode._cache_size() == traces
+    # the handle surfaces the hit
+    assert warm.client.handle("s-2").status().prefix_hit == \
+        st.prefix_hit_tokens
+
+
+def test_fully_cached_prompt_skips_prefill_entirely():
+    """A replayed prompt (same tokens, shorter or equal) adopts the whole
+    prefix: zero chunk-prefill work, straight to decode."""
+    p = prompts([16], seed=5)[0]
+    cold = make_engine(prefix_cache_slots=0)
+    ref = submit_run(cold, "r-1", p, session="s")
+
+    eng = make_engine()
+    submit_run(eng, "r-1", p, session="s")
+    assert submit_run(eng, "r-2", p, session="s") == ref
+    assert eng.gateway.stats.prefix_hit_tokens == len(p) - 1
+    assert eng.chunked.stats.prefilled_tokens.get("r-2", 0) == 0
+
+
+def test_multi_turn_chat_bit_identical_vs_cache_disabled():
+    """Whole-workload exactness: multi_turn_chat through run_serving with
+    the cache on vs off produces identical outputs, with a real hit rate
+    on the warm turns."""
+    wl = make_workload("multi_turn_chat", rate_rps=9.0, duration=1.0,
+                       seed=1, chat_turns=3, chat_turn_gap=0.4)
+    assert len(wl) >= 6
+
+    def run(slots):
+        eng = make_engine(max_batch=8, max_seq=96, prefix_cache_slots=slots,
+                          chunk_token_budget=16)
+        m = run_serving(eng, wl, duration=300.0, step_time=0.02)
+        return m
+
+    m_off = run(0)
+    m_on = run(2)
+    assert len(m_on.finished) == len(m_off.finished) == len(wl)
+    for rid, toks in m_off.outputs.items():
+        assert m_on.outputs[rid] == toks, rid
+    assert m_on.gateway["prefix"]["hits"] > 0
+    assert m_on.gateway["prefix"]["hit_tokens"] > 0
+    assert m_off.gateway["prefix"]["hits"] == 0
+
+
+# --------------------------------------------------------------------------
+# eviction under slot pressure / live-entry protection
+# --------------------------------------------------------------------------
+
+def test_full_cache_evicts_lru_to_admit_new_requests():
+    """One AW, all four slots cached: fresh admissions must evict LRU
+    prefixes transparently (free_slots counts evictable capacity), and
+    outputs stay correct. Prompts have disjoint first tokens, so no
+    accidental prefix matches muddy the eviction accounting."""
+    eng = make_engine(num_aw=1, prefix_cache_slots=4)
+    olds = [np.arange(1 + 10 * i, 9 + 10 * i, dtype=np.int32)
+            for i in range(4)]
+    for i, p in enumerate(olds):
+        submit_run(eng, f"old-{i}", p, session=f"o{i}")
+    aw = eng.aws[0]
+    assert len(aw.prefix_cache.entries) == 4
+    assert aw.slots.free_count() == 0
+    assert aw.free_slots() == 4                 # evictable capacity counts
+
+    cold = make_engine(num_aw=1, prefix_cache_slots=0)
+    news = [np.arange(101 + 10 * i, 110 + 10 * i, dtype=np.int32)
+            for i in range(2)]
+    for i, p in enumerate(news):
+        ref = submit_run(cold, f"new-{i}", p, session=f"n{i}")
+        assert submit_run(eng, f"new-{i}", p, session=f"n{i}") == ref
+    assert eng.gateway.stats.prefix_evictions >= 2
+    assert eng.gateway.stats.prefix_hits == 0
+
+
+def test_lru_order_respects_recency():
+    """A recently re-used prefix survives; the stale one is evicted."""
+    eng = make_engine(num_aw=1, max_batch=2, prefix_cache_slots=2,
+                      num_ew=2)
+    pa = np.arange(1, 9, dtype=np.int32)
+    pb = np.arange(50, 58, dtype=np.int32)
+    submit_run(eng, "a-1", pa, session="A")     # cached, older
+    submit_run(eng, "b-1", pb, session="B")     # cached, newer
+    # touch A: a warm turn re-adopts and re-caches it (fresher last_use)
+    submit_run(eng, "a-2",
+               np.concatenate([pa, np.arange(200, 204, dtype=np.int32)]),
+               session="A")
+    # pressure: a no-match admission must evict B (the LRU), not A
+    pc = np.arange(150, 158, dtype=np.int32)
+    submit_run(eng, "c-1", pc, session="C", release=False)
+    cache = eng.aws[0].prefix_cache
+    assert cache.match_len(pa) > 0              # A (recently used) kept
+    assert cache.match_len(pb) == 0             # B evicted
+    assert any(e.session == "A" for e in cache.entries.values())
+
+
+def test_live_prefixes_are_never_evicted():
+    """An adopted (refcounted-live) prefix shares its slot with the live
+    request: slot pressure must queue the newcomer rather than evict it,
+    and admit once the adopter completes."""
+    eng = make_engine(num_aw=1, max_batch=2, prefix_cache_slots=2)
+    p = prompts([10], seed=6)[0]
+    submit_run(eng, "x-1", p, 2, session="X")   # cached on one slot
+    # adopt it with a long-running warm turn (live entry)
+    p2 = np.concatenate([p, prompts([5], seed=9)[0]])
+    h2 = eng.client.submit(RequestSpec(rid="x-2", prompt=p2, max_new=30,
+                                       session="X"))
+    eng.step()
+    assert eng.gateway.stats.prefix_hits == 1
+    # fill the second slot with another live request
+    h3 = eng.client.submit(RequestSpec(rid="y-1",
+                                       prompt=prompts([6], seed=10)[0],
+                                       max_new=30, session="Y"))
+    eng.step()
+    assert h3.state() in ("placed", "prefilling", "decoding")
+    # pool saturated, only a LIVE cache entry resident: newcomer queues
+    h4 = eng.client.submit(RequestSpec(rid="z-1",
+                                       prompt=prompts([6], seed=12)[0],
+                                       max_new=2, session="Z"))
+    assert h4.state() == "queued"
+    live = [e for w in eng.aws if w.prefix_cache
+            for e in w.prefix_cache.entries.values()]
+    assert len(live) == 1 and live[0].live
+    # the adopter finishing frees capacity; the queue drains
+    run_to_done(eng, [h2, h3, h4])
+    assert h4.done()
+
+
+# --------------------------------------------------------------------------
+# failure restoration + session re-pinning
+# --------------------------------------------------------------------------
+
+def test_aw_failure_restores_prefix_on_failover_aw():
+    """The tentpole resilience claim: a dead AW's cached session prefix is
+    restored per-request from the checkpoint store onto a healthy AW with
+    zero new jit traces; the session re-pins there (event emitted) and its
+    next turn hits the restored prefix, bit-identical to the cold run."""
+    p1, tail = prompts([12, 6], seed=13)
+    p2 = np.concatenate([p1, tail])
+    cold = make_engine(prefix_cache_slots=0)
+    submit_run(cold, "s-1", p1, session="S")
+    ref2 = submit_run(cold, "s-2", p2, session="S")
+
+    eng = make_engine()
+    submit_run(eng, "s-1", p1, session="S")
+    holders = [w.aw_id for w in eng.aws
+               if w.prefix_cache and w.prefix_cache.entries]
+    assert len(holders) == 1
+    traces = eng._decode._cache_size()
+    eng.fail_aw(holders[0])
+    eng.recover_aw_requests(now=1.0)
+    assert eng.gateway.stats.prefix_restored == 1
+    assert eng._decode._cache_size() == traces
+    new_holders = [w.aw_id for w in eng.aws
+                   if w.alive and w.prefix_cache and w.prefix_cache.entries]
+    assert new_holders and new_holders[0] != holders[0]
+    # the next turn hits the restored prefix on the failover AW...
+    assert submit_run(eng, "s-2", p2, session="S") == ref2
+    assert eng.gateway.stats.prefix_hits == 1
+    assert eng.requests.get("s-2") is None       # released
+    # ...and the session was re-pinned with an audited event
+    assert eng.gateway.stats.session_repins == 1
+    evs = eng.drain_request_events()
+    kinds = {e.kind for e in evs}
+    assert "prefix_restored" in kinds and "session_repinned" in kinds
+    assert eng._decode._cache_size() == traces   # still zero new traces
+
+
+def test_prefix_restore_disabled_drops_orphans():
+    eng = make_engine(prefix_restore=False)
+    p = prompts([10], seed=14)[0]
+    submit_run(eng, "s-1", p, session="S")
+    holder = next(w.aw_id for w in eng.aws
+                  if w.prefix_cache and w.prefix_cache.entries)
+    eng.fail_aw(holder)
+    eng.recover_aw_requests(now=1.0)
+    assert eng.gateway.stats.prefix_restored == 0
+    assert all(not w.prefix_cache.entries for w in eng.aws
+               if w.prefix_cache is not None)
+    # the store log was released, not leaked
+    assert eng.store._logs == {}
+
+
+def test_session_repin_points_future_turns_at_healthy_aw():
+    """Even without a cached prefix to restore, a session pinned to a dead
+    AW must be re-pinned to a healthy one by the placement fallback."""
+    eng = make_engine(prefix_cache_slots=0, placement="session_affinity")
+    p = prompts([8], seed=15)[0]
+    submit_run(eng, "t-1", p, 2, session="T")
+    pol = eng.gateway.policy
+    home = pol.pins["T"]
+    eng.fail_aw(home)
+    h = eng.client.submit(RequestSpec(rid="t-2", prompt=p, max_new=2,
+                                      session="T"))
+    run_to_done(eng, h)
+    assert pol.pins["T"] != home
+    assert eng.gateway.stats.session_repins == 1
+    assert any(e.kind == "session_repinned"
+               for e in eng.drain_request_events())
+
+
+def test_recovery_entry_resumes_with_prefix_hit_intact():
+    """A warm-admitted request whose AW dies mid-stream restores through
+    its OWN log — the adopted prefix was re-checkpointed at adoption, so
+    the recovery entry resumes at (at least) the hit cursor instead of
+    re-prefilling the conversation from token zero."""
+    p1, tail = prompts([12, 20], seed=16)
+    p2 = np.concatenate([p1, tail])
+    cold = make_engine(prefix_cache_slots=0)
+    submit_run(cold, "s-1", p1, session="S")
+    ref2 = submit_run(cold, "s-2", p2, session="S")
+
+    eng = make_engine()
+    submit_run(eng, "s-1", p1, session="S")
+    h = eng.client.submit(RequestSpec(rid="s-2", prompt=p2, max_new=4,
+                                      session="S"))
+    r = eng.requests["s-2"]
+    hit = r.prefill_cursor
+    assert hit >= len(p1)                       # adopted the cached prefix
+    eng.step()                                  # one chunk past the hit
+    assert r.prefilling
+    eng.fail_aw(r.aw)
+    eng.recover_aw_requests(now=1.0)
+    assert r.prefill_cursor >= hit              # never back to token 0
+    run_to_done(eng, h)
+    assert h.tokens() == ref2
+    # recomputed chunk work excludes the adopted prefix
+    assert eng.chunked.stats.prefilled_tokens["s-2"] <= len(p2) - 1 - hit
+
+
+def test_cancelled_adopter_forgets_the_live_entry():
+    """Cancelling a request that adopted a cached prefix must drop the
+    (truncated, live) entry with it — no stale index entry, no leaked
+    slot, and later sessions are unaffected."""
+    eng = make_engine(num_aw=1, max_batch=2)
+    p = prompts([10], seed=17)[0]
+    submit_run(eng, "c-1", p, 2, session="C")
+    p2 = np.concatenate([p, prompts([6], seed=18)[0]])
+    h = eng.client.submit(RequestSpec(rid="c-2", prompt=p2, max_new=20,
+                                      session="C"))
+    eng.step()
+    assert eng.gateway.stats.prefix_hits == 1
+    assert h.cancel()
+    cache = eng.aws[0].prefix_cache
+    assert not cache.entries                    # live entry forgotten
+    assert eng.aws[0].slots.free_count() == 2   # both slots back
+    # cache still functional afterwards
+    ref = submit_run(make_engine(num_aw=1, max_batch=2,
+                                 prefix_cache_slots=0), "d-1", p2, 3,
+                     session="D")
+    assert submit_run(eng, "d-1", p2, 3, session="D") == ref
+
+
+def test_rid_reuse_does_not_corrupt_cached_log():
+    """A cached entry keeps its finished request's checkpoint log under a
+    reserved key: resubmitting the SAME rid must get a fresh log (and a
+    prefix hit against its own previous life), stay bit-identical, and
+    survive a crash of the new life."""
+    p = prompts([10], seed=20)[0]
+    p2 = np.concatenate([p, prompts([6], seed=21)[0]])
+    cold = make_engine(prefix_cache_slots=0)
+    submit_run(cold, "r", p, 3, session="S")
+    ref2 = submit_run(cold, "r", p2, 8, session="S")
+
+    eng = make_engine()
+    submit_run(eng, "r", p, 3, session="S")          # cached
+    h = eng.client.submit(RequestSpec(rid="r", prompt=p2, max_new=8,
+                                      session="S"))  # same rid, new life
+    assert eng.gateway.stats.prefix_hits == 1
+    for _ in range(2):
+        eng.step()
+    r = eng.requests["r"]
+    eng.fail_aw(r.aw)                                # crash the new life
+    eng.recover_aw_requests(now=1.0)
+    run_to_done(eng, h)
+    assert h.tokens() == ref2

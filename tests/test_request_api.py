@@ -290,3 +290,80 @@ def test_generate_does_not_warn():
     with w.catch_warnings():
         w.simplefilter("error", DeprecationWarning)
         eng.generate("r", PROMPT, 4)
+
+
+# --------------------------------------------------------------------------
+# completion deadlines (last-token SLO)
+# --------------------------------------------------------------------------
+
+def test_completion_deadline_missed_on_overrun():
+    """A request still decoding past its completion deadline is flagged
+    once, counted per-class, and NOT dropped — it still finishes with the
+    full output."""
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=12,
+                                      slo_class="batch",
+                                      completion_deadline=0.1))
+    n = 0
+    while not h.done() and n < 100:
+        eng.step(now=0.05 * (n + 1))   # crosses 0.1 mid-decode
+        drain_done(eng)
+        n += 1
+    assert h.done()
+    assert len(h.tokens()) == 12       # never dropped
+    st = h.status()
+    assert st.completion_deadline_missed and not st.deadline_missed
+    assert eng.gateway.stats.class_count(
+        "batch", "completion_deadline_missed") == 1
+    evs = [e for e in eng.drain_request_events()
+           if e.kind == "deadline_missed" and "completion" in e.detail]
+    assert len(evs) == 1               # flagged exactly once
+
+
+def test_completion_deadline_met_not_flagged():
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=3,
+                                      completion_deadline=50.0))
+    n = 0
+    while not h.done() and n < 100:
+        eng.step(now=0.05 * (n + 1))
+        drain_done(eng)
+        n += 1
+    assert not h.status().completion_deadline_missed
+    assert eng.gateway.stats.class_count(
+        "standard", "completion_deadline_missed") == 0
+
+
+def test_completion_deadline_backstop_at_release():
+    """Finishing late and being released before the next check_deadlines
+    tick still counts (the release-time backstop)."""
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=2,
+                                      completion_deadline=0.5))
+    while not h.done():
+        eng.step(now=10.0)             # done past the deadline in one hop
+    drain_done(eng)
+    assert h.status().completion_deadline_missed
+    assert eng.gateway.stats.class_count(
+        "standard", "completion_deadline_missed") == 1
+
+
+def test_completion_deadline_survives_preemption():
+    """The completion deadline rides the recovery entry: a preempted
+    victim keeps its last-token SLO, and an overrun after restore is
+    still flagged exactly once."""
+    eng = make_engine()
+    h = eng.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=10,
+                                      slo_class="batch",
+                                      completion_deadline=0.2))
+    for _ in range(2):
+        eng.step(now=0.05)
+    assert eng.preempt_request("r", now=0.1)
+    n = 0
+    while not h.done() and n < 100:
+        eng.step(now=0.3 + 0.05 * n)   # past the deadline after restore
+        drain_done(eng)
+        n += 1
+    assert h.done() and len(h.tokens()) == 10
+    assert eng.gateway.stats.class_count(
+        "batch", "completion_deadline_missed") == 1
