@@ -158,10 +158,135 @@ def _measure_mixed_slo():
     return out
 
 
+def _measure_device_decode():
+    """Device-resident decode loop (serving/decode_loop.py): steps/s at
+    batch 1 and full slot occupancy for decode_segment_len 1 vs 8, the
+    host-sync rate (drains per generated token per request — 1/seg_len by
+    construction, measured here from GatewayStats), and bit-identity of
+    segmented decode vs per-step decode, including across an AW crash that
+    loses an uncommitted segment."""
+    import time
+    prompt = np.arange(1, 13, dtype=np.int32)
+
+    def fresh(seg, **kw):
+        return reduced_engine(seed=0, max_batch=8, max_seq=96,
+                              decode_segment_len=seg, greedy=False,
+                              temperature=1.1, top_k=12, sample_seed=5,
+                              **kw)
+
+    out = {"segment_lens": [1, 8], "perf": {}, "identity": {}}
+    # -- throughput: timing engines run checkpoint-free (the §7.3 decode
+    # loop itself; resilience overhead is priced separately above).
+    # Best-of-`repeats` timing; iteration counts are sized so every timed
+    # segment is full (max_new=80 = 10 full seg-8 segments after warmup).
+    for label, bsz in (("batch_1", 1), ("full_batch", 8)):
+        sec = {}
+        for seg in (1, 8):
+            eng = fresh(seg, checkpoint=False, tarragon=False)
+            for i in range(bsz):
+                eng.client.submit(RequestSpec(rid=f"r{i}", prompt=prompt,
+                                              max_new=80))
+            for _ in range(3 if seg == 1 else 2):    # warmup (compile)
+                eng.step()
+            if SMOKE:
+                repeats, iters = 1, (8 if seg == 1 else 2)
+            else:
+                repeats, iters = (3, 25) if seg == 1 else (4, 2)
+            best = None
+            for _ in range(repeats):
+                hs0 = eng.gateway.stats.host_syncs
+                ntok = 0
+                t0 = time.monotonic()
+                for _ in range(iters):
+                    o = eng.step()
+                    ntok += sum(len(v) for v in o.values())
+                dt = time.monotonic() - t0
+                syncs = eng.gateway.stats.host_syncs - hs0
+                if best is None or dt < best[0]:
+                    best = (dt, ntok, syncs)
+            dt, ntok, syncs = best
+            per_req = ntok / bsz                     # tokens per request
+            sec[f"seg{seg}"] = {
+                "steps_per_s": iters * seg / dt,
+                "tokens_per_s": ntok / dt,
+                "host_syncs_per_token": syncs / max(per_req, 1e-9),
+            }
+        sec["speedup_x"] = sec["seg8"]["steps_per_s"] / \
+            max(sec["seg1"]["steps_per_s"], 1e-9)
+        # the cost segments amortize: per-token loop overhead (dispatch +
+        # h2d/d2h drain + scheduler tick) = step time beyond the in-scan
+        # compute floor, for which the seg-8 token time is the proxy
+        sec["overhead_ms_amortized_per_token"] = \
+            1e3 / max(sec["seg1"]["steps_per_s"], 1e-9) - \
+            1e3 / max(sec["seg8"]["steps_per_s"], 1e-9)
+        out["perf"][label] = sec
+    # On this CPU backend the in-scan model forward (~1.6 ms/token at the
+    # reduced scale — per-op overhead, not FLOPs) dominates the ~0.6 ms
+    # per-step loop overhead, which bounds the end-to-end seg-8 speedup
+    # well below the dispatch-bound accelerator regime; the amortization
+    # itself (host_syncs_per_token, overhead_ms_amortized_per_token) is
+    # the backend-independent effect.
+    out["perf"]["note"] = (
+        "end_to_end speedup on CPU is compute-bound; loop-overhead "
+        "amortization (1/seg_len host syncs, overhead_ms column) is the "
+        "device-resident loop's backend-independent effect")
+
+    # -- bit-identity: checkpointed engines, seg8 vs seg1, same workload
+    specs = [dict(rid="a", prompt=prompt, max_new=5),
+             dict(rid="b", prompt=np.arange(2, 12, dtype=np.int32),
+                  max_new=11),
+             dict(rid="c", prompt=np.arange(5, 14, dtype=np.int32),
+                  max_new=16),
+             dict(rid="d", prompt=prompt[:8], max_new=20)]
+
+    def run_all(eng, inject_failure=False):
+        hs = [eng.client.submit(RequestSpec(**s)) for s in specs]
+        if inject_failure:
+            eng.step()                       # segment 1 commits
+            eng.aws[0].checkpointer.flush = lambda: None
+            eng.step()                       # segment 2 never commits
+            eng.fail_aw(0)
+            eng.recover_aw_requests()
+        n = 0
+        while not all(h.done() for h in hs) and n < 400:
+            eng.step()
+            n += 1
+        assert all(h.done() for h in hs)
+        return {h.rid: h.tokens() for h in hs}
+
+    ref = run_all(fresh(1))
+    plain = run_all(fresh(8))
+    failed = run_all(fresh(8), inject_failure=True)
+    out["identity"] = {
+        "requests": len(specs),
+        "mismatches": sum(plain[r] != ref[r] for r in ref),
+        "mismatches_after_aw_failure": sum(failed[r] != ref[r]
+                                           for r in ref),
+    }
+    assert out["identity"]["mismatches"] == 0, out["identity"]
+    assert out["identity"]["mismatches_after_aw_failure"] == 0, \
+        out["identity"]
+    return out
+
+
 def run():
     rows = []
     payload = {"bench": "steady_state", "serving": [], "decode_path": [],
-               "chunked_prefill": None, "mixed_slo": None}
+               "chunked_prefill": None, "mixed_slo": None,
+               "device_decode": None}
+    dd = _measure_device_decode()
+    payload["device_decode"] = dd
+    for label in ("batch_1", "full_batch"):
+        s = dd["perf"][label]
+        rows.append(Row(
+            f"serving/device_decode/steps_per_s/{label}/seg8",
+            1e6 / max(s["seg8"]["steps_per_s"], 1e-9),
+            f"seg1={s['seg1']['steps_per_s']:.1f}steps/s "
+            f"seg8={s['seg8']['steps_per_s']:.1f}steps/s "
+            f"speedup={s['speedup_x']:.2f}x "
+            f"syncs/token={s['seg8']['host_syncs_per_token']:.3f} "
+            f"mismatches={dd['identity']['mismatches']}+"
+            f"{dd['identity']['mismatches_after_aw_failure']}(failure)"))
     s = _measure_mixed_slo()
     payload["mixed_slo"] = s
     rows.append(Row(

@@ -11,9 +11,13 @@ Layout / tiling decisions (TPU-native, not a CUDA port):
     sequential accumulation axis on TPU.
   * q block [G, Dh] (G = H/Hkv grouped queries) hits the MXU as a skinny
     matmul against [block_k, Dh] key tiles; Dh is padded to 128 by layout.
-  * outputs are the softmax partials (m, l, acc); the current token's
-    self-attention term and the final normalization are fused outside in
-    ``ops.decode_attention`` (keeps the kernel free of ragged +1 logic).
+  * two variants share the block loop: ``decode_attention_partial`` emits
+    the softmax partials (m, l, acc) for callers that combine externally
+    (seq-sharded caches psum-combine them), and ``decode_attention_fused``
+    — the serving decode step's kernel — keeps the partials in VMEM
+    scratch and, on the last kv block, folds the current token's
+    self-attention term and the final normalization in-kernel, so one
+    pallas_call returns the finished [B,H,Dh] attention output.
 """
 from __future__ import annotations
 
@@ -117,3 +121,118 @@ def decode_attention_partial(q, ck, cv, cpos, pos, *, window: int = 0,
         interpret=interpret,
     )(pos.astype(jnp.int32), qs, ck, cv, cpos)
     return m, l, acc
+
+
+# --------------------------------------------------------------------------
+# fused variant: cache partials + self-attention fold + normalize, one call
+# --------------------------------------------------------------------------
+
+def _decode_attn_fused_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref,
+                              k1_ref, v1_ref, o_ref,
+                              m_ref, l_ref, acc_ref,
+                              *, window: int, softcap: float, block_k: int,
+                              nk: int):
+    """Same online-softmax block loop as ``_decode_attn_kernel``, but the
+    running (m, l, acc) live in VMEM scratch — persistent across the
+    sequential kv-block axis — and the LAST block folds the current
+    token's (k1, v1) contribution and writes the normalized output."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, Dh] (pre-scaled)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [bk, Dh]
+    cpos = cpos_ref[0]                           # [bk] int32
+    pos = pos_ref[0]                             # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (cpos >= 0) & (cpos <= pos)
+    if window:
+        mask &= cpos > (pos - window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        k1 = k1_ref[0, 0].astype(jnp.float32)    # [Dh]
+        v1 = v1_ref[0, 0].astype(jnp.float32)    # [Dh]
+        s_self = jax.lax.dot_general(
+            q, k1, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)  # [G]
+        if softcap:
+            s_self = jnp.tanh(s_self / softcap) * softcap
+        m_f = jnp.maximum(m_ref[...], s_self)
+        corr_f = jnp.exp(m_ref[...] - m_f)
+        p_self = jnp.exp(s_self - m_f)
+        l_f = l_ref[...] * corr_f + p_self
+        acc_f = acc_ref[...] * corr_f[:, None] + p_self[:, None] * v1[None]
+        o_ref[0, 0] = acc_f / jnp.maximum(l_f[:, None], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
+                                             "interpret"))
+def decode_attention_fused(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
+                           softcap: float = 0.0, block_k: int = 512,
+                           interpret: bool = False):
+    """Fully fused GQA decode attention: cache blocks + the current token's
+    self-attention + normalization in ONE pallas_call.
+
+    q: [B,H,Dh] (unscaled); ck/cv: [B,Sc,Hkv,Dh]; cpos: [B,Sc];
+    k1/v1: [B,Hkv,Dh]; pos: [B]. Returns [B,H,Dh] in q's dtype.
+    """
+    b, h, dh = q.shape
+    sc, hkv = ck.shape[1], ck.shape[2]
+    g = h // hkv
+    bk = min(block_k, sc)
+    while sc % bk:
+        bk //= 2
+    bk = max(bk, 1)
+    nk = sc // bk
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+
+    kernel = functools.partial(_decode_attn_fused_kernel, window=window,
+                               softcap=softcap, block_k=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk), lambda bi, hi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ki: (bi, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),        # running max m
+            pltpu.VMEM((g,), jnp.float32),        # running denom l
+            pltpu.VMEM((g, dh), jnp.float32),     # running numerator acc
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qs, ck, cv, cpos, k1, v1)
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -65,9 +65,11 @@ def decode_attention(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
     pos: [B]. Returns [B,H,Dh].
     """
     if use_pallas():
-        from repro.kernels.decode_attention import decode_attention_partial
-        m, l, acc = decode_attention_partial(
-            q, ck, cv, cpos, pos, window=window, softcap=softcap,
+        # fused variant: self-attention fold + normalize happen in-kernel,
+        # so the decode step is ONE pallas_call (no separate combine HLO)
+        from repro.kernels.decode_attention import decode_attention_fused
+        return decode_attention_fused(
+            q, ck, cv, cpos, k1, v1, pos, window=window, softcap=softcap,
             interpret=_interpret())
     else:
         # partial+combine (not monolithic softmax): keeps every reduction

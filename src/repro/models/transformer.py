@@ -42,6 +42,11 @@ class ModelApi(NamedTuple):
     # flag appending the accumulated per-slot dispatch-load counter [P] to
     # their returns (the placement manager's telemetry).
     reports_load: bool = False
+    # True when ``decode`` may be scanned into multi-token device segments
+    # (serving/decode_loop.py): requires a pure positional cache (pos -1
+    # rows drop their writes) so a row finishing mid-segment is a no-op.
+    # Recurrent-state families keep per-step dispatch.
+    supports_decode_segments: bool = False
 
 
 # --------------------------------------------------------------------------
@@ -294,4 +299,5 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
 
     return ModelApi(cfg, placement, num_aw, num_ew, init_params, init_cache,
                     forward_train, prefill, decode, init_route_state,
-                    prefill_chunk=prefill_chunk, reports_load=True)
+                    prefill_chunk=prefill_chunk, reports_load=True,
+                    supports_decode_segments=True)

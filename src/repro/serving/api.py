@@ -61,10 +61,16 @@ PREEMPTIBLE_CLASSES = (BATCH,)
 @dataclass(frozen=True)
 class SamplingParams:
     """Per-request decode head configuration (overrides the engine-wide
-    defaults in ``EngineConfig`` when attached to a spec)."""
+    defaults in ``EngineConfig`` when attached to a spec). Carried as
+    slot-indexed device arrays by the decode loop
+    (serving/decode_loop.py) — changing them never re-traces."""
     greedy: bool = True
     temperature: float = 1.0
     top_k: int = 0                 # 0 = full distribution (greedy=False)
+    seed: Optional[int] = None     # per-request stream seed for the
+    #                                counter-based sampler; None = a stable
+    #                                hash of the rid (recovery replays the
+    #                                same stream in any slot)
 
 
 @dataclass

@@ -189,7 +189,15 @@ class ContinuousBatchScheduler:
         else:
             last_logits, req_cache = eng._prefill(
                 eng.params, batch, rs_pre, max_seq=eng.ecfg.max_seq, **kw)
-        last_logits = np.asarray(last_logits)
+        firsts = None
+        if not padded:
+            # exact scheme: the first token comes from the prefill's last-
+            # position logits, sampled on device with the same counter-based
+            # head as decode (key pos = last prompt position, the position
+            # a decode step would have consumed)
+            firsts = eng.decode_plane.sample_rows(
+                last_logits, [q for q, _, _ in entries],
+                [len(q.prompt) - 1 for q, _, _ in entries])
 
         self.stats.calls += 1
         self.stats.requests += n_real
@@ -203,8 +211,7 @@ class ContinuousBatchScheduler:
             if padded and pre_lens[i] < length:
                 state = eng.layout.scrub_request_state(state, pre_lens[i])
             eng.cache = eng.layout.write_request_state(eng.cache, slot, state)
-            first = eng.sample_token(last_logits[i], q.sampling) \
-                if not padded else None
+            first = int(firsts[i]) if not padded else None
             self._install_fresh(q, aw, slot, now, padded=padded, first=first,
                                 n_prefilled=pre_lens[i])
 
@@ -271,6 +278,10 @@ class ContinuousBatchScheduler:
         r.queued_for_recovery = False
         r.t_admit = now
         eng.store.reassign(q.rid, aw)
+        # re-bind sampling to the (possibly different) recovery slot; the
+        # counter-based key is slot-independent, so the replayed stream is
+        # bit-identical wherever the request lands
+        eng.decode_plane.bind(r)
 
         if r.prefilling:
             # mid-prefill preemption: resume the chunk stream after the
@@ -296,12 +307,13 @@ class ContinuousBatchScheduler:
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
-    def step(self, now: Optional[float] = None) -> Dict[str, int]:
+    def step(self, now: Optional[float] = None) -> Dict[str, List[int]]:
         """One iteration: an admission pass when anything is waiting (so
         Client-submitted and preempted requests re-enter without an
         external serving loop), deadline accounting, a budgeted slice of
-        chunked prefill (when the plane is on), then one decode step over
-        all active slots. Returns {rid: new_token}."""
+        chunked prefill (when the plane is on), then one decode *segment*
+        over all active slots — ``decode_segment_len`` device steps per
+        dispatch (1 = per-step cadence). Returns {rid: new_tokens}."""
         eng = self.engine
         t_now = now if now is not None else float(eng.steps)
         if self.gateway.depth():
@@ -312,6 +324,15 @@ class ContinuousBatchScheduler:
         act = eng.active_requests()
         if not act:
             return {}
+        if eng.decode_plane.seg_len > 1:
+            return self._step_segment(act, t_now)
+        return self._step_single(act, t_now)
+
+    def _step_single(self, act, t_now: float) -> Dict[str, List[int]]:
+        """Per-step cadence (decode_segment_len=1): one jitted decode
+        dispatch + device sampling; only the [B] token vector crosses to
+        the host — the [B,V] logits never do."""
+        eng = self.engine
         tokens = np.zeros((eng.ecfg.max_batch,), np.int32)
         # inactive rows carry pos -1: their cache writes are dropped, so a
         # decode step can never clobber a slot that is mid-chunked-prefill
@@ -319,17 +340,21 @@ class ContinuousBatchScheduler:
         for r in act:
             tokens[r.slot] = r.next_input
             pos[r.slot] = r.pos
+        pos_dev = jnp.asarray(pos)
         if eng.collect_load:
             logits, eng.cache, load = eng._decode(
-                eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
+                eng.params, jnp.asarray(tokens), pos_dev, eng.cache,
                 eng.route_state, capacity=eng.decode_capacity,
                 with_load=True)
             eng.note_dispatch_load(load)
         else:
             logits, eng.cache = eng._decode(
-                eng.params, jnp.asarray(tokens), jnp.asarray(pos), eng.cache,
+                eng.params, jnp.asarray(tokens), pos_dev, eng.cache,
                 eng.route_state, capacity=eng.decode_capacity)
-        logits = np.asarray(logits)
+        # sampling head stays on device (counter-based, slot-indexed
+        # params); the drain below is the step's one host sync
+        toks = np.asarray(eng.decode_plane.sample(logits, pos_dev))
+        self.gateway.stats.host_syncs += 1
 
         ck_reqs = [r for r in act
                    if eng.ecfg.checkpoint and eng.aws[r.aw].alive]
@@ -342,17 +367,17 @@ class ContinuousBatchScheduler:
                                                            slots, tk)]
         ck_index = {r.rid: i for i, r in enumerate(ck_reqs)}
 
-        out: Dict[str, int] = {}
+        out: Dict[str, List[int]] = {}
         t_log = t_now
         for r in act:
-            nxt = eng.sample_token(logits[r.slot], r.sampling)
+            nxt = int(toks[r.slot])
             written_pos = r.pos          # decode wrote KV at this position
             r.pos += 1
             r.tokens.append(nxt)
             r.next_input = nxt
             if r.t_first_token < 0:
                 r.t_first_token = t_log
-            out[r.rid] = nxt
+            out[r.rid] = [nxt]
             if r.rid in ck_index:
                 seg = [a[ck_index[r.rid]] for a in stacked]
                 eng.aws[r.aw].checkpointer.checkpoint_token(
@@ -360,6 +385,55 @@ class ContinuousBatchScheduler:
             if len(r.tokens) >= r.max_new or r.pos >= eng.ecfg.max_seq - 1:
                 r.done = True
                 r.t_done = t_log
+        for w in eng.aws:
+            w.checkpointer.flush()
+        eng.steps += 1
+        return out
+
+    def _step_segment(self, act, t_now: float) -> Dict[str, List[int]]:
+        """Segmented cadence (decode_segment_len>1): ONE lax.scan dispatch
+        runs up to seg_len decode+sample steps on device; the token ring
+        drains to the host once, and each request's newly written KV range
+        streams to the checkpoint store through the bulk-segment path
+        (§6.1), so segment boundaries ARE checkpoint boundaries — a crash
+        mid-segment rewinds at most seg_len tokens via the §6.2 restore."""
+        eng = self.engine
+        seg_len = eng.decode_plane.seg_len
+        ring, loads = eng.decode_plane.run_segment(act, seg_len)
+        self.gateway.stats.host_syncs += 1     # the per-segment drain
+        if eng.collect_load:
+            for i in range(seg_len):
+                eng.note_dispatch_load(loads[i])
+
+        out: Dict[str, List[int]] = {}
+        max_seq = eng.ecfg.max_seq
+        ck_items = []
+        for r in act:
+            # the device stop mask and this count are the same formula:
+            # steps until max_new or the cache ceiling, capped by seg_len
+            n_take = max(0, min(seg_len, r.max_new - len(r.tokens),
+                                (max_seq - 1) - r.pos))
+            col = ring[:, r.slot]
+            start = r.pos
+            toks = [int(c) for c in col[:n_take]]
+            assert all(c >= 0 for c in toks), \
+                f"{r.rid}: ring drained an inactive step"
+            for nxt in toks:
+                r.pos += 1
+                r.tokens.append(nxt)
+                r.next_input = nxt
+            if toks and r.t_first_token < 0:
+                r.t_first_token = t_now
+            out[r.rid] = toks
+            if toks and eng.ecfg.checkpoint and eng.aws[r.aw].alive:
+                ck_items.append((r, start, len(toks)))
+            if len(r.tokens) >= r.max_new or r.pos >= max_seq - 1:
+                r.done = True
+                r.t_done = t_now
+        if ck_items:
+            # checkpoint_range over exactly the segment's KV writes — one
+            # multi-slot device gather for every request in the segment
+            eng._bulk_checkpoint_group(ck_items)
         for w in eng.aws:
             w.checkpointer.flush()
         eng.steps += 1

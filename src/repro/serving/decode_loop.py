@@ -1,0 +1,248 @@
+"""Device-resident decode loop: jitted sampling + multi-token segments.
+
+Before this plane, every decode tick round-tripped through the host: the
+jitted decode step produced logits, the scheduler pulled them to the host
+(``np.asarray``), and ``engine.sample_token`` ran numpy argmax / partition /
+``np.random`` per row before the next dispatch. That device->host sync per
+token is the decode path's dominant fixed cost — resilience machinery only
+matters if the failure-free fast path is device-bound (FailSafe's point,
+and the ROADMAP's top open item).
+
+The plane owns three pieces of device state:
+
+  * **Per-slot sampling arrays** — ``greedy``/``temperature``/``top_k``/
+    ``seed`` indexed by slot, mirroring the ``RouteState`` pattern: every
+    request install/recovery is a pure array write, so per-request
+    ``SamplingParams`` never mint a jit trace. Sampling itself is
+    counter-based — the PRNG key is ``fold_in(fold_in(base, seed), pos)``
+    where ``seed`` derives from the request id (stable across slot moves),
+    so a token at (request, pos) is reproducible regardless of batch
+    composition, co-residents, preemption, or which slot the request
+    landed on after recovery.
+  * **A token ring** — decode *segments* of ``decode_segment_len`` inner
+    steps run as one ``lax.scan`` dispatch; sampled tokens accumulate in a
+    device ring ([seg_len, B], -1 = row inactive that step) drained to the
+    host once per segment instead of once per token.
+  * **A stop-condition mask** — emitted-count vs ``max_new`` (and the
+    ``max_seq`` ceiling) per slot, evaluated inside the scan: a row that
+    finishes mid-segment drops out of cache writes and expert-capacity
+    competition (its ``pos`` flips to -1) exactly as it would between
+    host-driven steps, which is what keeps segmented decode bit-identical
+    to per-step decode.
+
+Segment boundaries align with chunk-boundary checkpointing: the scheduler
+drains the ring, appends the tokens, and streams the whole segment's KV
+through ``KVCheckpointer.checkpoint_range`` (the §6.1 bulk path), so a
+failure mid-segment rewinds at most ``decode_segment_len`` tokens through
+the ordinary §6.2 restore.
+
+``decode_segment_len=1`` (the default) keeps today's per-step cadence but
+still samples on device — the host-RNG path is gone entirely.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sample_tokens(key_base, logits, pos, greedy, temperature, top_k, seed):
+    """Counter-based device sampling head. logits [B,V] (any float dtype),
+    pos/greedy/temperature/top_k/seed [B]. Greedy rows take the plain
+    argmax (first-max tie-break, matching ``np.argmax``); stochastic rows
+    take a gumbel-max draw over the temperature-scaled, top-k-masked
+    logits. The key depends only on (engine seed, request seed, pos) — not
+    on the slot or the co-resident set."""
+    lg = logits.astype(jnp.float32)
+    v = lg.shape[-1]
+    gre = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = lg / t
+    # per-row dynamic top-k: the kth-largest value is the mask threshold;
+    # ties at the threshold are kept — the historical host semantics
+    # (`logits < kth` masked, >= kept). The usual k is small, and a full
+    # [B, V] sort is the single most expensive op in the head, so take a
+    # static top-64 slice and fall back to the sort only when some row
+    # asks for a deeper k (lax.cond runs one branch; the kth *value* is
+    # identical from either, so the draw is branch-independent).
+    k = jnp.clip(top_k, 0, v)
+    kc = min(v, 64)
+
+    def _kth_topk(_):
+        vals = jax.lax.top_k(scaled, kc)[0]
+        return jnp.take_along_axis(vals, jnp.clip(k - 1, 0, kc - 1)[:, None],
+                                   axis=1)
+
+    def _kth_sort(_):
+        srt = -jnp.sort(-scaled, axis=-1)
+        kidx = jnp.where(k > 0, k - 1, v - 1)
+        return jnp.take_along_axis(srt, kidx[:, None], axis=1)
+
+    kth = jax.lax.cond(jnp.any(k > kc), _kth_sort, _kth_topk, None)
+    keep = jnp.where((k > 0)[:, None], scaled >= kth, True)
+    masked = jnp.where(keep, scaled, -jnp.inf)
+
+    def row_key(s, p):
+        return jax.random.fold_in(jax.random.fold_in(key_base, s), p)
+
+    keys = jax.vmap(row_key)(seed, jnp.maximum(pos, 0))
+    gmb = jax.vmap(lambda kk: jax.random.gumbel(kk, (v,), jnp.float32))(keys)
+    samp = jnp.argmax(masked + gmb, axis=-1).astype(jnp.int32)
+    return jnp.where(greedy, gre, samp)
+
+
+def _make_segment_fn(api):
+    """Build the fused segment step for one model family: decode (Pallas
+    decode-attention + routed expert GEMM) + the sampling head + the
+    stop-mask state update, scanned ``seg_len`` times inside ONE jit."""
+
+    def seg_fn(params, route_state, cache, tokens, pos, emitted, max_new,
+               greedy, temperature, top_k, seed, key_base, *,
+               seg_len: int, capacity, with_load: bool, max_seq: int):
+        def body(carry, _):
+            tokens, pos, emitted, cache = carry
+            active = pos >= 0
+            if with_load:
+                logits, cache, load = api.decode(
+                    params, tokens, pos, cache, route_state,
+                    capacity=capacity, with_load=True)
+            else:
+                logits, cache = api.decode(params, tokens, pos, cache,
+                                           route_state, capacity=capacity)
+                load = jnp.zeros((0,), jnp.float32)
+            nxt = _sample_tokens(key_base, logits, pos, greedy,
+                                 temperature, top_k, seed)
+            emitted2 = emitted + active.astype(jnp.int32)
+            pos2 = pos + 1
+            # stop mask: a row that hit max_new (or the cache ceiling)
+            # leaves the active set for the rest of the segment — same
+            # transition the host applies between per-step ticks
+            alive = active & (emitted2 < max_new) & (pos2 < max_seq - 1)
+            tok_out = jnp.where(active, nxt, -1)
+            tokens2 = jnp.where(active, nxt, tokens)
+            pos3 = jnp.where(alive, pos2, -1)
+            return (tokens2, pos3, emitted2, cache), (tok_out, load)
+
+        (tokens, pos, emitted, cache), (ring, loads) = jax.lax.scan(
+            body, (tokens, pos, emitted, cache), None, length=seg_len)
+        return cache, ring, loads
+
+    return seg_fn
+
+
+class DecodeLoopPlane:
+    """Per-slot sampling state + the jitted device decode loop."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        ecfg = engine.ecfg
+        b = ecfg.max_batch
+        self.seg_len = max(1, int(getattr(ecfg, "decode_segment_len", 1)))
+        # host mirrors of the per-slot sampling arrays (engine defaults
+        # until a request binds its own SamplingParams to its slot)
+        self.greedy = np.full((b,), bool(ecfg.greedy))
+        self.temperature = np.full((b,), float(ecfg.temperature), np.float32)
+        self.top_k = np.full((b,), int(ecfg.top_k), np.int32)
+        self.seed = np.zeros((b,), np.int32)
+        self._dev: Optional[Tuple] = None      # cached device copies
+        self.key_base = jax.random.PRNGKey(ecfg.sample_seed)
+        self._sample = jax.jit(_sample_tokens)
+        self._seg = jax.jit(
+            _make_segment_fn(engine.api),
+            static_argnames=("seg_len", "capacity", "with_load", "max_seq"))
+
+    # -- per-slot sampling arrays (RouteState-style pure array writes) ------
+    def resolve(self, sampling, rid: str):
+        """(greedy, temperature, top_k, seed) for one request: per-request
+        SamplingParams override engine defaults; the seed defaults to a
+        stable hash of the rid so recomputation after failover/preemption
+        — possibly in a different slot — replays the same stream."""
+        ecfg = self.engine.ecfg
+        greedy = ecfg.greedy if sampling is None else sampling.greedy
+        temp = ecfg.temperature if sampling is None else sampling.temperature
+        top_k = ecfg.top_k if sampling is None else sampling.top_k
+        seed = getattr(sampling, "seed", None) if sampling is not None \
+            else None
+        if seed is None:
+            seed = zlib.crc32(rid.encode()) & 0x7FFFFFFF
+        return bool(greedy), float(temp), int(top_k), int(seed)
+
+    def bind(self, r):
+        """Install request r's sampling config on its slot — an array
+        write, never a trace."""
+        g, t, k, s = self.resolve(r.sampling, r.rid)
+        self.greedy[r.slot] = g
+        self.temperature[r.slot] = t
+        self.top_k[r.slot] = k
+        self.seed[r.slot] = s
+        self._dev = None
+
+    def device_arrays(self):
+        if self._dev is None:
+            self._dev = (jnp.asarray(self.greedy),
+                         jnp.asarray(self.temperature),
+                         jnp.asarray(self.top_k),
+                         jnp.asarray(self.seed))
+        return self._dev
+
+    # -- per-step sampling (decode_segment_len == 1 path) -------------------
+    def sample(self, logits, pos_dev):
+        """Sample [B] next tokens on device from the decode step's logits
+        (still resident — no host round-trip of the [B,V] matrix)."""
+        g, t, k, s = self.device_arrays()
+        return self._sample(self.key_base, logits, pos_dev, g, t, k, s)
+
+    def sample_rows(self, logits, entries, pos_list: List[int]):
+        """First-token sampling for an exact-scheme prefill group: row i of
+        ``logits`` belongs to ``entries[i]`` (a QueuedRequest) whose last
+        prompt position is ``pos_list[i]``. Runs the same jitted sampler
+        (row counts are pow2-padded upstream, so shapes stay O(log B))."""
+        rows = logits.shape[0]
+        g = np.full((rows,), bool(self.engine.ecfg.greedy))
+        t = np.full((rows,), float(self.engine.ecfg.temperature), np.float32)
+        k = np.full((rows,), int(self.engine.ecfg.top_k), np.int32)
+        s = np.zeros((rows,), np.int32)
+        p = np.zeros((rows,), np.int32)
+        for i, q in enumerate(entries):
+            g[i], t[i], k[i], s[i] = self.resolve(q.sampling, q.rid)
+            p[i] = pos_list[i]
+        out = self._sample(self.key_base, logits, jnp.asarray(p),
+                           jnp.asarray(g), jnp.asarray(t), jnp.asarray(k),
+                           jnp.asarray(s))
+        return np.asarray(out)
+
+    # -- segmented decode (decode_segment_len > 1 path) ---------------------
+    def run_segment(self, act, seg_len: int):
+        """One ``lax.scan`` dispatch of ``seg_len`` decode steps over the
+        active set. Returns (ring [seg_len, B] np.int32 with -1 for
+        inactive rows, loads [seg_len, P] np.float32) — ONE device->host
+        drain for the whole segment."""
+        eng = self.engine
+        b = eng.ecfg.max_batch
+        tokens = np.zeros((b,), np.int32)
+        pos = np.full((b,), -1, np.int32)
+        emitted = np.zeros((b,), np.int32)
+        max_new = np.full((b,), np.iinfo(np.int32).max, np.int32)
+        for r in act:
+            tokens[r.slot] = r.next_input
+            pos[r.slot] = r.pos
+            emitted[r.slot] = len(r.tokens)
+            max_new[r.slot] = r.max_new
+        g, t, k, s = self.device_arrays()
+        cache, ring, loads = self._seg(
+            eng.params, eng.route_state, eng.cache,
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(emitted),
+            jnp.asarray(max_new), g, t, k, s, self.key_base,
+            seg_len=seg_len, capacity=eng.decode_capacity,
+            with_load=eng.collect_load, max_seq=eng.ecfg.max_seq)
+        eng.cache = cache
+        return np.asarray(ring), np.asarray(loads)
+
+    def segment_traces(self) -> int:
+        """Jit cache sizes of the plane's step functions (the zero-new-
+        traces invariant extends to the device loop: segment tails, done
+        rows, and SamplingParams changes never mint a trace)."""
+        return self._seg._cache_size() + self._sample._cache_size()

@@ -46,6 +46,7 @@ from repro.serving.api import (PREEMPTIBLE_CLASSES, STANDARD, Client,
                                SamplingParams)
 from repro.serving.batching import ContinuousBatchScheduler
 from repro.serving.chunked import ChunkedPrefillPlane
+from repro.serving.decode_loop import DecodeLoopPlane
 from repro.serving.gateway import Gateway, QueuedRequest
 from repro.serving.kvcache import CacheLayout
 from repro.serving.prefixcache import PrefixCachePlane
@@ -69,6 +70,14 @@ class EngineConfig:
     temperature: float = 1.0       # sampling temperature (greedy=False)
     top_k: int = 0                 # 0 = full distribution (greedy=False)
     sample_seed: int = 0
+    decode_segment_len: int = 1    # decode steps per jitted lax.scan
+    #                                segment (serving/decode_loop.py);
+    #                                1 = per-step dispatch, today's cadence.
+    #                                >1 drains tokens to the host once per
+    #                                segment and checkpoints the segment
+    #                                through the bulk range path; a failure
+    #                                mid-segment rewinds at most this many
+    #                                tokens (transformer family only)
     capacity_factor_decode: float = 0.0  # 0 = use model default
     placement: str = "least_loaded"      # Gateway placement policy
     prefill_bucket: int = 16             # padded-prefill length bucket
@@ -217,6 +226,7 @@ class InferenceEngine:
         self._release_hooks: List[Callable] = []
         self._client: Optional[Client] = None
         self._extract_range = None     # lazy bulk-segment extractor
+        self._extract_multi = None     # lazy multi-slot segment extractor
 
         # ---- jitted step functions ---------------------------------------
         self._extract = self.layout.make_batched_extractor()
@@ -230,7 +240,15 @@ class InferenceEngine:
             else ("max_seq",)
         self._prefill = jax.jit(self.api.prefill,
                                 static_argnames=pre_static + load_static)
-        self._sample_rng = np.random.default_rng(ecfg.sample_seed)
+        # device-resident decode loop (serving/decode_loop.py): jitted
+        # counter-based sampling + multi-token lax.scan segments. Sampling
+        # lives on device for EVERY engine — the host-RNG path is gone.
+        self.decode_plane = DecodeLoopPlane(self)
+        if ecfg.decode_segment_len > 1:
+            assert getattr(self.api, "supports_decode_segments", False), (
+                f"decode_segment_len={ecfg.decode_segment_len} requires a "
+                f"model family with a segmentable decode step (the "
+                f"transformer family); {cfg.name} does not support it")
         self.steps = 0
 
         # padded prefill is only sound for pure full-attention caches:
@@ -315,26 +333,39 @@ class InferenceEngine:
         return p
 
     # ------------------------------------------------------------------
-    # sampling (the decode head): greedy argmax or temperature/top-k
+    # sampling (the decode head): device-resident, serving/decode_loop.py.
+    # The host shim below survives only for external callers.
     # ------------------------------------------------------------------
     def sample_token(self, row_logits: np.ndarray,
-                     sampling: Optional[SamplingParams] = None) -> int:
-        """Sample the next token. Per-request ``SamplingParams`` (from the
-        typed RequestSpec) override the engine-wide defaults."""
+                     sampling: Optional[SamplingParams] = None, *,
+                     seed: Optional[int] = None, pos: int = 0) -> int:
+        """DEPRECATED host-side sampling shim. The serving stack samples on
+        device (``decode_plane``); this remains for external callers that
+        hold host logits. Top-k slices the k candidate rows *before* the
+        softmax (float32 throughout — no full-vocab float64 partition), and
+        the draw is counter-based (Philox keyed on (seed, pos)) instead of
+        stateful, matching the device sampler's reproducibility contract
+        though not its bitstream."""
         greedy = self.ecfg.greedy if sampling is None else sampling.greedy
         temperature = self.ecfg.temperature if sampling is None \
             else sampling.temperature
         top_k = self.ecfg.top_k if sampling is None else sampling.top_k
         if greedy:
             return int(np.argmax(row_logits))
-        logits = np.asarray(row_logits, np.float64) / max(temperature, 1e-6)
-        if top_k:
-            kth = np.partition(logits, -top_k)[-top_k]
-            logits = np.where(logits < kth, -np.inf, logits)
-        logits -= logits.max()
-        p = np.exp(logits)
+        logits = np.asarray(row_logits, np.float32)
+        v = logits.size
+        if top_k and top_k < v:
+            idx = np.argpartition(logits, v - top_k)[v - top_k:]
+        else:
+            idx = np.arange(v)
+        sub = logits[idx] / np.float32(max(temperature, 1e-6))
+        sub = sub - sub.max()
+        p = np.exp(sub)
         p /= p.sum()
-        return int(self._sample_rng.choice(len(p), p=p))
+        s = self.ecfg.sample_seed if seed is None else seed
+        rng = np.random.Generator(
+            np.random.Philox(key=[s & 0xFFFFFFFFFFFFFFFF, max(pos, 0)]))
+        return int(idx[rng.choice(idx.size, p=p)])
 
     # ------------------------------------------------------------------
     # admission (delegates to Gateway + ContinuousBatchScheduler)
@@ -344,15 +375,19 @@ class InferenceEngine:
 
     def make_request_state(self, q: QueuedRequest, slot: int
                            ) -> RequestState:
-        return RequestState(rid=q.rid, slot=slot, prompt=q.prompt,
-                            max_new=q.max_new, t_enqueue=q.t_enqueue,
-                            slo_class=q.slo_class, deadline=q.deadline,
-                            completion_deadline=q.completion_deadline,
-                            sampling=q.sampling, session=q.session,
-                            prefix_hit=q.prefix_hit,
-                            # a miss flagged while queued is not re-flagged
-                            deadline_flagged=q.deadline_flagged,
-                            completion_flagged=q.completion_flagged)
+        st = RequestState(rid=q.rid, slot=slot, prompt=q.prompt,
+                          max_new=q.max_new, t_enqueue=q.t_enqueue,
+                          slo_class=q.slo_class, deadline=q.deadline,
+                          completion_deadline=q.completion_deadline,
+                          sampling=q.sampling, session=q.session,
+                          prefix_hit=q.prefix_hit,
+                          # a miss flagged while queued is not re-flagged
+                          deadline_flagged=q.deadline_flagged,
+                          completion_flagged=q.completion_flagged)
+        # slot-indexed sampling arrays ride the slot assignment (recovery
+        # re-binds through _install_recovery)
+        self.decode_plane.bind(st)
+        return st
 
     @property
     def client(self) -> Client:
@@ -416,10 +451,12 @@ class InferenceEngine:
         return [r for r in self.requests.values()
                 if r.prefilling and not r.done and not r.paused]
 
-    def step(self, now: Optional[float] = None) -> Dict[str, int]:
+    def step(self, now: Optional[float] = None) -> Dict[str, List[int]]:
         """One iteration: a budgeted slice of chunked prefill (when the
-        plane is on) followed by one decode step over all active slots.
-        Returns {rid: new_token}."""
+        plane is on) followed by one decode *segment* over all active slots
+        (``decode_segment_len`` device steps per dispatch; 1 = classic
+        per-step cadence). Returns {rid: new_tokens} — one entry per token
+        the segment emitted for that request."""
         return self.scheduler.step(now)
 
     # ------------------------------------------------------------------
@@ -588,17 +625,6 @@ class InferenceEngine:
             max_shape = 1
             while max_shape * 2 <= self.ecfg.max_seq:
                 max_shape *= 2
-        n = len(r.prompt)
-
-        def token_value(t: int) -> int:
-            # the store hands back position t's *next decode input*: a
-            # prompt token while t+1 is still in the prompt, else the
-            # generated token whose sampling consumed position t
-            if t + 1 < n:
-                return int(r.prompt[t + 1])
-            k = t - n + 1
-            return int(r.tokens[k]) if 0 <= k < len(r.tokens) else -1
-
         t = start
         while t <= last:
             count = min(last - t + 1, max_shape)
@@ -611,9 +637,66 @@ class InferenceEngine:
                          for a in self._extract_range(
                              self.cache, r.slot, base, count=shape)]
             ck.checkpoint_range(r.rid, t, seg_stack,
-                                [token_value(i)
+                                [self._ck_token_value(r, i)
                                  for i in range(t, t + count)])
             t += count
+
+    @staticmethod
+    def _ck_token_value(r: RequestState, t: int) -> int:
+        # the store hands back position t's *next decode input*: a prompt
+        # token while t+1 is still in the prompt, else the generated token
+        # whose sampling consumed position t
+        n = len(r.prompt)
+        if t + 1 < n:
+            return int(r.prompt[t + 1])
+        k = t - n + 1
+        return int(r.tokens[k]) if 0 <= k < len(r.tokens) else -1
+
+    def _bulk_checkpoint_group(self, items):
+        """Segment-boundary checkpointing for MANY requests in one device
+        gather (the per-segment analogue of the per-token batched
+        extract): ``items`` is [(request, start, n_tokens)]. Requests are
+        grouped by pow2 segment shape and rows pow2-padded, so one jitted
+        multi-slot extract serves the whole decode segment; segments then
+        fan out to each request's AW checkpointer host-side."""
+        if self._extract_multi is None:
+            self._extract_multi = self.layout.make_multi_slot_range_extractor()
+        if self.chunked is not None:
+            max_shape = self.chunked.max_shape
+        else:
+            max_shape = 1
+            while max_shape * 2 <= self.ecfg.max_seq:
+                max_shape *= 2
+        groups: Dict[int, list] = {}
+        for r, start, cnt in items:
+            if cnt <= 0:
+                continue
+            if cnt > max_shape:    # oversized: the scalar path chunks it
+                self._bulk_checkpoint(r, start, start + cnt - 1)
+                continue
+            shape = 1
+            while shape < cnt:
+                shape *= 2
+            groups.setdefault(shape, []).append((r, start, cnt))
+        for shape, ent in sorted(groups.items()):
+            rows = 1
+            while rows < len(ent):
+                rows *= 2
+            slots = np.zeros((rows,), np.int32)
+            bases = np.zeros((rows,), np.int32)
+            for i, (r, start, _) in enumerate(ent):
+                slots[i] = r.slot
+                bases[i] = max(0, min(start, self.ecfg.max_seq - shape))
+            stacked = [np.asarray(a) for a in self._extract_multi(
+                self.cache, jnp.asarray(slots), jnp.asarray(bases),
+                count=shape)]
+            for i, (r, start, cnt) in enumerate(ent):
+                off = start - bases[i]
+                seg_stack = [a[i][off:off + cnt] for a in stacked]
+                self.aws[r._aw].checkpointer.checkpoint_range(
+                    r.rid, start, seg_stack,
+                    [self._ck_token_value(r, t)
+                     for t in range(start, start + cnt)])
 
     def cancel_request(self, rid: str, now: float = 0.0) -> bool:
         """Cancel a request anywhere in its lifecycle. Queued: the entry

@@ -216,6 +216,11 @@ class GatewayStats:
     requeued: int = 0               # recovery re-admissions queued
     blocked_ticks: int = 0          # head-of-queue retries
     preemptions: int = 0            # victims evicted to place a higher class
+    host_syncs: int = 0             # decode-path device->host token drains
+    #                                 (one per decode segment — per STEP at
+    #                                 decode_segment_len=1; the observable
+    #                                 cost the device-resident loop divides
+    #                                 by seg_len)
     # prefix-cache plane accounting (serving/prefixcache.py)
     prefix_hits: int = 0            # admissions that adopted a cached prefix
     prefix_misses: int = 0          # cache-eligible admissions without a hit

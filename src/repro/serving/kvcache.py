@@ -160,6 +160,38 @@ class CacheLayout:
         return jax.jit(extract, static_argnames=("count",))
 
     # ------------------------------------------------------------------
+    def make_multi_slot_range_extractor(self):
+        """Segment-drain gather: one jitted call pulls ``count`` contiguous
+        token segments for MANY slots at once — the decode plane's
+        per-segment checkpoint drain (every active request commits its
+        segment's KV in a single device gather instead of one call each).
+        Returns fn(cache, slots [n], starts [n], count=<static>) -> list
+        of leaves with leading [n, count] axes. ``count`` static and rows
+        pow2-padded upstream keep jit keys O(log seg_len · log max_batch)."""
+        batch_axes = list(self.batch_axis)
+        kinds = list(self.leaf_kind)
+
+        def extract(cache, slots, starts, *, count: int):
+            leaves, _ = jax.tree_util.tree_flatten(cache)
+            out = []
+            for leaf, ax, kind in zip(leaves, batch_axes, kinds):
+                def one(slot, start, leaf=leaf, ax=ax, kind=kind):
+                    per = jax.lax.dynamic_index_in_dim(leaf, slot, ax,
+                                                       keepdims=False)
+                    if kind.startswith("attn_"):
+                        sc = per.shape[ax]
+                        sl = jax.lax.dynamic_slice_in_dim(
+                            per, start % sc, count, axis=ax)
+                        return jnp.moveaxis(sl, ax, 0)
+                    return jnp.broadcast_to(per[None],
+                                            (count,) + per.shape)
+
+                out.append(jax.vmap(one)(slots, starts))
+            return out
+
+        return jax.jit(extract, static_argnames=("count",))
+
+    # ------------------------------------------------------------------
     def request_state(self, cache, slot: int) -> List[Any]:
         leaves, _ = self._leaves(cache)
         return [np.asarray(self._take(l, ax, slot))

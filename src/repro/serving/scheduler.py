@@ -184,9 +184,13 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 break
             dt = max(dt, 1e-3)
         clock += dt
-        for rid in out:
-            m.token_log.append(TokenRecord(clock, rid))
-            if rid not in seen_first:
+        for rid, toks in out.items():
+            # one TokenRecord per emitted token: a decode segment
+            # (decode_segment_len>1) lands several per step, all stamped
+            # at the segment's end time
+            for _ in toks:
+                m.token_log.append(TokenRecord(clock, rid))
+            if rid not in seen_first and toks:
                 seen_first.add(rid)
                 r = engine.requests.get(rid)
                 if r is not None:
@@ -196,7 +200,7 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                     # admission). Record immediately so still-running
                     # requests at the duration cutoff are not excluded
                     # from the TTFT distribution.
-                    if len(r.tokens) == 1:
+                    if len(r.tokens) == len(toks):
                         r.t_first_token = clock
                     m.ttft[rid] = r.ttft
         for r in list(engine.requests.values()):
@@ -211,6 +215,7 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     m.prefill = engine.prefill_snapshot()
     m.gateway = {"preemptions": gw.stats.preemptions,
                  "blocked_ticks": gw.stats.blocked_ticks,
+                 "host_syncs": gw.stats.host_syncs,
                  "by_class": {c: dict(v)
                               for c, v in gw.stats.by_class.items()},
                  "prefix": {"hits": gw.stats.prefix_hits,

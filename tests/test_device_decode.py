@@ -1,0 +1,290 @@
+"""Device-resident decode loop (serving/decode_loop.py): jitted sampling,
+multi-token lax.scan segments, and the host-sync accounting.
+
+The bar extends the repo's standing invariants to the new plane:
+
+  * device greedy sampling == host ``np.argmax`` (first-max tie-break);
+  * a stochastic token at (request, pos) is reproducible regardless of
+    batch composition, submission order, or slot assignment (counter-based
+    keys derived from the rid, never the slot);
+  * ``decode_segment_len=8`` is bit-identical to per-step decode — plain
+    runs, mid-segment AW crash (uncommitted segment rewound and replayed),
+    in-segment preemption victims, and prefix-cache warm turns alike;
+  * segment tails, done rows, and SamplingParams changes mint zero new jit
+    traces;
+  * ``GatewayStats.host_syncs`` counts exactly one device->host drain per
+    decode dispatch: per token at seg_len=1, per segment at seg_len=8.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import reduced
+from repro.serving.api import RequestSpec, SamplingParams
+from repro.serving.decode_loop import _sample_tokens
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    defaults = dict(max_batch=4, max_seq=64, num_aw=2, num_ew=2)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(7))
+
+
+def run_to_done(eng, handles, max_steps=300, release=False):
+    hs = handles if isinstance(handles, list) else [handles]
+    n = 0
+    while not all(h.done() for h in hs) and n < max_steps:
+        eng.step()
+        if release:
+            for rid in [r.rid for r in eng.requests.values() if r.done]:
+                eng.release_request(rid)
+        n += 1
+    assert all(h.done() for h in hs)
+
+
+# --------------------------------------------------------------------------
+# sampling head: device vs host
+# --------------------------------------------------------------------------
+
+def test_device_greedy_matches_host_argmax():
+    """Greedy rows of the jitted sampler take np.argmax's answer exactly,
+    including the first-max tie-break."""
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((5, 33)).astype(np.float32)
+    logits[1, 7] = logits[1, 19] = 50.0       # tie: first index must win
+    b = logits.shape[0]
+    out = _sample_tokens(jax.random.PRNGKey(3), jnp.asarray(logits),
+                         jnp.zeros((b,), jnp.int32),
+                         jnp.ones((b,), bool),
+                         jnp.ones((b,), jnp.float32),
+                         jnp.zeros((b,), jnp.int32),
+                         jnp.zeros((b,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.argmax(logits, -1))
+
+
+def test_device_topk_masks_to_k_candidates():
+    """Stochastic draws land inside the per-row top-k set; rows with k=0
+    can land anywhere."""
+    rng = np.random.default_rng(1)
+    logits = rng.standard_normal((4, 64)).astype(np.float32)
+    k = np.asarray([3, 1, 0, 8], np.int32)
+    for pos in range(32):
+        out = np.asarray(_sample_tokens(
+            jax.random.PRNGKey(5), jnp.asarray(logits),
+            jnp.full((4,), pos, jnp.int32), jnp.zeros((4,), bool),
+            jnp.ones((4,), jnp.float32), jnp.asarray(k),
+            jnp.arange(4, dtype=jnp.int32)))
+        for i in range(4):
+            if k[i]:
+                top = np.argsort(-logits[i])[:k[i]]
+                assert out[i] in top
+        # k=1 collapses to the argmax regardless of the key
+        assert out[1] == np.argmax(logits[1])
+
+
+def test_stochastic_token_independent_of_batch_composition():
+    """Same request (rid, prompt, pos) => same token, whatever else is in
+    the batch and whichever slot the request lands on — the counter-based
+    key depends only on (engine seed, rid-derived seed, pos)."""
+    kw = dict(greedy=False, temperature=1.2, top_k=10, sample_seed=11)
+    other = np.arange(3, 11, dtype=np.int32)
+
+    eng_a = make_engine(**kw)                 # alpha alone
+    ha = eng_a.client.submit(RequestSpec(rid="alpha", prompt=PROMPT,
+                                         max_new=10))
+    run_to_done(eng_a, ha)
+    ref = ha.tokens()
+
+    eng_b = make_engine(**kw)                 # alpha + two co-residents
+    hs = [eng_b.client.submit(RequestSpec(rid="alpha", prompt=PROMPT,
+                                          max_new=10)),
+          eng_b.client.submit(RequestSpec(rid="beta", prompt=other,
+                                          max_new=10)),
+          eng_b.client.submit(RequestSpec(rid="gamma", prompt=other,
+                                          max_new=6))]
+    run_to_done(eng_b, hs)
+    assert hs[0].tokens() == ref
+
+    eng_c = make_engine(**kw)                 # alpha in a different slot
+    hb = eng_c.client.submit(RequestSpec(rid="beta", prompt=other,
+                                         max_new=8))
+    ha2 = eng_c.client.submit(RequestSpec(rid="alpha", prompt=PROMPT,
+                                          max_new=10))
+    assert eng_c.requests["alpha"].slot != eng_a.requests["alpha"].slot
+    run_to_done(eng_c, [hb, ha2])
+    assert ha2.tokens() == ref
+
+
+def test_per_request_sampling_params_respected():
+    """Per-request SamplingParams override engine defaults row-by-row: a
+    greedy request co-resident with stochastic ones still produces the
+    engine-greedy reference stream."""
+    ref = make_engine().generate("g", PROMPT, 10)
+    eng = make_engine(greedy=False, temperature=2.0, sample_seed=3)
+    hg = eng.client.submit(RequestSpec(
+        rid="g", prompt=PROMPT, max_new=10,
+        sampling=SamplingParams(greedy=True)))
+    hs = eng.client.submit(RequestSpec(
+        rid="s", prompt=PROMPT, max_new=10,
+        sampling=SamplingParams(greedy=False, temperature=1.5, top_k=4,
+                                seed=99)))
+    run_to_done(eng, [hg, hs])
+    assert hg.tokens() == ref
+    assert hs.tokens() != ref
+
+
+# --------------------------------------------------------------------------
+# segmented decode: bit-identity vs per-step
+# --------------------------------------------------------------------------
+
+def _gen_all(eng, specs):
+    handles = [eng.client.submit(RequestSpec(**s)) for s in specs]
+    run_to_done(eng, handles)
+    return {h.rid: h.tokens() for h in handles}
+
+
+SPECS = [dict(rid="a", prompt=PROMPT, max_new=5),     # ends mid-segment
+         dict(rid="b", prompt=np.arange(2, 12, dtype=np.int32),
+              max_new=11),                            # ends mid-segment 2
+         dict(rid="c", prompt=np.arange(5, 12, dtype=np.int32),
+              max_new=16)]                            # two full segments
+
+
+def test_segment_bit_identical_to_per_step():
+    kw = dict(greedy=False, temperature=1.1, top_k=12, sample_seed=5)
+    ref = _gen_all(make_engine(decode_segment_len=1, **kw), SPECS)
+    seg = _gen_all(make_engine(decode_segment_len=8, **kw), SPECS)
+    assert seg == ref
+    for s in SPECS:                  # stop mask honored exactly
+        assert len(seg[s["rid"]]) == s["max_new"]
+
+
+def test_segment_mid_failure_rewinds_and_replays_bit_identical():
+    """AW crash between a segment's device execution and its checkpoint
+    commit: the un-flushed segment is rewound (<= seg_len tokens) and
+    recomputed bit-identically through the ordinary §6.2 restore."""
+    kw = dict(greedy=False, temperature=1.1, top_k=12, sample_seed=5,
+              decode_segment_len=8)
+    ref = make_engine(**kw).generate("r0", PROMPT, 22)
+
+    eng = make_engine(**kw)
+    h = eng.client.submit(RequestSpec(rid="r0", prompt=PROMPT, max_new=22))
+    r = eng.requests["r0"]
+    assert r.aw == 0
+    eng.step()                        # segment 1: checkpointed + flushed
+    committed_tokens = len(r.tokens)
+    # simulate the crash window: the next segment drains to the host but
+    # its checkpoint writes never commit
+    eng.aws[0].checkpointer.flush = lambda: None
+    eng.step()
+    assert len(r.tokens) > committed_tokens
+    eng.fail_aw(0)
+    assert eng.recover_aw_requests() == ["r0"]
+    assert r.aw == 1
+    # restore rewound at most one segment, to the committed watermark
+    assert len(r.tokens) == committed_tokens
+    run_to_done(eng, h)
+    assert h.tokens() == ref
+    assert eng.store.stats.restores == 1
+
+
+def test_segment_preempted_victim_bit_identical():
+    """An in-segment preemption victim resumes from its committed cursor
+    and finishes with the per-step reference stream."""
+    kw = dict(greedy=False, temperature=1.1, top_k=12, sample_seed=5)
+    ref = make_engine(decode_segment_len=1, **kw).generate("v", PROMPT, 20)
+    eng = make_engine(decode_segment_len=8, **kw)
+    h = eng.client.submit(RequestSpec(rid="v", prompt=PROMPT, max_new=20,
+                                      slo_class="batch"))
+    eng.step()                        # one full segment decoded
+    n_before = len(h.tokens())
+    assert 0 < n_before < 20
+    assert eng.preempt_request("v", now=1.0)
+    assert h.state() == "preempted"
+    run_to_done(eng, h)
+    assert h.tokens() == ref
+    assert h.status().preemptions == 1
+
+
+def test_segment_prefix_cache_warm_turn_bit_identical():
+    """Second session turn rides a prefix-cache hit; segmented decode of
+    the warm turn matches the per-step engine token-for-token."""
+    def turns(seg):
+        eng = make_engine(decode_segment_len=seg, chunk_token_budget=8,
+                          placement="session_affinity",
+                          prefix_cache_slots=2, greedy=False,
+                          temperature=1.1, top_k=12, sample_seed=5)
+        p1 = np.arange(1, 17, dtype=np.int32)
+        h1 = eng.client.submit(RequestSpec(rid="t1", prompt=p1, max_new=6,
+                                           session="s"))
+        run_to_done(eng, h1, release=True)
+        p2 = np.concatenate([p1, np.asarray([3, 1], np.int32)])
+        h2 = eng.client.submit(RequestSpec(rid="t2", prompt=p2, max_new=12,
+                                           session="s"))
+        run_to_done(eng, h2, release=True)
+        return h1.tokens(), h2.tokens(), eng.gateway.stats.prefix_hits
+
+    t1_seg, t2_seg, hits_seg = turns(8)
+    t1_ref, t2_ref, hits_ref = turns(1)
+    assert hits_seg >= 1 and hits_ref >= 1
+    assert (t1_seg, t2_seg) == (t1_ref, t2_ref)
+
+
+# --------------------------------------------------------------------------
+# trace discipline + host-sync accounting
+# --------------------------------------------------------------------------
+
+def test_segment_zero_new_traces():
+    """Segment tails, finished rows, recovery re-binds, and per-request
+    SamplingParams changes are array writes — the segment step and the
+    sampling head never re-trace after warmup."""
+    eng = make_engine(decode_segment_len=8, greedy=False, temperature=1.2,
+                      top_k=6, sample_seed=2)
+    h = eng.client.submit(RequestSpec(rid="w", prompt=PROMPT, max_new=6))
+    run_to_done(eng, h)
+    eng.release_request("w")
+    base = eng.decode_plane.segment_traces()
+    assert base >= 1
+    for i, samp in enumerate([
+            SamplingParams(greedy=True),
+            SamplingParams(greedy=False, temperature=0.4, top_k=3, seed=7),
+            None]):
+        h = eng.client.submit(RequestSpec(
+            rid=f"q{i}", prompt=PROMPT, max_new=3 + 5 * i, sampling=samp))
+        run_to_done(eng, h)
+        eng.release_request(f"q{i}")
+    assert eng.decode_plane.segment_traces() == base
+
+
+def test_host_sync_counter_per_step_and_per_segment():
+    """seg_len=1: one drain per decode step. seg_len=8: one drain per
+    segment, each yielding up to 8 tokens per request."""
+    eng1 = make_engine(decode_segment_len=1)
+    eng1.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=9))
+    drains = 0
+    while not eng1.requests["r"].done:
+        out = eng1.step()
+        assert sum(len(t) for t in out.values()) <= 1
+        drains += 1
+    assert eng1.gateway.stats.host_syncs == drains
+
+    eng8 = make_engine(decode_segment_len=8)
+    eng8.client.submit(RequestSpec(rid="r", prompt=PROMPT, max_new=9))
+    out = eng8.step()
+    assert eng8.gateway.stats.host_syncs == 1
+    assert len(out["r"]) == 8         # whole segment in one drain
+    eng8.step()
+    assert eng8.gateway.stats.host_syncs == 2
+    assert eng8.requests["r"].done
+
+
+def test_segment_requires_model_support_flag():
+    """decode_segment_len > 1 demands ModelApi.supports_decode_segments —
+    built decoders advertise it."""
+    eng = make_engine(decode_segment_len=8)
+    assert eng.api.supports_decode_segments

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref as kref
-from repro.kernels.decode_attention import decode_attention_partial
+from repro.kernels.decode_attention import (decode_attention_fused,
+                                            decode_attention_partial)
 from repro.kernels.moe_gemm import moe_gemm
 from repro.kernels.ssm_scan import ssm_scan
 
@@ -42,6 +43,56 @@ def test_decode_attention_kernel(b, h, hkv, dh, sc, dtype, window, softcap):
     got = ops.combine_decode_partials(q, m, l, acc, k1, v1, softcap=softcap)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("b,h,hkv,dh,sc", [
+    (1, 4, 1, 64, 128),
+    (2, 8, 2, 64, 256),
+    (3, 6, 6, 32, 96),     # MHA (no grouping), non-pow2 batch
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0), (0, 30.0)])
+def test_decode_attention_fused_kernel(b, h, hkv, dh, sc, dtype, window,
+                                       softcap):
+    """The fused variant (self-attention fold + normalize in-kernel, VMEM
+    scratch partials) matches the oracle over the same sweep."""
+    ks = jax.random.split(jax.random.PRNGKey(b * 1000 + h + 1), 6)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    ck = jax.random.normal(ks[1], (b, sc, hkv, dh), dtype)
+    cv = jax.random.normal(ks[2], (b, sc, hkv, dh), dtype)
+    pos = jnp.arange(b) * 7 + sc // 2
+    cpos = jnp.where(jnp.arange(sc)[None] <= pos[:, None],
+                     jnp.arange(sc)[None], -1).astype(jnp.int32)
+    k1 = jax.random.normal(ks[3], (b, hkv, dh), dtype)
+    v1 = jax.random.normal(ks[4], (b, hkv, dh), dtype)
+    want = kref.decode_attention_ref(q, ck, cv, cpos, k1, v1, pos,
+                                     window=window, softcap=softcap)
+    got = decode_attention_fused(q, ck, cv, cpos, k1, v1, pos, window=window,
+                                 softcap=softcap, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+def test_decode_attention_fused_matches_partial_combine():
+    """Fused and partial+combine paths agree bitwise-close: the serving
+    decode step may use either depending on REPRO_KERNELS."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    b, h, hkv, dh, sc = 2, 8, 2, 64, 128
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    ck = jax.random.normal(ks[1], (b, sc, hkv, dh), jnp.float32)
+    cv = jax.random.normal(ks[2], (b, sc, hkv, dh), jnp.float32)
+    pos = jnp.arange(b) * 5 + sc // 2
+    cpos = jnp.where(jnp.arange(sc)[None] <= pos[:, None],
+                     jnp.arange(sc)[None], -1).astype(jnp.int32)
+    k1 = jax.random.normal(ks[3], (b, hkv, dh), jnp.float32)
+    v1 = jax.random.normal(ks[4], (b, hkv, dh), jnp.float32)
+    m, l, acc = decode_attention_partial(q, ck, cv, cpos, pos, block_k=64,
+                                         interpret=True)
+    two_call = ops.combine_decode_partials(q, m, l, acc, k1, v1)
+    fused = decode_attention_fused(q, ck, cv, cpos, k1, v1, pos, block_k=64,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_call),
+                               rtol=2e-6, atol=2e-6)
 
 
 @pytest.mark.parametrize("p,c,d,f", [

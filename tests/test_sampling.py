@@ -41,6 +41,43 @@ def test_top_k_one_equals_greedy():
     assert k1 == greedy
 
 
+def test_sample_token_shim_distribution_equivalence():
+    """The rewritten host shim (top-k sliced *before* the float32 softmax,
+    counter-based Philox draw) samples from the same distribution as the
+    historical formula (float64 softmax over the full vocab with
+    sub-threshold logits masked to -inf)."""
+    eng = make_engine(greedy=False, temperature=0.7, top_k=8, sample_seed=0)
+    rng = np.random.default_rng(5)
+    logits = (rng.standard_normal(64) * 3).astype(np.float32)
+
+    scaled = logits.astype(np.float64) / 0.7          # historical formula
+    kth = np.partition(scaled, -8)[-8]
+    masked = np.where(scaled >= kth, scaled, -np.inf)
+    p_old = np.exp(masked - masked.max())
+    p_old /= p_old.sum()
+
+    n = 4000
+    counts = np.zeros(64)
+    for pos in range(n):                   # counter-based: pos is the draw
+        counts[eng.sample_token(logits, pos=pos)] += 1
+    freq = counts / n
+    # support is exactly the top-k set, and frequencies match within
+    # sampling noise (4 sigma at n=4000 is ~0.03)
+    assert freq[p_old == 0.0].sum() == 0.0
+    assert np.abs(freq - p_old).max() < 0.03
+
+
+def test_sample_token_shim_counter_reproducible():
+    """Same (seed, pos) => same draw; the shim holds no RNG state."""
+    eng = make_engine(greedy=False, temperature=0.9, top_k=6)
+    rng = np.random.default_rng(8)
+    logits = rng.standard_normal(48).astype(np.float32)
+    a = [eng.sample_token(logits, seed=4, pos=p) for p in range(12)]
+    b = [eng.sample_token(logits, seed=4, pos=p) for p in range(12)]
+    assert a == b
+    assert a != [eng.sample_token(logits, seed=5, pos=p) for p in range(12)]
+
+
 def test_capacity_factor_decode_plumbed():
     eng_default = make_engine()
     assert eng_default.decode_capacity is None
