@@ -28,7 +28,7 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, pct
 from repro.serving.api import RequestSpec
 from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
@@ -125,8 +125,8 @@ def _measure_scale_events():
     gens = [e for e in orch.events if e.kind == "placement_changed"]
     return {
         "requests": len(wl), "finished": len(m.finished),
-        "tbt_p50_s": float(np.percentile(tbt, 50)) if tbt.size else 0.0,
-        "tbt_p99_s": float(np.percentile(tbt, 99)) if tbt.size else 0.0,
+        "tbt_p50_s": pct(tbt, 50),
+        "tbt_p99_s": pct(tbt, 99),
         "max_stall_s": m.max_stall(),
         "detect_stall_s": orch.detection_latency(),
         "final_pool": sorted(eng.live_ews),

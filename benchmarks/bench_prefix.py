@@ -27,7 +27,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Row, reduced_engine
+from benchmarks.common import Row, pct, reduced_engine
 from repro.data.workloads import make_workload
 from repro.serving.scheduler import FailurePlan, run_serving
 
@@ -74,12 +74,9 @@ def _summarize(m, wl):
     return {
         "finished": len(m.finished),
         "requests": len(wl),
-        "ttft_warm_turn_p50_s": float(np.median(warm_ttft))
-        if warm_ttft.size else 0.0,
-        "ttft_warm_turn_p95_s": float(np.percentile(warm_ttft, 95))
-        if warm_ttft.size else 0.0,
-        "ttft_first_turn_p50_s": float(np.median(cold_ttft))
-        if cold_ttft.size else 0.0,
+        "ttft_warm_turn_p50_s": pct(warm_ttft, 50),
+        "ttft_warm_turn_p95_s": pct(warm_ttft, 95),
+        "ttft_first_turn_p50_s": pct(cold_ttft, 50),
         "prefix": pf,
         "hit_rate": pf["hit_tokens"] / warm_prefix_tokens
         if warm_prefix_tokens else 0.0,
@@ -151,8 +148,7 @@ def _measure_recovery():
         out[label] = {
             "finished": len(m.finished),
             "prefix": m.gateway["prefix"],
-            "post_failure_ttft_p50_s": float(np.median(post_ttft))
-            if post_ttft.size else 0.0,
+            "post_failure_ttft_p50_s": pct(post_ttft, 50),
         }
     wp = out["recovery_with_prefix"]["prefix"]
     cp = out["recovery_cold"]["prefix"]

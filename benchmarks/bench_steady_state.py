@@ -21,7 +21,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Row, reduced_engine
+from benchmarks.common import Row, pct, reduced_engine
 from repro.serving.api import RequestSpec
 from repro.data.workloads import make_workload
 from repro.serving.scheduler import run_serving
@@ -78,10 +78,9 @@ def _measure_serving(kind: str):
         "requests": len(wl),
         "finished": len(m.finished),
         "throughput_tok_per_s": m.throughput(),
-        "queue_delay_p50_s": float(np.percentile(qd, 50)) if qd.size else 0.0,
-        "queue_delay_p99_s": float(np.percentile(qd, 99)) if qd.size else 0.0,
-        "ttft_p50_s": float(np.median(list(m.ttft.values())))
-        if m.ttft else 0.0,
+        "queue_delay_p50_s": pct(qd, 50),
+        "queue_delay_p99_s": pct(qd, 99),
+        "ttft_p50_s": pct(list(m.ttft.values()), 50),
         "prefill": m.prefill,       # calls / requests / occupancy / batch
     }
 
@@ -108,11 +107,10 @@ def _measure_chunked_prefill():
         tbt = m.tbt_values()
         out[label] = {
             "finished": len(m.finished),
-            "tbt_p50_s": float(np.percentile(tbt, 50)) if tbt.size else 0.0,
-            "tbt_p99_s": float(np.percentile(tbt, 99)) if tbt.size else 0.0,
+            "tbt_p50_s": pct(tbt, 50),
+            "tbt_p99_s": pct(tbt, 99),
             "max_stall_s": m.max_stall(),
-            "ttft_p50_s": float(np.median(list(m.ttft.values())))
-            if m.ttft else 0.0,
+            "ttft_p50_s": pct(list(m.ttft.values()), 50),
             "prefill": m.prefill,
         }
     return out
@@ -143,18 +141,198 @@ def _measure_mixed_slo():
             ttft = m.ttft_values(cls)
             tbt = m.tbt_values(cls)
             sec[cls] = {
-                "ttft_p50_s": float(np.percentile(ttft, 50))
-                if ttft.size else 0.0,
-                "ttft_p99_s": float(np.percentile(ttft, 99))
-                if ttft.size else 0.0,
-                "tbt_p99_s": float(np.percentile(tbt, 99))
-                if tbt.size else 0.0,
+                "ttft_p50_s": pct(ttft, 50),
+                "ttft_p99_s": pct(ttft, 99),
+                "tbt_p99_s": pct(tbt, 99),
                 "max_stall_s": m.max_stall(cls),
             }
         out[label] = sec
     out["interactive_ttft_p99_improvement_x"] = \
         out["no_preempt"]["interactive"]["ttft_p99_s"] / \
         max(out["preempt"]["interactive"]["ttft_p99_s"], 1e-9)
+    return out
+
+
+def _measure_telemetry():
+    """Observability-plane cost + fidelity (telemetry.py): wall-clock
+    overhead of the plane on identical virtual-clock serving work,
+    bit-identity of outputs on/off, streamed-histogram percentiles vs the
+    exact per-token lists, and a failure-injection run exported as the
+    metrics snapshot + Prometheus text + Perfetto trace, with the outage
+    attributed across detection/restore/queue components."""
+    import gc
+    import math
+    import time
+    from repro.core.costmodel import TarragonProfile
+    from repro.core.orchestrator import Orchestrator
+    from repro.serving.scheduler import FailurePlan
+
+    # more requests than slots: the AW failure's victims then *wait* to be
+    # re-admitted, so the outage shows up as restore-attributed stalls
+    n_req = 14 if SMOKE else 20
+    out_toks = 16 if SMOKE else 48
+    wl = make_workload("random", rate_rps=12.0, duration=3.0, seed=5)
+    wl = [dataclasses.replace(w, prompt_len=min(w.prompt_len, 24),
+                              max_new_tokens=out_toks) for w in wl][:n_req]
+
+    def serve(telemetry, failures=()):
+        # threshold below the outage's restore wait (~80 ms here) but
+        # above a prefill-budget tick charge (52 ms)
+        eng = reduced_engine(seed=0, max_batch=8, chunk_token_budget=16,
+                             telemetry=telemetry, stall_threshold=0.06)
+        orch = Orchestrator(eng, profile=TarragonProfile(detect=0.05,
+                                                         detect_retries=2),
+                            worker_init_time=0.5)
+        t0 = time.monotonic()
+        m = run_serving(eng, wl, duration=120.0, orchestrator=orch,
+                        failures=list(failures), step_time=0.02,
+                        prefill_token_time=0.002)
+        return eng, m, time.monotonic() - t0
+
+    out = {"requests": len(wl)}
+    # -- overhead: same workload, same virtual clock (the engine does
+    # identical jitted work either way — the plane is host-side only), so
+    # the wall-time delta IS the plane's cost. The first run on each
+    # engine warms every jit shape and is discarded (compile time is
+    # seconds of noise); timed repeats rerun a decode-heavy workload on
+    # the same engine with a fresh plane, interleaved on/off best-of-R so
+    # machine drift hits both sides equally.
+    from repro.serving.telemetry import TelemetryPlane
+    over_toks = 60 if SMOKE else 120
+    wl_over = make_workload("random", rate_rps=12.0, duration=1.0, seed=9)
+    wl_over = [dataclasses.replace(w, prompt_len=min(w.prompt_len, 24),
+                                   max_new_tokens=over_toks)
+               for w in wl_over][:8]
+    # shared-box wall clocks here show ~8% run-to-run CV, but the *floor*
+    # (best-of-N) is stable to ~1.5% — compare floors, interleaved so a
+    # load spike cannot hit only one side
+    repeats = 8 if SMOKE else 10
+    inner = 2                                  # serving runs per sample
+    engines = {}
+    samples = {"on": [], "off": []}
+    toks = {}
+    for label, tel_on in (("off", False), ("on", True)):
+        eng = reduced_engine(seed=0, max_batch=8, chunk_token_budget=16,
+                             telemetry=tel_on, stall_threshold=0.06)
+        run_serving(eng, wl_over, duration=120.0, step_time=0.02,
+                    prefill_token_time=0.002)          # compile warmup
+        engines[label] = eng
+    for _ in range(repeats):
+        for label in ("off", "on"):
+            eng = engines[label]
+            if label == "on":
+                eng.telemetry = TelemetryPlane(eng)
+                eng.gateway.telemetry = eng.telemetry
+            gc.collect()           # keep GC pauses out of the sample
+            t0 = time.monotonic()
+            for _ in range(inner):
+                m = run_serving(eng, wl_over, duration=120.0,
+                                step_time=0.02, prefill_token_time=0.002)
+            samples[label].append((time.monotonic() - t0) / inner)
+            toks[label] = len(m.token_log)
+    assert toks["on"] == toks["off"]
+    wall = {k: min(v) for k, v in samples.items()}
+    steps_per_run = int(
+        engines["on"].telemetry.registry.counters["engine.steps"])
+    # the A/B floor comparison corroborates, but its resolution is the
+    # box's noise floor; the *gated* number times the actual per-step
+    # hook work (a full batch of token observations + the step span)
+    # against the measured step time — precise at any machine load
+    plane = TelemetryPlane(engines["on"])
+    rids = [f"r{i}" for i in range(8)]
+    iters = 2000
+    # best-of-N floors: interference only inflates a timed block, so the
+    # minimum over repeats is the true hook cost
+    hook_s_per_step = float("inf")
+    for _ in range(5):
+        gc.collect()
+        t0 = time.monotonic()
+        for i in range(iters):
+            plane.on_step(i * 0.02, (i + 1) * 0.02, 16, 0.032, 8)
+            for rid in rids:
+                plane.observe_tokens(rid, (i + 1) * 0.02, 1)
+        hook_s_per_step = min(hook_s_per_step,
+                              (time.monotonic() - t0) / iters)
+    step_wall_s = wall["off"] / max(steps_per_run, 1)
+    out["overhead"] = {
+        "wall_s_on": wall["on"], "wall_s_off": wall["off"],
+        "tokens": toks["on"],
+        "steps_per_run": steps_per_run,
+        "tok_per_s_on": toks["on"] / wall["on"],
+        "tok_per_s_off": toks["off"] / wall["off"],
+        "overhead_ab_pct": (wall["on"] - wall["off"]) / wall["off"] * 100,
+        "hook_us_per_step": hook_s_per_step * 1e6,
+        "overhead_pct": hook_s_per_step / step_wall_s * 100,
+    }
+
+    # -- failure-injection export run: on/off twins, AW 0 dies mid-run
+    failures = [FailurePlan(0.4, "aw", 0)]
+    eng, m, _ = serve(True, failures)
+    _, m_off, _ = serve(False, failures)
+    tel = m.telemetry
+    mismatches = sum(m.outputs[r] != m_off.outputs[r] for r in m_off.outputs)
+
+    def exact_rank(vals, q):
+        v = np.sort(np.asarray(vals))
+        if not v.size:
+            return 0.0
+        return float(v[min(v.size - 1, max(0, math.ceil(q * v.size) - 1))])
+
+    def fidelity(hname, vals):
+        h = tel.registry.hist(hname)
+        sec = {"count_stream": h.count, "count_exact": int(np.size(vals))}
+        for q in (0.50, 0.99):
+            s, e = h.quantile(q), exact_rank(vals, q)
+            sec[f"p{int(q * 100)}"] = {
+                "stream_s": s, "exact_s": e,
+                "within_one_bucket":
+                    abs(h.bucket_index(s) - h.bucket_index(e)) <= 1}
+        return sec
+
+    out["fidelity"] = {
+        "ttft": fidelity("ttft", m.ttft_values()),
+        "tbt": fidelity("tbt", m.tbt_values()),
+        "output_mismatches_vs_off": mismatches,
+    }
+    assert mismatches == 0, "telemetry changed tokens"
+    for sec in (out["fidelity"]["ttft"], out["fidelity"]["tbt"]):
+        assert sec["count_stream"] == sec["count_exact"], sec
+        for q in ("p50", "p99"):
+            assert sec[q]["within_one_bucket"], (q, sec)
+
+    # -- stall attribution of the outage
+    rep = tel.stall_report()
+    by_cause = {}
+    for s in rep:
+        assert abs(sum(s["components"].values()) - s["gap"]) < 1e-9, s
+        for c, v in s["components"].items():
+            if v > 0:
+                by_cause[c] = by_cause.get(c, 0.0) + v
+    out["stalls"] = {
+        "n": len(rep),
+        "threshold_s": tel.stall_threshold,
+        "max_gap_s": max((s["gap"] for s in rep), default=0.0),
+        "by_cause_s": {k: round(v, 6)
+                       for k, v in sorted(by_cause.items())},
+    }
+    assert by_cause.get("restore", 0.0) > 0.0, by_cause
+
+    # -- exports: snapshot JSON + Prometheus text + Perfetto trace
+    rdir = os.path.dirname(RESULTS_PATH)
+    os.makedirs(rdir, exist_ok=True)
+    snap = tel.snapshot()
+    with open(os.path.join(rdir, "telemetry_snapshot.json"), "w") as f:
+        json.dump(snap, f, indent=1)
+    with open(os.path.join(rdir, "metrics.prom"), "w") as f:
+        f.write(tel.prometheus_text())
+    trace = tel.export_chrome(os.path.join(rdir, "trace.perfetto.json"))
+    out["exports"] = {
+        "snapshot": "results/telemetry_snapshot.json",
+        "prometheus": "results/metrics.prom",
+        "perfetto": "results/trace.perfetto.json",
+        "trace_events": len(trace["traceEvents"]),
+        "spans_closed": snap["spans"]["closed"],
+    }
     return out
 
 
@@ -273,7 +451,24 @@ def run():
     rows = []
     payload = {"bench": "steady_state", "serving": [], "decode_path": [],
                "chunked_prefill": None, "mixed_slo": None,
-               "device_decode": None}
+               "device_decode": None, "telemetry": None}
+    t = _measure_telemetry()
+    payload["telemetry"] = t
+    rows.append(Row(
+        "serving/telemetry/overhead",
+        t["overhead"]["wall_s_on"] * 1e6 / max(t["overhead"]["tokens"], 1),
+        f"on={t['overhead']['tok_per_s_on']:.0f}tok/s "
+        f"off={t['overhead']['tok_per_s_off']:.0f}tok/s "
+        f"overhead={t['overhead']['overhead_pct']:.2f}% "
+        f"mismatches={t['fidelity']['output_mismatches_vs_off']}"))
+    rows.append(Row(
+        "serving/telemetry/stall_restore_attributed",
+        t["stalls"]["by_cause_s"].get("restore", 0.0) * 1e6,
+        f"stalls={t['stalls']['n']} "
+        f"max_gap={t['stalls']['max_gap_s']*1e3:.0f}ms "
+        f"ttft_p99 stream={t['fidelity']['ttft']['p99']['stream_s']*1e3:.1f}"
+        f"ms exact={t['fidelity']['ttft']['p99']['exact_s']*1e3:.1f}ms "
+        f"trace_events={t['exports']['trace_events']}"))
     dd = _measure_device_decode()
     payload["device_decode"] = dd
     for label in ("batch_1", "full_batch"):

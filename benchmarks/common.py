@@ -17,6 +17,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.serving.engine import EngineConfig, InferenceEngine
+# one home for the empty-array-guarded percentile helpers every bench and
+# driver used to copy-paste (serving/telemetry.py owns them; re-exported
+# here so benches import from one place)
+from repro.serving.telemetry import pct, summarize_latency  # noqa: F401
 
 
 @dataclass

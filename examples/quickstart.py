@@ -54,9 +54,22 @@ def main():
     for h in handles:
         print(f"{h.rid}: {h.status().tokens_generated} tokens -> "
               f"{h.tokens()[:8]}...")
+        eng.release_request(h.rid)  # teardown closes the lifecycle span
     st = eng.store.stats
     print(f"checkpoint store: {st.updates} segment writes, "
           f"{st.bytes_written/1024:.1f} KiB")
+
+    # telemetry is on by default: stream percentiles without per-request
+    # lists, and export a Perfetto trace of every request's lifecycle.
+    # Open the file at https://ui.perfetto.dev (or chrome://tracing).
+    tel = eng.telemetry
+    snap = tel.snapshot()
+    qd = snap["histograms"]["queue_delay"]
+    print(f"telemetry: {snap['counters'].get('requests.released', 0)} "
+          f"requests released, queue delay p50={qd['p50']*1e3:.1f}ms "
+          f"p99={qd['p99']*1e3:.1f}ms ({qd['count']} obs)")
+    tel.export_chrome("quickstart_trace.json")
+    print("wrote quickstart_trace.json (load in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -9,13 +9,13 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
 from repro.data.workloads import make_workload
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.scheduler import FailurePlan, run_serving
+from repro.serving.telemetry import pct
 
 
 def main():
@@ -45,6 +45,13 @@ def main():
                     help="per-AW prefix-cache slot budget (pairs with "
                          "--workload multi_turn_chat; needs a chunk "
                          "budget; 0 = plane off)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the telemetry plane (metrics registry, "
+                         "span tracing, stall attribution); output is "
+                         "bit-identical either way")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/Chrome trace_event JSON of "
+                         "the run here (open at ui.perfetto.dev)")
     args = ap.parse_args()
     if args.prefix_slots and not args.chunk_budget:
         args.chunk_budget = 16     # the prefix plane rides chunked prefill
@@ -59,7 +66,9 @@ def main():
                         prefill_token_cap=8 * args.chunk_budget,
                         preempt=not args.no_preempt,
                         placement=placement,
-                        prefix_cache_slots=args.prefix_slots)
+                        prefix_cache_slots=args.prefix_slots,
+                        telemetry=not args.no_telemetry,
+                        trace_export_path=args.trace_out)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         auto_rebalance=args.rebalance)
@@ -82,16 +91,16 @@ def main():
     print(f"tokens:   {len(m.token_log)}  "
           f"throughput: {m.throughput():.1f} tok/s (virtual)")
     if tbt.size:
-        print(f"TBT: median={np.median(tbt)*1e3:.1f}ms "
-              f"p95={np.percentile(tbt,95)*1e3:.1f}ms "
+        print(f"TBT: median={pct(tbt, 50)*1e3:.1f}ms "
+              f"p95={pct(tbt, 95)*1e3:.1f}ms "
               f"max_stall={m.max_stall()*1e3:.1f}ms")
     if m.ttft:
-        t = np.asarray(list(m.ttft.values()))
-        print(f"TTFT (virtual, from arrival): median={np.median(t)*1e3:.1f}ms")
+        t = list(m.ttft.values())
+        print(f"TTFT (virtual, from arrival): median={pct(t, 50)*1e3:.1f}ms")
     qd = m.queue_delay_values()
     if qd.size:
-        print(f"queue delay: p50={np.percentile(qd,50)*1e3:.1f}ms "
-              f"p99={np.percentile(qd,99)*1e3:.1f}ms "
+        print(f"queue delay: p50={pct(qd, 50)*1e3:.1f}ms "
+              f"p99={pct(qd, 99)*1e3:.1f}ms "
               f"blocked_ticks={eng.gateway.stats.blocked_ticks}")
     if m.prefill:
         print(f"prefill: {m.prefill['calls']} batched calls for "
@@ -113,8 +122,8 @@ def main():
         print(f"request plane: preemptions={m.gateway['preemptions']}")
         for cls, counts in sorted(m.gateway["by_class"].items()):
             ttft = m.ttft_values(cls)
-            extra = f" ttft_p50={np.median(ttft)*1e3:.0f}ms " \
-                    f"p99={np.percentile(ttft,99)*1e3:.0f}ms" \
+            extra = f" ttft_p50={pct(ttft, 50)*1e3:.0f}ms " \
+                    f"p99={pct(ttft, 99)*1e3:.0f}ms" \
                 if ttft.size else ""
             print(f"  {cls}: {counts}{extra}")
     if eng.placement_mgr is not None:
@@ -124,6 +133,17 @@ def main():
               f"per-EW load={ {k: round(v, 1) for k, v in mgr.per_ew_load().items()} }")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}s] {e.kind} {e.worker} {e.detail}")
+    if m.telemetry is not None:
+        stalls = m.telemetry.stall_report()
+        for st in stalls:
+            comps = ", ".join(f"{k}={v*1e3:.0f}ms"
+                              for k, v in sorted(st["components"].items())
+                              if v > 1e-6)
+            print(f"  [stall {st['rid']} {st['kind']} "
+                  f"{st['gap']*1e3:.0f}ms] {comps}")
+        if args.trace_out:
+            print(f"trace written to {args.trace_out} "
+                  f"(open at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -83,12 +83,23 @@ class Orchestrator:
         self._failures: List[_PendingFailure] = []
         self._provisions: List[_PendingProvision] = []
         self._scales: List[_PendingScale] = []
+        # telemetry plane (serving/telemetry.py): control-plane events
+        # publish to the engine's bus at emission, so cursor-based
+        # consumers see them without waiting for (or racing) this
+        # orchestrator's own audit log
+        self.bus = getattr(engine, "bus", None)
+
+    def _emit(self, ev: WorkerEvent):
+        self.events.append(ev)
+        if self.bus is not None:
+            self.bus.publish(ev)
+        return ev
 
     # -- failure injection (the SIGINT of §7.2) -----------------------------
     def inject_failure(self, kind: str, worker_id: int, now: float):
         assert kind in ("aw", "ew")
         self._failures.append(_PendingFailure(kind, worker_id, now))
-        self.events.append(WorkerEvent(now, f"fail_{kind}", f"{kind}{worker_id}"))
+        self._emit(WorkerEvent(now, f"fail_{kind}", f"{kind}{worker_id}"))
 
     def detection_latency(self) -> float:
         return self.profile.detect * self.profile.detect_retries
@@ -109,7 +120,7 @@ class Orchestrator:
                              "raise EngineConfig.max_ew to add spares")
         t_ready = now + self.T_w + self.T_push
         self._scales.append(_PendingScale("add_ew", -1, t_ready))
-        self.events.append(WorkerEvent(
+        self._emit(WorkerEvent(
             now, "scale_out_started", "ew?",
             f"join in T_w+T_push={self.T_w + self.T_push:.2f}s"))
 
@@ -123,7 +134,7 @@ class Orchestrator:
         if len(mgr.members) <= 1:
             raise ValueError("cannot drain the last EW")
         self._scales.append(_PendingScale("drain_ew", ew, now + self.T_push))
-        self.events.append(WorkerEvent(
+        self._emit(WorkerEvent(
             now, "drain_started", f"ew{ew}",
             f"migrating experts, T_push={self.T_push:.2f}s"))
 
@@ -133,8 +144,8 @@ class Orchestrator:
                              "(MoE + tarragon)")
         self._scales.append(_PendingScale("rebalance", -1,
                                           now + self.T_push))
-        self.events.append(WorkerEvent(now, "rebalance_started", "pool",
-                                       f"T_push={self.T_push:.2f}s"))
+        self._emit(WorkerEvent(now, "rebalance_started", "pool",
+                               f"T_push={self.T_push:.2f}s"))
 
     def _maybe_auto_rebalance(self, now: float):
         mgr = getattr(self.engine, "placement_mgr", None)
@@ -162,6 +173,11 @@ class Orchestrator:
                 continue
             f.detected = True
             ev = WorkerEvent(now, "detected", f"{f.kind}{f.worker_id}")
+            tel = getattr(self.engine, "telemetry", None)
+            if tel is not None:
+                # the detection window [t_fail, now] is the T_w component
+                # of every stall this failure causes
+                tel.on_failure_detected(f.kind, f.worker_id, f.t_fail, now)
             if f.kind == "ew":
                 # AW-side self-healing: ERT remap to shadows (instant once
                 # detected)
@@ -192,7 +208,7 @@ class Orchestrator:
                     ev.detail += f" ({waiting} queued for retry)"
                 self._provisions.append(
                     _PendingProvision(f.kind, f.worker_id, now + self.T_w))
-            self.events.append(ev)
+            self._emit(ev)
             fired.append(ev)
 
         remaining = []
@@ -228,7 +244,7 @@ class Orchestrator:
                 # (recovery entries sit at the front)
                 self.engine.scheduler.admit(now)
                 ev = WorkerEvent(now, "provisioned", f"aw{p.worker_id}")
-            self.events.append(ev)
+            self._emit(ev)
             fired.append(ev)
         self._provisions = remaining
 
@@ -256,14 +272,16 @@ class Orchestrator:
                 # drain target died and was promoted away): surface it as an
                 # event, don't kill the control loop
                 ev = WorkerEvent(now, "scale_failed", s.kind, str(e))
-            self.events.append(ev)
+            self._emit(ev)
             fired.append(ev)
         self._scales = remaining_s
 
         self._maybe_auto_rebalance(now)
 
         # surface placement-generation changes made by the engine this tick
-        # (benchmarks/tests audit plan generations through the event log)
+        # (benchmarks/tests audit plan generations through the event log).
+        # These were already published to the bus at emission — the drains
+        # below only feed this legacy audit log, never the bus.
         for ev in self.engine.drain_plan_events() \
                 if hasattr(self.engine, "drain_plan_events") else []:
             self.events.append(ev)

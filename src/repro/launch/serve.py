@@ -18,15 +18,16 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.orchestrator import Orchestrator
 from repro.data.workloads import make_workload
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.scheduler import FailurePlan, ScalePlan, run_serving
+from repro.serving.telemetry import pct
 
 
 def parse_failure(s: str) -> FailurePlan:
@@ -85,6 +86,15 @@ def main():
                     help="chunked-prefill token budget per tick "
                          "(0 = whole-prompt prefill)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the telemetry plane (output is "
+                         "bit-identical either way)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/Chrome trace_event JSON here")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the JSON metrics snapshot here")
+    ap.add_argument("--prom-out", default="",
+                    help="write the Prometheus text exposition here")
     args = ap.parse_args()
     if args.prefix_slots and not args.chunk_budget:
         args.chunk_budget = 16
@@ -104,7 +114,9 @@ def main():
                         preempt=not args.no_preempt,
                         chunk_token_budget=args.chunk_budget,
                         prefill_token_cap=8 * args.chunk_budget,
-                        prefix_cache_slots=args.prefix_slots)
+                        prefix_cache_slots=args.prefix_slots,
+                        telemetry=not args.no_telemetry,
+                        trace_export_path=args.trace_out)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         ew_policy=args.ew_policy,
@@ -124,13 +136,13 @@ def main():
     print(f"  tokens: {len(m.token_log)}  "
           f"throughput: {m.throughput():.1f} tok/s")
     if tbt.size:
-        print(f"  TBT p50={np.median(tbt)*1e3:.1f}ms "
-              f"p95={np.percentile(tbt,95)*1e3:.1f}ms "
+        print(f"  TBT p50={pct(tbt, 50)*1e3:.1f}ms "
+              f"p95={pct(tbt, 95)*1e3:.1f}ms "
               f"max_stall={m.max_stall()*1e3:.1f}ms")
     qd = m.queue_delay_values()
     if qd.size:
-        print(f"  queue delay p50={np.percentile(qd,50)*1e3:.1f}ms "
-              f"p99={np.percentile(qd,99)*1e3:.1f}ms")
+        print(f"  queue delay p50={pct(qd, 50)*1e3:.1f}ms "
+              f"p99={pct(qd, 99)*1e3:.1f}ms")
     if m.prefill:
         print(f"  prefill: {m.prefill['calls']} calls / "
               f"{m.prefill['requests']} reqs "
@@ -149,11 +161,29 @@ def main():
         print(f"  request plane: preemptions={m.gateway['preemptions']}")
         for cls, counts in sorted(m.gateway["by_class"].items()):
             ttft = m.ttft_values(cls)
-            extra = f" ttft_p50={np.median(ttft)*1e3:.0f}ms" \
+            extra = f" ttft_p50={pct(ttft, 50)*1e3:.0f}ms" \
                 if ttft.size else ""
             print(f"    {cls}: {counts}{extra}")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
+    if m.telemetry is not None:
+        for st in m.telemetry.stall_report():
+            comps = ", ".join(f"{k}={v*1e3:.0f}ms"
+                              for k, v in sorted(st["components"].items())
+                              if v > 1e-6)
+            print(f"  [stall {st['rid']} {st['kind']} "
+                  f"{st['gap']*1e3:.0f}ms] {comps}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(m.telemetry.snapshot(), f, indent=1)
+            print(f"  metrics snapshot -> {args.metrics_out}")
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(m.telemetry.prometheus_text())
+            print(f"  prometheus text -> {args.prom_out}")
+        if args.trace_out:
+            print(f"  perfetto trace -> {args.trace_out} "
+                  f"(open at ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -237,6 +237,9 @@ class ContinuousBatchScheduler:
                 st.done = True
                 st.t_done = now
         eng.requests[q.rid] = st
+        if eng.telemetry is not None:
+            eng.telemetry.on_whole_prefill(
+                q.rid, now, n, "padded" if padded else "exact")
 
         if eng.ecfg.checkpoint:
             ck = eng.aws[aw].checkpointer
@@ -282,6 +285,8 @@ class ContinuousBatchScheduler:
         # counter-based key is slot-independent, so the replayed stream is
         # bit-identical wherever the request lands
         eng.decode_plane.bind(r)
+        if eng.telemetry is not None:
+            eng.telemetry.on_restore(q.rid, now, len(segs), r.prefilling)
 
         if r.prefilling:
             # mid-prefill preemption: resume the chunk stream after the

@@ -152,6 +152,8 @@ class ChunkedPrefillPlane:
                 eng.aws[aw].checkpointer.flush()
         self.stats.requests += 1
         self.stats.prefilled_tokens.setdefault(q.rid, 0)
+        if eng.telemetry is not None:
+            eng.telemetry.on_prefill_start(q.rid, now, hit, n)
         if hit >= n - 1:
             # whole prompt prefix cached: first decode step emits the
             # first token — warm-turn TTFT is one step
@@ -277,6 +279,8 @@ class ChunkedPrefillPlane:
             eng.aws[job.aw].prefills[job.rid] = r.prefill_cursor
             self.stats.prefilled_tokens[job.rid] = \
                 self.stats.prefilled_tokens.get(job.rid, 0) + take
+            if eng.telemetry is not None:
+                eng.telemetry.on_prefill_chunk(job.rid, now, take, shape)
             if r.prefill_cursor >= job.n_pre:
                 del self.jobs[job.rid]
                 eng.aws[job.aw].prefills.pop(job.rid, None)
@@ -308,3 +312,6 @@ class ChunkedPrefillPlane:
         r.prefilling = False
         r.pos = n - 1
         r.next_input = int(r.prompt[-1])
+        eng = self.engine
+        if eng.telemetry is not None:
+            eng.telemetry.on_prefill_done(r.rid, eng.telemetry.now)

@@ -239,6 +239,11 @@ class DecodeLoopPlane:
             seg_len=seg_len, capacity=eng.decode_capacity,
             with_load=eng.collect_load, max_seq=eng.ecfg.max_seq)
         eng.cache = cache
+        if eng.telemetry is not None:
+            # host-side counters only — the dispatch above is untouched
+            eng.telemetry.registry.inc("decode.segments")
+            eng.telemetry.registry.inc("decode.segment_steps", seg_len)
+            eng.telemetry.registry.observe("decode.segment_rows", len(act))
         return np.asarray(ring), np.asarray(loads)
 
     def segment_traces(self) -> int:

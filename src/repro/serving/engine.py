@@ -50,6 +50,7 @@ from repro.serving.decode_loop import DecodeLoopPlane
 from repro.serving.gateway import Gateway, QueuedRequest
 from repro.serving.kvcache import CacheLayout
 from repro.serving.prefixcache import PrefixCachePlane
+from repro.serving.telemetry import EventBus, TelemetryPlane
 from repro.serving.workers import (AttentionWorker, ClusterSlotView,
                                    ExpertWorker)
 
@@ -110,6 +111,18 @@ class EngineConfig:
     prefix_restore: bool = True          # restore a dead AW's cached
     #                                      prefixes from the checkpoint
     #                                      store onto healthy AWs
+    # ---- telemetry plane (serving/telemetry.py) --------------------------
+    telemetry: bool = True               # metrics registry + span tracing
+    #                                      + stall attribution (host-side
+    #                                      only: on/off is bit-identical
+    #                                      and trace-count-identical)
+    stall_threshold: float = 0.25        # TTFT/TBT gap (virtual s) above
+    #                                      which per-cause attribution runs
+    hist_buckets_per_decade: int = 32    # streaming-histogram resolution
+    #                                      (quantile error = one bucket,
+    #                                      ~7.5% at 32)
+    trace_export_path: str = ""          # write the Perfetto/Chrome trace
+    #                                      here at run finalize ("" = off)
 
 
 @dataclass
@@ -217,6 +230,15 @@ class InferenceEngine:
         self.gateway = Gateway(self.aws, policy=ecfg.placement)
         self.scheduler = ContinuousBatchScheduler(
             self, self.gateway, bucket=ecfg.prefill_bucket)
+        # ---- telemetry plane (serving/telemetry.py) -----------------------
+        # publish-at-emission event bus (multi-consumer, cursor-based) +
+        # optional metrics/span/attribution plane. Both are host-side
+        # bookkeeping only: no device arrays, no jax calls.
+        self.bus = EventBus()
+        self.gateway.attach_bus(self.bus)
+        self.telemetry: Optional[TelemetryPlane] = \
+            TelemetryPlane(self) if ecfg.telemetry else None
+        self.gateway.telemetry = self.telemetry
         self.requests: Dict[str, RequestState] = {}
         # typed request-lifecycle plane (serving/api.py): preemption hook,
         # lifecycle event timeline, release listeners for handles
@@ -438,6 +460,8 @@ class InferenceEngine:
         if rid in admitted:
             return True
         self.gateway.drop(rid)
+        if self.telemetry is not None:
+            self.telemetry.on_drop(rid, now, "refused")
         return False
 
     # ------------------------------------------------------------------
@@ -484,7 +508,14 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def _note_request_event(self, kind: str, rid: str, now: float,
                             detail: str = ""):
-        self.request_log.append(WorkerEvent(now, kind, rid, detail))
+        ev = WorkerEvent(now, kind, rid, detail)
+        self.request_log.append(ev)
+        # publish-at-emission: the bus carries the same event for every
+        # cursor-based consumer; the request_log stays as a legacy
+        # destructive view for the orchestrator timeline
+        self.bus.publish(ev)
+        if self.telemetry is not None:
+            self.telemetry.on_request_event(ev)
 
     def drain_request_events(self) -> List[WorkerEvent]:
         evs, self.request_log = self.request_log, []
@@ -578,6 +609,8 @@ class InferenceEngine:
         self._note_request_event(
             "preempted", rid, now,
             f"slot freed on aw{aw.aw_id}, resume@{committed + 1}")
+        if self.telemetry is not None:
+            self.telemetry.on_preempt(rid, now)
         return True
 
     def _commit_resident_kv(self, r: RequestState) -> int:
@@ -712,6 +745,8 @@ class InferenceEngine:
                 return False
             self.gateway.stats.bump(entry.slo_class, "cancelled")
             self._note_request_event("cancelled", rid, now, "while queued")
+            if self.telemetry is not None:
+                self.telemetry.on_drop(rid, now, "cancelled")
             return True
         if r.done:
             return False
@@ -719,6 +754,8 @@ class InferenceEngine:
         r.done = True
         self.gateway.stats.bump(r.slo_class, "cancelled")
         self._note_request_event("cancelled", rid, now, r.state)
+        if self.telemetry is not None:
+            self.telemetry.on_cancel(rid, now, "in_flight")
         self.release_request(rid)
         return True
 
@@ -837,6 +874,8 @@ class InferenceEngine:
                 if r is None or r.done or r.queued_for_recovery:
                     continue
                 r.queued_for_recovery = True
+                if self.telemetry is not None:
+                    self.telemetry.on_failover(rid, now)
                 # the recovery waiting spell starts now, not at arrival;
                 # class/deadline/sampling survive the crash with the state
                 entries.append(QueuedRequest(
@@ -904,9 +943,12 @@ class InferenceEngine:
         has already charged the weight-push time to the virtual clock)."""
         self.route_state = self.route_state._replace(
             **self._plan_arrays(plan))
-        self.plan_log.append(WorkerEvent(
-            now, "placement_changed", f"gen{plan.generation}",
-            detail or plan.reason))
+        ev = WorkerEvent(now, "placement_changed", f"gen{plan.generation}",
+                         detail or plan.reason)
+        self.plan_log.append(ev)
+        self.bus.publish(ev)
+        if self.telemetry is not None:
+            self.telemetry.registry.inc("placement.plans_installed")
 
     def drain_plan_events(self) -> List[WorkerEvent]:
         evs, self.plan_log = self.plan_log, []
@@ -1032,6 +1074,8 @@ class InferenceEngine:
         # own a stale log a preemption created under this rid — leaving
         # it would corrupt a later submission reusing the rid
         self.store.release(rid)
+        if self.telemetry is not None:
+            self.telemetry.on_release(r)
         for hook in self._release_hooks:
             hook(r)
 

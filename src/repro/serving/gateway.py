@@ -191,8 +191,12 @@ class SessionAffinityPolicy:
                 return None        # nothing placeable now; keep the pin
             #                        and retry (re-pin on a real placement)
             self.pins[key] = new
-            self.events.append(WorkerEvent(
-                now, "session_repinned", key, f"aw{pin}->aw{new}"))
+            ev = WorkerEvent(now, "session_repinned", key,
+                             f"aw{pin}->aw{new}")
+            self.events.append(ev)
+            bus = getattr(self, "bus", None)
+            if bus is not None:
+                bus.publish(ev)
             if self.stats is not None:
                 self.stats.session_repins += 1
             return new
@@ -266,6 +270,17 @@ class Gateway:
         # True means a victim's slot was freed (preempt-and-requeue) and
         # placement should be retried for the head.
         self.preemptor = None
+        # telemetry plane (serving/telemetry.py): the engine installs the
+        # event bus and (optionally) the TelemetryPlane after construction
+        self.bus = None
+        self.telemetry = None
+
+    def attach_bus(self, bus):
+        """Install the publish-at-emission event bus; the placement policy
+        shares it so session_repinned events publish at emission instead
+        of waiting for the next destructive drain."""
+        self.bus = bus
+        self.policy.bus = bus
 
     # -- queue management ---------------------------------------------------
     @property
@@ -292,6 +307,8 @@ class Gateway:
         self._insert(entry)
         self.stats.enqueued += 1
         self.stats.bump(slo_class, "enqueued")
+        if self.telemetry is not None:
+            self.telemetry.on_enqueue(rid, now, slo_class)
 
     def _insert(self, entry: QueuedRequest):
         """Deadline-aware, stable insertion: after every recovery entry,
@@ -453,6 +470,10 @@ class Gateway:
                     self.stats.queue_delay[head.rid] = \
                         self.stats.queue_delay.get(head.rid, 0.0) + \
                         (now - head.t_enqueue)
+                    if self.telemetry is not None:
+                        self.telemetry.on_admit(
+                            head.rid, now, aw, slot, cls, head.recovery,
+                            head.prefix_hit, now - head.t_enqueue)
                     admitted.append((head, aw, slot))
                     progressed = True
             if not progressed:

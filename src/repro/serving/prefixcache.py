@@ -458,6 +458,9 @@ class PrefixCachePlane:
                     "prefix_restored", e.rid, now,
                     f"aw{target.aw_id}, {n} tokens"
                     + (f", session={e.session}" if e.session else ""))
+                if eng.telemetry is not None:
+                    eng.telemetry.registry.observe(
+                        "prefix.restored_len", n)
             else:
                 eng.cache = eng.layout.clear_slot(eng.cache, slot)
                 target.slots.release(slot)

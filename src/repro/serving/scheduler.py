@@ -45,6 +45,9 @@ class ServeMetrics:
     prefill: dict = field(default_factory=dict)  # scheduler PrefillStats
     slo_class: Dict[str, str] = field(default_factory=dict)  # rid -> class
     gateway: dict = field(default_factory=dict)  # GatewayStats snapshot
+    telemetry: object = None   # the engine's TelemetryPlane (None = off):
+    #                            streamed twins of the exact lists above,
+    #                            spans, and per-cause stall attribution
 
     def throughput(self) -> float:
         return len(self.token_log) / self.duration if self.duration else 0.0
@@ -117,6 +120,8 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     plane's per-tick token budget bounds that stall."""
     m = ServeMetrics()
     gw = engine.gateway
+    tel = engine.telemetry
+    m.telemetry = tel
     clock = 0.0
     pending = sorted(workload, key=lambda r: r.arrival)
     qi = 0
@@ -184,12 +189,22 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 break
             dt = max(dt, 1e-3)
         clock += dt
+        if tel is not None:
+            pf_done = engine.prefill_tokens_done() - pf0
+            tel.on_step(clock - dt, clock, pf_done,
+                        pf_done * (prefill_token_time or 0.0),
+                        sum(len(t) for t in out.values()))
         for rid, toks in out.items():
             # one TokenRecord per emitted token: a decode segment
             # (decode_segment_len>1) lands several per step, all stamped
             # at the segment's end time
             for _ in toks:
                 m.token_log.append(TokenRecord(clock, rid))
+            if tel is not None and toks:
+                # streamed twin of token_log: same stamps, same gap
+                # sequence (n tokens at one stamp = gap + n-1 zeros)
+                tel.observe_tokens(rid, clock, len(toks),
+                                   m.slo_class.get(rid, "standard"))
             if rid not in seen_first and toks:
                 seen_first.add(rid)
                 r = engine.requests.get(rid)
@@ -203,14 +218,24 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                     if len(r.tokens) == len(toks):
                         r.t_first_token = clock
                     m.ttft[rid] = r.ttft
+                    if tel is not None:
+                        tel.observe_ttft(rid, r.ttft,
+                                         m.slo_class.get(rid, "standard"),
+                                         r.t_enqueue)
         for r in list(engine.requests.values()):
             if r.done and r.rid not in m.finished:
                 m.finished.append(r.rid)
                 m.ttft[r.rid] = r.ttft
+                if tel is not None:
+                    tel.observe_ttft(r.rid, r.ttft,
+                                     m.slo_class.get(r.rid, "standard"),
+                                     r.t_enqueue)
                 m.outputs[r.rid] = list(r.tokens)
                 engine.release_request(r.rid)
         steps += 1
     m.duration = clock
+    if tel is not None:
+        tel.finalize(clock)
     m.queue_delay = dict(gw.stats.queue_delay)
     m.prefill = engine.prefill_snapshot()
     m.gateway = {"preemptions": gw.stats.preemptions,

@@ -108,6 +108,16 @@ class AttentionWorker:
     def has_capacity(self) -> bool:
         return self.alive and self.free_slots() > 0
 
+    def slot_occupancy(self) -> tuple:
+        """(slots in use, partition capacity) — cached-prefix slots count
+        as occupied (they hold retained KV) until evicted. Telemetry-plane
+        gauge feed; a dead worker reports full occupancy of nothing
+        usable."""
+        cap = self.slots.capacity
+        if not self.alive:
+            return (cap, cap)
+        return (cap - self.slots.free_count(), cap)
+
     def take_slot(self, prompt=None, now: float = 0.0):
         """Allocate a slot for an admission. With a prefix cache, a
         matching cached prefix is adopted by reference (returning its
