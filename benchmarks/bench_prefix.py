@@ -40,12 +40,12 @@ STEP = 0.02
 TOKEN_TIME = 0.002
 
 
-def _engine(prefix_slots, prefix_restore=True):
+def _engine(prefix_slots, prefix_restore=True, **kw):
     return reduced_engine(seed=0, max_batch=8, max_seq=96,
                           chunk_token_budget=16,
                           placement="session_affinity",
                           prefix_cache_slots=prefix_slots,
-                          prefix_restore=prefix_restore)
+                          prefix_restore=prefix_restore, **kw)
 
 
 def _workload(turns):
@@ -157,9 +157,147 @@ def _measure_recovery():
     return out
 
 
+def _drain(eng, hs):
+    hs = hs if isinstance(hs, list) else [hs]
+    steps = 0
+    while not all(h.done() for h in hs) and steps < 600:
+        eng.step()
+        for rid in [r.rid for r in eng.requests.values() if r.done]:
+            eng.release_request(rid)
+        steps += 1
+    for rid in [r.rid for r in eng.requests.values() if r.done]:
+        eng.release_request(rid)
+
+
+def _measure_paged():
+    """PR-8 tentpole: the paged KV plane.
+
+      * resident sessions — N sessions sharing a 32-token base prefix run
+        to completion on the SAME KV budget (max_batch x max_seq). The
+        contiguous cache retains at most prefix_cache_slots whole slots
+        per AW; the paged cache pins refcounted pages, shares the base
+        pages across entries, and keeps every session's own suffix
+        resident (>= 1.5x is the acceptance bar). Residency is counted
+        per session as "my own next turn would hit past the shared base".
+      * cross-AW hit rate — the saturated-home regime: the AW holding the
+        hot prefix has zero slot headroom when new sessions arrive. The
+        per-AW baseline cannot route to it (capacity-gated match scan)
+        and misses; the global index + migration replays the prefix onto
+        the free AW and keeps hitting.
+      * steps/s — decode throughput of the block-table attention path vs
+        the contiguous path, same workload (trace time excluded by a
+        warmup batch).
+    """
+    import time
+
+    from repro.serving.api import RequestSpec
+
+    rng = np.random.default_rng(7)
+    base = rng.integers(1, 500, size=(32,)).astype(np.int32)
+    n_sessions = 10
+    tails = [rng.integers(1, 500, size=(8,)).astype(np.int32)
+             for _ in range(n_sessions)]
+    prompts = [np.concatenate([base, t]) for t in tails]
+    out = {"sessions": n_sessions, "shared_base_tokens": int(len(base))}
+
+    # -- resident shared-prefix sessions at a fixed KV budget --------------
+    outputs, resident, pool_stats = {}, {}, {}
+    for label, kw in (("contiguous", {}),
+                      ("paged", dict(kv_page_tokens=16,
+                                     prefix_global_index=True))):
+        eng = _engine(3, **kw)
+        outputs[label] = {}
+        for i, p in enumerate(prompts):
+            h = eng.client.submit(RequestSpec(
+                rid=f"s{i}-0", prompt=p, max_new=2, session=f"s{i}"))
+            _drain(eng, h)
+            outputs[label][f"s{i}-0"] = list(h.tokens())
+        # a session is resident iff its own suffix (not just the shared
+        # base every entry carries) is still adoptable
+        res = 0
+        for i, p in enumerate(prompts):
+            nxt = np.concatenate(
+                [p, np.asarray(outputs[label][f"s{i}-0"], np.int32)])
+            best = max((w.prefix_cache.match_len(nxt) for w in eng.aws
+                        if w.prefix_cache is not None), default=0)
+            res += int(best >= len(p))
+        resident[label] = res
+        if eng.pages is not None:
+            eng.pages.check()
+            pool_stats = eng.pages.stats()
+    out["resident_sessions"] = {
+        "contiguous": resident["contiguous"], "paged": resident["paged"],
+        "ratio_x": resident["paged"] / max(resident["contiguous"], 1),
+        "paged_pool": pool_stats}
+    out["identity_mismatches"] = sum(
+        1 for rid, toks in outputs["contiguous"].items()
+        if outputs["paged"].get(rid) != toks)
+
+    # -- cross-AW hit rate under a saturated home --------------------------
+    cross = {}
+    n_arrivals = 4 if SMOKE else 6
+    for label, kw in (("per_aw", dict(kv_page_tokens=16)),
+                      ("global", dict(kv_page_tokens=16,
+                                      prefix_global_index=True,
+                                      prefix_migrate=True))):
+        eng = _engine(3, **kw)
+        h = eng.client.submit(RequestSpec(rid="seed-0", prompt=prompts[0],
+                                          max_new=2, session="seed"))
+        _drain(eng, h)
+        # the AW holding the hot prefix loses all slot headroom (long
+        # residents in a real cluster; pinned directly here)
+        if eng.prefix_plane.global_index is not None:
+            home = eng.prefix_plane.global_index.match(prompts[1])[1]
+        else:
+            home = max(range(len(eng.aws)),
+                       key=lambda a: eng.aws[a].prefix_cache.match_len(
+                           prompts[1]))
+        held = [eng.aws[home].slots.alloc()
+                for _ in range(eng.aws[home].slots.free_count())]
+        base_hits = eng.gateway.stats.prefix_hits
+        for i in range(1, 1 + n_arrivals):
+            h = eng.client.submit(RequestSpec(
+                rid=f"g{i}-0", prompt=prompts[i], max_new=2,
+                session=f"g{i}"))
+            _drain(eng, h)
+        for s in held:
+            eng.aws[home].slots.release(s)
+        st = eng.gateway.stats
+        cross[label] = {
+            "arrivals": n_arrivals,
+            "hit_rate": (st.prefix_hits - base_hits) / n_arrivals,
+            "global_hits": st.prefix_global_hits,
+            "migrated": st.prefix_migrated}
+        if eng.pages is not None:
+            eng.pages.check()
+    out["cross_aw"] = cross
+
+    # -- decode throughput: block-table kernel path vs contiguous ----------
+    perf = {}
+    max_new = 6 if SMOKE else 16
+    for label, kw in (("contiguous", {}),
+                      ("paged", dict(kv_page_tokens=16))):
+        eng = _engine(0, **kw)
+        for rnd in ("warmup", "timed"):
+            hs = [eng.client.submit(RequestSpec(
+                rid=f"{rnd}{i}-0",
+                prompt=rng.integers(1, 500, size=(12,)).astype(np.int32),
+                max_new=max_new, session=f"{rnd}{i}"))
+                for i in range(4)]
+            t0, s0 = time.monotonic(), eng.steps
+            _drain(eng, hs)
+            if rnd == "timed":
+                perf[label] = (eng.steps - s0) / max(
+                    time.monotonic() - t0, 1e-9)
+    out["decode_steps_per_s"] = {
+        "contiguous": perf["contiguous"], "paged": perf["paged"],
+        "paged_vs_contiguous_x": perf["paged"] / perf["contiguous"]}
+    return out
+
+
 def run():
     payload = {"bench": "prefix", "multi_turn_chat": None,
-               "recovery": None}
+               "recovery": None, "paged": None}
     s = _measure_cold_vs_warm()
     payload["multi_turn_chat"] = s
     rows = [Row(
@@ -178,6 +316,20 @@ def run():
         f"{r['recovery_cold']['post_failure_ttft_p50_s']*1e3:.0f}ms "
         f"restored={r['restored_prefixes']} "
         f"hit_tokens_delta={r['hit_tokens_delta']}"))
+    p = _measure_paged()
+    payload["paged"] = p
+    rows.append(Row(
+        "prefix/paged/resident_sessions/ratio",
+        p["resident_sessions"]["ratio_x"] * 1e6,
+        f"paged={p['resident_sessions']['paged']}/{p['sessions']} "
+        f"contig={p['resident_sessions']['contiguous']}/{p['sessions']} "
+        f"cross_aw_hit_rate="
+        f"{p['cross_aw']['global']['hit_rate']:.2f}"
+        f"(per_aw {p['cross_aw']['per_aw']['hit_rate']:.2f}) "
+        f"migrated={p['cross_aw']['global']['migrated']} "
+        f"steps_ratio="
+        f"{p['decode_steps_per_s']['paged_vs_contiguous_x']:.2f}x "
+        f"mismatches={p['identity_mismatches']}"))
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     with open(RESULTS_PATH, "w") as f:
         json.dump(payload, f, indent=2)

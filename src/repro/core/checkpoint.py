@@ -219,6 +219,24 @@ class KVCheckpointer:
                                   [leaf[i] for leaf in seg_stack],
                                   token_value=int(tv))
 
+    def checkpoint_blocks(self, request_id: str, start: int,
+                          seg_stack: List[np.ndarray],
+                          token_values: List[int], page_tokens: int):
+        """Block-granular variant for paged AWs: split the token run at
+        physical page boundaries, so each ``checkpoint_range`` batch
+        covers at most one KV page and a page's worth of WRs commits (or
+        dies with the worker) together. The store's segments remain
+        token-granular and layout-independent — paged checkpoints restore
+        onto contiguous engines and vice versa."""
+        n = len(token_values)
+        t = 0
+        while t < n:
+            take = min(n - t, page_tokens - ((start + t) % page_tokens))
+            self.checkpoint_range(request_id, start + t,
+                                  [leaf[t:t + take] for leaf in seg_stack],
+                                  token_values[t:t + take])
+            t += take
+
     def drop_pending(self) -> int:
         """Crash path: WRs not yet handed to the store die with the AW.
         Returns the number of segments lost (they stay uncommitted, so

@@ -187,6 +187,131 @@ def _decode_attn_fused_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref,
         o_ref[0, 0] = acc_f / jnp.maximum(l_f[:, None], 1e-30)
 
 
+# --------------------------------------------------------------------------
+# paged variant: kv blocks gathered through a block table, one call
+# --------------------------------------------------------------------------
+
+def _decode_attn_paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
+                              cpos_ref, k1_ref, v1_ref, o_ref,
+                              m_ref, l_ref, acc_ref,
+                              *, softcap: float, nk: int):
+    """Fused decode-attention block loop over a PAGED cache: the kv-block
+    grid axis walks the slot's block table (scalar-prefetched ``bt_ref``),
+    and each block's index map resolves the physical page, so the pages
+    stream HBM->VMEM in logical order without materializing a gathered
+    copy. Unmapped blocks resolve to the null page whose positions are all
+    -1 — they mask to an exact no-op, identical to an empty contiguous
+    region. Math and accumulation order match ``_decode_attn_fused_kernel``
+    with block_k == page_tokens, so the paged and contiguous kernels are
+    bit-identical on identical logical content."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, Dh] (pre-scaled)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [pt, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [pt, Dh]
+    cpos = cpos_ref[0]                           # [pt] int32
+    pos = pos_ref[0]                             # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, pt]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (cpos >= 0) & (cpos <= pos)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        k1 = k1_ref[0, 0].astype(jnp.float32)    # [Dh]
+        v1 = v1_ref[0, 0].astype(jnp.float32)    # [Dh]
+        s_self = jax.lax.dot_general(
+            q, k1, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)  # [G]
+        if softcap:
+            s_self = jnp.tanh(s_self / softcap) * softcap
+        m_f = jnp.maximum(m_ref[...], s_self)
+        corr_f = jnp.exp(m_ref[...] - m_f)
+        p_self = jnp.exp(s_self - m_f)
+        l_f = l_ref[...] * corr_f + p_self
+        acc_f = acc_ref[...] * corr_f[:, None] + p_self[:, None] * v1[None]
+        o_ref[0, 0] = acc_f / jnp.maximum(l_f[:, None], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention_paged(q, pk, pv, ppos, bt, k1, v1, pos, *,
+                           softcap: float = 0.0, interpret: bool = False):
+    """Fused GQA decode attention over a paged KV cache.
+
+    q: [B,H,Dh] (unscaled); pk/pv: [P,pt,Hkv,Dh] physical page pools;
+    ppos: [P,pt] stored positions (-1 = empty); bt: [B,nblk] int32 block
+    table (0 = the reserved null page); k1/v1: [B,Hkv,Dh]; pos: [B].
+    Full attention only (paged mode has no sliding-window layers).
+    Returns [B,H,Dh] in q's dtype.
+    """
+    b, h, dh = q.shape
+    pt, hkv = pk.shape[1], pk.shape[2]
+    nk = bt.shape[1]
+    g = h // hkv
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qs = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+
+    kernel = functools.partial(_decode_attn_paged_kernel, softcap=softcap,
+                               nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki, bt_ref: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bi, hi, ki, bt_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, pt, 1, dh),
+                         lambda bi, hi, ki, bt_ref:
+                         (bt_ref[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, pt, 1, dh),
+                         lambda bi, hi, ki, bt_ref:
+                         (bt_ref[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, pt),
+                         lambda bi, hi, ki, bt_ref: (bt_ref[bi, ki], 0)),
+            pl.BlockSpec((1, 1, dh),
+                         lambda bi, hi, ki, bt_ref: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, dh),
+                         lambda bi, hi, ki, bt_ref: (bi, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, hi, ki, bt_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),        # running max m
+            pltpu.VMEM((g,), jnp.float32),        # running denom l
+            pltpu.VMEM((g, dh), jnp.float32),     # running numerator acc
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), pos.astype(jnp.int32), qs, pk, pv, ppos, k1, v1)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
                                              "interpret"))
 def decode_attention_fused(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,

@@ -80,6 +80,36 @@ def decode_attention(q, ck, cv, cpos, k1, v1, pos, *, window: int = 0,
     return combine_decode_partials(q, m, l, acc, k1, v1, softcap=softcap)
 
 
+def decode_attention_paged(q, pk, pv, ppos, bt, k1, v1, pos, *,
+                           softcap: float = 0.0):
+    """Single-token GQA decode attention over a PAGED cache + current token.
+
+    q: [B,H,Dh]; pk/pv: [P,pt,Hkv,Dh] page pools; ppos: [P,pt];
+    bt: [B,nblk] block table (page 0 = reserved null page, pos all -1);
+    k1/v1: [B,Hkv,Dh]; pos: [B]. Returns [B,H,Dh]. Full attention only.
+
+    On TPU the Pallas kernel walks the block table inside the pallas_call
+    (the kv-block grid axis indexes physical pages); elsewhere the pages
+    are gathered into the contiguous view and the exact same reference
+    partial+combine runs, so paged and contiguous engines produce
+    bit-identical floats on every backend.
+    """
+    if use_pallas():
+        from repro.kernels.decode_attention import (
+            decode_attention_paged as paged_kernel)
+        return paged_kernel(q, pk, pv, ppos, bt, k1, v1, pos,
+                            softcap=softcap, interpret=_interpret())
+    b, nblk = bt.shape
+    pt = pk.shape[1]
+    flat = bt.reshape(-1)
+    ck = pk[flat].reshape(b, nblk * pt, *pk.shape[2:])
+    cv = pv[flat].reshape(b, nblk * pt, *pv.shape[2:])
+    cpos = ppos[flat].reshape(b, nblk * pt)
+    m, l, acc = kref.decode_attention_partial_ref(
+        q, ck, cv, cpos, pos, window=0, softcap=softcap)
+    return combine_decode_partials(q, m, l, acc, k1, v1, softcap=softcap)
+
+
 def full_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
                    window: int = 0, softcap: float = 0.0,
                    block_k: int = 0):

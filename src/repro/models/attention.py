@@ -226,6 +226,77 @@ def cache_write_token(cache, k1, v1, pos, window: int = 0):
 
 
 # --------------------------------------------------------------------------
+# paged cache (block tables over a physical page pool)
+# --------------------------------------------------------------------------
+#
+# Paged layer cache: {"k": [P, pt, Hkv, Dh], "v": [P, pt, Hkv, Dh],
+# "pos": [P, pt] int32} — P physical pages of pt tokens each — plus one
+# block table ``bt`` [B, nblk] int32 shared by all layers mapping logical
+# block j of slot b to a physical page. Page 0 is reserved as the null
+# page: never allocated, its ``pos`` stays -1 forever, and every unmapped
+# block-table entry points at it, so gathers always read a valid page and
+# unmapped regions are masked exactly like an empty contiguous cache.
+# With nblk * pt == Sc the gathered view reproduces the contiguous layout
+# element-for-element, which is what makes the paged engine bit-identical.
+
+
+def paged_view(cache, bt):
+    """Gather the contiguous [B, nblk*pt, ...] view of a paged layer cache
+    through the block table. Stale K/V under pos==-1 entries (recycled or
+    null pages) is harmless: masked scores are the constant NEG_INF before
+    any value is read, same as a zeroed contiguous cache."""
+    b, nblk = bt.shape
+    pt = cache["k"].shape[1]
+    flat = bt.reshape(-1)
+    k = cache["k"][flat].reshape(b, nblk * pt, *cache["k"].shape[2:])
+    v = cache["v"][flat].reshape(b, nblk * pt, *cache["v"].shape[2:])
+    pos = cache["pos"][flat].reshape(b, nblk * pt)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def paged_write_chunk(cache, bt, k, v, positions):
+    """Paged twin of cache_write_chunk: scatter chunk K/V [B,C,...] at
+    absolute ``positions`` [B,C] into physical pages via the block table.
+    Invalid entries (-1 padding) and entries whose block is unmapped
+    (page 0 — only possible if the host failed to pre-allocate) scatter
+    out of bounds and are dropped."""
+    p, pt = cache["k"].shape[0], cache["k"].shape[1]
+    nblk = bt.shape[1]
+    valid = positions >= 0
+    spos = positions % (nblk * pt)
+    blk = jnp.where(valid, spos // pt, 0)
+    page = jnp.take_along_axis(bt, blk, axis=1)
+    page = jnp.where(valid & (page > 0), page, p)
+    off = spos % pt
+    ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype),
+                                      mode="drop")
+    cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype),
+                                      mode="drop")
+    cp = cache["pos"].at[page, off].set(positions.astype(jnp.int32),
+                                        mode="drop")
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+def paged_write_token(cache, bt, k1, v1, pos):
+    """Paged twin of cache_write_token (full-attention layers only): write
+    one token's K/V [B,1,...] at absolute position pos [B] through the
+    block table. Rows with pos < 0 drop, mirroring the contiguous path."""
+    p, pt = cache["k"].shape[0], cache["k"].shape[1]
+    s = bt.shape[1] * pt
+    spos = jnp.minimum(jnp.maximum(pos, 0), s - 1)
+    blk = spos // pt
+    page = bt[jnp.arange(bt.shape[0]), blk]
+    page = jnp.where((pos >= 0) & (page > 0), page, p)
+    off = spos % pt
+    ck = cache["k"].at[page, off].set(k1[:, 0].astype(cache["k"].dtype),
+                                      mode="drop")
+    cv = cache["v"].at[page, off].set(v1[:, 0].astype(cache["v"].dtype),
+                                      mode="drop")
+    cp = cache["pos"].at[page, off].set(pos.astype(jnp.int32), mode="drop")
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+# --------------------------------------------------------------------------
 # layer-level apply
 # --------------------------------------------------------------------------
 
@@ -271,6 +342,46 @@ def attn_chunk(cfg: ModelConfig, params, x, cache, positions, *,
         window=window, softcap=cfg.attn_softcap, causal=True,
         block_k=_pick_block(new_cache["k"].shape[1], PREFILL_BLOCK_K))
     out = out.reshape(*x.shape[:2], -1) @ params["wo"]
+    return out, new_cache
+
+
+def attn_chunk_paged(cfg: ModelConfig, params, x, cache, bt, positions):
+    """Chunked-prefill over a paged layer cache: write the chunk's K/V
+    through the block table, then attend over the gathered contiguous
+    view. Same pinned KV block size as attn_chunk, so the accumulation
+    order — and the float result — matches the contiguous engine exactly.
+    Paged mode is full-attention only (window == 0)."""
+    q = _project_q(cfg, params, x)
+    k, v = _project_kv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = paged_write_chunk(cache, bt, k, v, positions)
+    view = paged_view(new_cache, bt)
+    from repro.kernels import ops as kops
+    out = kops.full_attention(
+        q, view["k"], view["v"], positions, view["pos"],
+        window=0, softcap=cfg.attn_softcap, causal=True,
+        block_k=_pick_block(view["k"].shape[1], PREFILL_BLOCK_K))
+    out = out.reshape(*x.shape[:2], -1) @ params["wo"]
+    return out, new_cache
+
+
+def attn_decode_paged(cfg: ModelConfig, params, x, cache, bt, pos):
+    """Single-token decode over a paged layer cache. The attention itself
+    gathers K/V pages through the block table (Pallas kernel on TPU, a
+    gather + the contiguous reference path elsewhere), then the new
+    token's K/V is written through the table."""
+    b = x.shape[0]
+    q = _project_q(cfg, params, x)
+    k1, v1 = _project_kv(cfg, params, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k1 = apply_rope(k1, pos[:, None], cfg.rope_theta)
+    from repro.kernels import ops as kops
+    out = kops.decode_attention_paged(
+        q[:, 0], cache["k"], cache["v"], cache["pos"], bt,
+        k1[:, 0], v1[:, 0], pos, softcap=cfg.attn_softcap)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = paged_write_token(cache, bt, k1, v1, pos)
     return out, new_cache
 
 

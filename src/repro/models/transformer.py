@@ -97,12 +97,21 @@ def _layer_init(key, cfg: ModelConfig, use_moe: bool, placement):
 
 def _layer_apply(cfg: ModelConfig, p, x, *, window: int, mode: str,
                  positions=None, pos=None, cache=None, route_state=None,
-                 placement=None, capacity=None, token_mask=None):
-    """mode: 'train' | 'prefill' | 'chunk' | 'decode'."""
+                 placement=None, capacity=None, token_mask=None, bt=None):
+    """mode: 'train' | 'prefill' | 'chunk' | 'decode'. ``bt`` is the
+    [B, nblk] block table of a paged cache (None = contiguous layout);
+    when set, ``cache`` holds physical page pools instead of per-slot
+    rows and the paged attention twins are used."""
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
-    if mode == "decode":
+    if mode == "decode" and bt is not None:
+        a, new_cache = attn.attn_decode_paged(cfg, p["attn"], h, cache, bt,
+                                              pos)
+    elif mode == "decode":
         a, new_cache = attn.attn_decode(cfg, p["attn"], h, cache, pos,
                                         window=window)
+    elif mode == "chunk" and bt is not None:
+        a, new_cache = attn.attn_chunk_paged(cfg, p["attn"], h, cache, bt,
+                                             positions)
     elif mode == "chunk":
         a, new_cache = attn.attn_chunk(cfg, p["attn"], h, cache, positions,
                                        window=window)
@@ -187,13 +196,18 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
         aux_total = jnp.zeros((), jnp.float32)
         load_total = jnp.zeros((n_slots,), jnp.float32)
         new_caches = {} if caches is not None else None
+        # paged engines carry one block table at the top of the cache dict;
+        # it is threaded to every attention layer and returned unchanged.
+        # The branch is python-level: an engine is paged or contiguous for
+        # life, so each jitted entry point still traces exactly once.
+        bt = caches.get("bt") if caches is not None else None
         for i in range(n_first):
             c = caches[f"dense{i}"] if caches is not None else None
             x, nc, aux, load = _layer_apply(
                 cfg, params[f"dense{i}"], x, window=windows[0], mode=mode,
                 positions=positions, pos=pos, cache=c,
                 route_state=route_state, placement=placement,
-                capacity=capacity, token_mask=token_mask)
+                capacity=capacity, token_mask=token_mask, bt=bt)
             aux_total += aux
             load_total += load
             if caches is not None:
@@ -209,7 +223,7 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                     cfg, unit_params[i], h, window=windows[i], mode=mode,
                     positions=positions, pos=pos, cache=c,
                     route_state=route_state, placement=placement,
-                    capacity=capacity, token_mask=token_mask)
+                    capacity=capacity, token_mask=token_mask, bt=bt)
                 auxc += aux
                 loadc += load
                 ncs.append(nc)
@@ -226,6 +240,8 @@ def build_decoder(cfg: ModelConfig, *, num_aw: int = 1, num_ew: int = 1,
                 unit_body, (x, aux_total, load_total),
                 (params["blocks"], caches["blocks"]))
             new_caches["blocks"] = nb
+            if bt is not None:
+                new_caches["bt"] = bt
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return x, new_caches, aux_total, load_total
 

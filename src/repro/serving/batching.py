@@ -210,6 +210,10 @@ class ContinuousBatchScheduler:
             state = eng.layout.request_state(req_cache, i)
             if padded and pre_lens[i] < length:
                 state = eng.layout.scrub_request_state(state, pre_lens[i])
+            # paged engines map pages covering the prefilled prefix before
+            # the scatter (writes beyond the mapped blocks are scrubbed
+            # padding and drop harmlessly)
+            eng._kv_ensure(slot, pre_lens[i])
             eng.cache = eng.layout.write_request_state(eng.cache, slot, state)
             first = int(firsts[i]) if not padded else None
             self._install_fresh(q, aw, slot, now, padded=padded, first=first,
@@ -270,7 +274,12 @@ class ContinuousBatchScheduler:
             eng.aws[aw].slots.release(slot)
             return
         committed, tok_val, segs = eng.store.restore_request(q.rid)
-        cache = eng.layout.clear_slot(eng.cache, slot)
+        eng._kv_clear_slot(slot)
+        if segs:
+            # paged: map pages covering the restored prefix first — the
+            # committed segments then scatter through the block table
+            eng._kv_ensure(slot, max(segs) + 1)
+        cache = eng.cache
         for t, seg in segs.items():
             cache = eng.layout.write_token_segment(cache, slot, t, seg)
         eng.cache = cache
@@ -345,6 +354,8 @@ class ContinuousBatchScheduler:
         for r in act:
             tokens[r.slot] = r.next_input
             pos[r.slot] = r.pos
+            # paged: the step writes KV at r.pos — its page must be mapped
+            eng._kv_ensure(r.slot, r.pos + 1)
         pos_dev = jnp.asarray(pos)
         if eng.collect_load:
             logits, eng.cache, load = eng._decode(

@@ -133,9 +133,12 @@ class ChunkedPrefillPlane:
         n = len(q.prompt)
         hit = min(getattr(q, "prefix_hit", 0), n - 1)
         if hit > 0:
-            eng.cache = eng.layout.scrub_slot(eng.cache, slot, hit)
+            # adoption already holds the prefix (by slot reference on a
+            # contiguous engine, by shared pages on a paged one): mask the
+            # stale tail, keep [0, hit)
+            eng._kv_scrub_slot(slot, hit)
         else:
-            eng.cache = eng.layout.clear_slot(eng.cache, slot)
+            eng._kv_clear_slot(slot)
         r = eng.make_request_state(q, slot)
         r._aw = aw
         r.t_admit = now
@@ -249,6 +252,10 @@ class ChunkedPrefillPlane:
             toks[job.slot, :take] = job.prompt[c:c + take]
             pos[job.slot, :take] = np.arange(c, c + take, dtype=np.int32)
             real += take
+            # paged: map pages covering the chunk's write range before the
+            # dispatch (page allocation is host bookkeeping + one tiny
+            # block-table upload — the jitted chunk call is untouched)
+            eng._kv_ensure(job.slot, c + take)
 
         # prefill runs on the request's own (healthy) AW: other AWs'
         # health must not mask its tokens; EW health still applies
@@ -301,8 +308,8 @@ class ChunkedPrefillPlane:
                      for a in self._extract_range(eng.cache, job.slot, base,
                                                   count=shape)]
         token_values = job.prompt[start + 1:start + take + 1]
-        eng.aws[job.aw].checkpointer.checkpoint_range(
-            job.rid, start, seg_stack, list(token_values))
+        eng._ck_range(eng.aws[job.aw].checkpointer,
+                      job.rid, start, seg_stack, list(token_values))
 
     def _finalize(self, r):
         """Prefill complete: hand the request to the decode plane. Like

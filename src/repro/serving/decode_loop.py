@@ -231,6 +231,11 @@ class DecodeLoopPlane:
             pos[r.slot] = r.pos
             emitted[r.slot] = len(r.tokens)
             max_new[r.slot] = r.max_new
+            # paged: the whole segment's KV writes land inside the scan —
+            # pre-map every page the row can touch (positions up to
+            # max_seq - 2; page allocation cannot happen mid-scan)
+            eng._kv_ensure(r.slot, min(r.pos + seg_len,
+                                       eng.ecfg.max_seq - 1))
         g, t, k, s = self.device_arrays()
         cache, ring, loads = self._seg(
             eng.params, eng.route_state, eng.cache,

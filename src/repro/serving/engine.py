@@ -48,7 +48,7 @@ from repro.serving.batching import ContinuousBatchScheduler
 from repro.serving.chunked import ChunkedPrefillPlane
 from repro.serving.decode_loop import DecodeLoopPlane
 from repro.serving.gateway import Gateway, QueuedRequest
-from repro.serving.kvcache import CacheLayout
+from repro.serving.kvcache import CacheLayout, PagedCacheLayout, PagePool
 from repro.serving.prefixcache import PrefixCachePlane
 from repro.serving.telemetry import EventBus, TelemetryPlane
 from repro.serving.workers import (AttentionWorker, ClusterSlotView,
@@ -111,6 +111,30 @@ class EngineConfig:
     prefix_restore: bool = True          # restore a dead AW's cached
     #                                      prefixes from the checkpoint
     #                                      store onto healthy AWs
+    # ---- paged KV plane (serving/kvcache.py) -----------------------------
+    kv_page_tokens: int = 0              # physical KV page extent in tokens
+    #                                      (0 = contiguous per-slot cache;
+    #                                      >0 needs a pure full-attention
+    #                                      cache family and must divide
+    #                                      max_seq). Paged slots map pages
+    #                                      through a block table; shared
+    #                                      prefixes reference the SAME
+    #                                      physical pages (refcounted,
+    #                                      copy-on-extend at the boundary)
+    kv_pages: int = 0                    # per-AW physical page budget
+    #                                      (0 = parity with the contiguous
+    #                                      footprint: slots_per_aw * nblk;
+    #                                      smaller budgets trade capacity
+    #                                      against prefix-sharing wins)
+    prefix_global_index: bool = False    # lift the per-AW radix indexes to
+    #                                      one gateway-level index routing
+    #                                      any arrival to its best-match AW
+    #                                      cluster-wide (paged mode only)
+    prefix_migrate: bool = False         # when the best-match AW cannot
+    #                                      take the hit (full or dead),
+    #                                      replay the hot prefix onto a
+    #                                      healthy AW through the existing
+    #                                      checkpoint-store bulk path
     # ---- telemetry plane (serving/telemetry.py) --------------------------
     telemetry: bool = True               # metrics registry + span tracing
     #                                      + stall attribution (host-side
@@ -196,8 +220,36 @@ class InferenceEngine:
                              tarragon=ecfg.tarragon)
         self.params = self.api.init_params(key)
         self.route_state: RouteState = self.api.init_route_state()
-        self.cache = self.api.init_cache(ecfg.max_batch, ecfg.max_seq)
-        self.layout = CacheLayout(self.api.init_cache)
+        # ---- KV plane: contiguous per-slot cache, or paged block tables ---
+        # Paged mode (kv_page_tokens > 0) swaps the layout, not the model:
+        # the per-layer pools are the ordinary contiguous cache built with
+        # batch=num_pages, max_seq=page_tokens, plus one [B, nblk] block
+        # table the transformer stack keys its paged attention variants on.
+        # The engine is paged or contiguous for life — one trace set either
+        # way, and the decision never leaks into jit keys.
+        assert ecfg.max_batch % ecfg.num_aw == 0
+        self.pages: Optional[PagePool] = None
+        if ecfg.kv_page_tokens > 0:
+            pt = ecfg.kv_page_tokens
+            assert ecfg.max_seq % pt == 0, (
+                f"kv_page_tokens={pt} must divide max_seq={ecfg.max_seq}")
+            assert not getattr(cfg, "sliding_window", 0), (
+                "paged KV requires all-global attention (the block-table "
+                "gather has no ring-buffer wrap); set sliding_window=0")
+            self.layout = PagedCacheLayout(self.api.init_cache, pt,
+                                           ecfg.max_seq)
+            self.pages = PagePool(ecfg.max_batch, ecfg.num_aw,
+                                  self.layout.nblk, pt,
+                                  pages_per_aw=ecfg.kv_pages)
+            self.cache = self.layout.make_cache(
+                self.api.init_cache, ecfg.max_batch, self.pages.num_pages)
+        else:
+            self.cache = self.api.init_cache(ecfg.max_batch, ecfg.max_seq)
+            self.layout = CacheLayout(self.api.init_cache)
+        assert self.pages is not None or not (
+            ecfg.prefix_global_index or ecfg.prefix_migrate), (
+            "prefix_global_index / prefix_migrate require the paged KV "
+            "plane (kv_page_tokens > 0)")
         self.store = CheckpointStore()
 
         # ---- worker pool: per-worker failure domains ----------------------
@@ -207,6 +259,9 @@ class InferenceEngine:
                                     self.store,
                                     reorder_window=ecfg.checkpoint_reorder)
                     for a in range(ecfg.num_aw)]
+        if self.pages is not None:
+            for w in self.aws:
+                w.page_pool = self.pages
         max_ew = max(ecfg.max_ew or ecfg.num_ew, ecfg.num_ew)
         self.ews = [ExpertWorker(e, member=e < ecfg.num_ew)
                     for e in range(max_ew)]
@@ -275,13 +330,9 @@ class InferenceEngine:
 
         # padded prefill is only sound for pure full-attention caches:
         # recurrent-state leaves or ring buffers must never see pad tokens
-        leaves = jax.tree_util.tree_leaves(self.cache)
-        self.prefill_paddable = all(
-            k.startswith("attn_") for k in self.layout.leaf_kind) and all(
-            leaf.shape[ax + 1] >= ecfg.max_seq
-            for leaf, ax, k in zip(leaves, self.layout.batch_axis,
-                                   self.layout.leaf_kind)
-            if k == "attn_k")
+        # (a layout question, so each layout answers it for its own cache)
+        self.prefill_paddable = self.layout.prefill_paddable(
+            self.cache, ecfg.max_seq)
 
         # ---- chunked-prefill plane (serving/chunked.py) -------------------
         # chunked streams need slot == absolute position, i.e. the padded
@@ -321,6 +372,10 @@ class InferenceEngine:
             self.prefix_plane = PrefixCachePlane(
                 self, ecfg.prefix_cache_slots, ecfg.prefix_cache_tokens,
                 min_match=ecfg.prefix_min_match)
+        assert self.prefix_plane is not None or not (
+            ecfg.prefix_global_index or ecfg.prefix_migrate), (
+            "prefix_global_index/prefix_migrate require the prefix-cache "
+            "plane (prefix_cache_slots > 0)")
         assert ecfg.victim_policy in ("remaining_work", "youngest"), (
             f"unknown victim_policy {ecfg.victim_policy!r}")
 
@@ -593,7 +648,7 @@ class InferenceEngine:
             # slot is about to be cleared (the victim's own log carries
             # everything it needs to resume)
             self.prefix_plane.forget_slot(r._aw, r.slot)
-        self.cache = self.layout.clear_slot(self.cache, r.slot)
+        self._kv_clear_slot(r.slot)
         aw.slots.release(r.slot)
         r.paused = True
         r.queued_for_recovery = True
@@ -669,9 +724,9 @@ class InferenceEngine:
             seg_stack = [np.asarray(a)[t - base:t - base + count]
                          for a in self._extract_range(
                              self.cache, r.slot, base, count=shape)]
-            ck.checkpoint_range(r.rid, t, seg_stack,
-                                [self._ck_token_value(r, i)
-                                 for i in range(t, t + count)])
+            self._ck_range(ck, r.rid, t, seg_stack,
+                           [self._ck_token_value(r, i)
+                            for i in range(t, t + count)])
             t += count
 
     @staticmethod
@@ -726,10 +781,152 @@ class InferenceEngine:
             for i, (r, start, cnt) in enumerate(ent):
                 off = start - bases[i]
                 seg_stack = [a[i][off:off + cnt] for a in stacked]
-                self.aws[r._aw].checkpointer.checkpoint_range(
-                    r.rid, start, seg_stack,
-                    [self._ck_token_value(r, t)
-                     for t in range(start, start + cnt)])
+                self._ck_range(self.aws[r._aw].checkpointer,
+                               r.rid, start, seg_stack,
+                               [self._ck_token_value(r, t)
+                                for t in range(start, start + cnt)])
+
+    def _ck_range(self, ck, rid: str, start: int, seg_stack, token_values):
+        """Bulk-range checkpointing, block-granular on a paged engine: WR
+        batches split at physical page boundaries (checkpoint_blocks), so
+        a page's worth of KV commits or dies together. The store's
+        segments stay token-granular and layout-independent either way —
+        a paged AW's checkpoints restore onto a contiguous engine and
+        vice versa."""
+        if self.pages is not None:
+            ck.checkpoint_blocks(rid, start, seg_stack, token_values,
+                                 self.pages.page_tokens)
+        else:
+            ck.checkpoint_range(rid, start, seg_stack, token_values)
+
+    # ------------------------------------------------------------------
+    # paged-KV facades: every clear / scrub / extend of a slot's resident
+    # KV routes through here so contiguous and paged engines share call
+    # sites (chunked planner, batching, recovery, preemption, release).
+    # On a contiguous engine each facade is a pass-through to the layout;
+    # on a paged engine it also runs the host allocator (refcounts, per-AW
+    # free lists) and keeps the device block table in sync. All device
+    # work goes through jitted-once helpers — zero new traces at runtime.
+    # ------------------------------------------------------------------
+    def _kv_sync_bt(self):
+        """Upload the host block-table mirror when it drifted (a [B,nblk]
+        int32 copy — the only per-allocation device traffic)."""
+        if self.pages is not None and self.pages.dirty:
+            self.cache = self.layout.set_block_table(self.cache,
+                                                     self.pages.bt)
+            self.pages.dirty = False
+
+    def _kv_free_pages(self, pids):
+        """Scrub freed pages' positions on device before they can
+        recycle: a stale ``pos >= 0`` entry would leak the old mapper's
+        KV into the next mapper's attention."""
+        if pids:
+            self.cache = self.layout.scrub_pages(self.cache, pids)
+
+    def _kv_reclaim(self, aw: int):
+        """Page pressure: evict cached prefixes on ``aw`` (tail pages
+        first, exclusive pages only ever free — a page with refcount > 1
+        survives its holder) until a page frees or nothing is evictable."""
+        pc = self.aws[aw].prefix_cache
+        evict = getattr(pc, "evict_pages", None)
+        while self.pages.free_pages(aw) == 0 and evict is not None:
+            freed = evict()
+            if not freed:
+                break
+            self._kv_free_pages(freed)
+
+    def _kv_ensure(self, slot: int, upto: int):
+        """Pre-allocate pages so positions [0, upto) of ``slot`` are
+        mapped before a prefill chunk / decode segment writes them.
+        No-op on a contiguous engine (the slot owns its whole extent)."""
+        if self.pages is None or upto <= 0:
+            return
+        pool = self.pages
+        need = -(-min(upto, self.ecfg.max_seq) // pool.page_tokens)
+        aw = pool.aw_of_slot(slot)
+        for blk in range(need):
+            if pool.bt[slot, blk] > 0:
+                continue
+            pid = pool.alloc(aw)
+            if pid < 0:
+                self._kv_reclaim(aw)
+                pid = pool.alloc(aw)
+            if pid < 0:
+                raise RuntimeError(
+                    f"AW{aw} out of KV pages: slot {slot} needs block "
+                    f"{blk} ({need} total) and nothing is evictable")
+            pool.map_block(slot, blk, pid)
+        self._kv_sync_bt()
+
+    def _kv_clear_slot(self, slot: int):
+        """Release a slot's resident KV. Contiguous: scrub the slot's
+        rows. Paged: unmap the block-table row and decref its pages —
+        pages shared with a cached prefix entry (or another adopter)
+        survive; exclusive pages scrub and return to the AW's free
+        list."""
+        if self.pages is None:
+            self.cache = self.layout.clear_slot(self.cache, slot)
+            return
+        self._kv_free_pages(self.pages.release_slot(slot))
+        self.cache = self.layout.clear_slot(self.cache, slot)
+        self._kv_sync_bt()
+
+    def _kv_scrub_slot(self, slot: int, valid_len: int):
+        """Mask positions >= valid_len in the slot (prefix adoption keeps
+        [0, valid_len) live). Paged writes to shared pages are value-
+        identical by construction — a fully-shared page only holds
+        positions below the hit."""
+        self.cache = self.layout.scrub_slot(self.cache, slot, valid_len)
+
+    def _kv_adopt(self, slot: int, pages, hit: int) -> int:
+        """Map a cached prefix entry's pages into ``slot`` (copy-on-
+        extend): pages fully below the hit are SHARED — the same physical
+        page, refcount bumped, zero KV copied — and the boundary page
+        (the one the adopter will extend past the hit) is duplicated into
+        a private page. Returns the usable hit length: when no page is
+        free for the boundary copy it degrades to the last full-page
+        boundary rather than failing the adoption."""
+        pool = self.pages
+        pt = pool.page_tokens
+        full = min(hit // pt, len(pages))
+        aw = pool.aw_of_slot(slot)
+        for b in range(full):
+            pool.incref(pages[b])
+            pool.map_block(slot, b, pages[b])
+        rem = hit - full * pt
+        if rem > 0 and full < len(pages):
+            # pin the boundary source first: reclaim may trim the very
+            # entry being adopted, and an unpinned boundary page could be
+            # freed (and scrubbed) before the copy reads it
+            src = int(pages[full])
+            pool.incref(src)
+            pid = pool.alloc(aw)
+            if pid < 0:
+                self._kv_reclaim(aw)
+                pid = pool.alloc(aw)
+            if pid < 0:
+                hit = full * pt          # degrade: share whole pages only
+            else:
+                self.cache = self.layout.copy_page(self.cache, src, pid)
+                pool.map_block(slot, full, pid)
+            if pool.decref(src):
+                self._kv_free_pages([src])
+        elif rem > 0:
+            hit = full * pt
+        self._kv_sync_bt()
+        return hit
+
+    def _kv_snapshot(self, slot: int, n: int):
+        """Pin the pages covering positions [0, n) of ``slot`` (one
+        reference each) — the backing of a new prefix-cache entry. The
+        entry's references keep the pages alive after the slot itself
+        releases."""
+        pool = self.pages
+        blocks = -(-n // pool.page_tokens)
+        pids = pool.slot_pages(slot, upto_blocks=blocks)
+        for pid in pids:
+            pool.incref(pid)
+        return pids
 
     def cancel_request(self, rid: str, now: float = 0.0) -> bool:
         """Cancel a request anywhere in its lifecycle. Queued: the entry
@@ -853,6 +1050,29 @@ class InferenceEngine:
             # snapshot the dying AW's cached prefixes before fail() clears
             # them: checkpoint-backed entries become restorable orphans
             self.prefix_plane.note_aw_failed(aw)
+        if self.pages is not None:
+            # the AW's physical pages die with it: drop the cache entries'
+            # references first (orphan metadata is already snapshotted —
+            # restoration replays from the store into fresh pages), then
+            # unmap the partition's slots. Slots of UNRECOVERABLE requests
+            # (no store record) keep their pages: those requests keep
+            # decoding against the dead worker's state, mirroring the
+            # contiguous engine's simulated-data-loss behaviour below.
+            # Freed pages scrub so the clean-page invariant holds
+            # unconditionally at re-provision.
+            rec = set(self.store.active_requests_on(aw))
+            keep = {r.slot for r in self.requests.values()
+                    if r._aw == aw and not r.done and r.rid not in rec}
+            freed = []
+            pc = self.aws[aw].prefix_cache
+            if pc is not None and hasattr(pc, "release_all_pages"):
+                freed += pc.release_all_pages()
+            per = self.slots.per_aw
+            for s in range(aw * per, (aw + 1) * per):
+                if s not in keep:
+                    freed += self.pages.release_slot(s)
+            self._kv_free_pages(freed)
+            self._kv_sync_bt()
         self.route_state = self.aws[aw].fail(self.route_state)
         recoverable = set(self.store.active_requests_on(aw))
         if self.chunked is not None and self.ecfg.checkpoint:
@@ -1061,12 +1281,17 @@ class InferenceEngine:
             # pending WRs and the prefill cursor die with the request, not
             # with the worker (they reference a log about to be released)
             aw.drop_request(rid)
-            if not r.paused and not cached:
-                if self.prefix_plane is not None:
+            if not r.paused and (not cached or self.pages is not None):
+                # paged: the slot ALWAYS releases, cached or not — a
+                # successful offer pinned its own page references, so the
+                # shared pages outlive the slot while exclusive pages
+                # free. Contiguous: a cached slot is retained by the
+                # entry (slot-level sharing) and must not be cleared.
+                if self.prefix_plane is not None and not cached:
                     # e.g. a cancelled adopter: its slot's live cache
                     # entry must not survive the clear below
                     self.prefix_plane.forget_slot(r._aw, r.slot)
-                self.cache = self.layout.clear_slot(self.cache, r.slot)
+                self._kv_clear_slot(r.slot)
                 aw.slots.release(r.slot)
         # always safe: a cached entry's backing log was renamed to its
         # reserved ~prefix key (release of the original rid is then a

@@ -144,6 +144,11 @@ class SessionAffinityPolicy:
         self.pins: Dict[str, int] = {}
         self.events: List[WorkerEvent] = []
         self.stats = None            # bound by the owning Gateway
+        # installed by the prefix-cache plane when the cluster-wide radix
+        # index is on: (workers, prompt) -> aw_id | None. One global trie
+        # lookup replaces the per-AW match scan, and may migrate the
+        # matched prefix to a free AW before answering.
+        self.global_router = None
 
     @staticmethod
     def session_key(rid: str) -> str:
@@ -156,6 +161,10 @@ class SessionAffinityPolicy:
         exist)."""
         if prompt is None:
             return None
+        if self.global_router is not None:
+            # cluster-wide index: one lookup answers for every AW (and
+            # covers migration); no match there means no match anywhere
+            return self.global_router(workers, prompt)
         best, best_len = None, 0
         for w in workers:
             if w.prefix_cache is None or not w.has_capacity():
@@ -231,6 +240,10 @@ class GatewayStats:
     prefix_hit_tokens: int = 0      # prompt tokens adopted (prefill skipped)
     prefix_evictions: int = 0       # cached prefixes evicted (budget/pressure)
     prefix_restored: int = 0        # dead-AW prefixes restored on failover
+    prefix_global_hits: int = 0     # placements routed by the cluster-wide
+    #                                 radix index (paged engines)
+    prefix_migrated: int = 0        # prefixes migrated between AWs via
+    #                                 checkpoint replay (paged engines)
     session_repins: int = 0         # sessions re-pinned off a dead AW
     queue_delay: Dict[str, float] = field(default_factory=dict)
     # per-class lifecycle counters:
@@ -266,6 +279,10 @@ class Gateway:
         # cap 0 = slot-bound admission only.
         self.prefill_token_cap: int = 0
         self.prefill_load = None
+        # prefix-cache-plane probe: prompt -> cluster-wide best match len.
+        # When installed (paged global index) it replaces the per-AW scan
+        # in _cached_match_len.
+        self.match_probe = None
         # engine-installed hook: (blocked interactive head, now) -> bool.
         # True means a victim's slot was freed (preempt-and-requeue) and
         # placement should be retried for the head.
@@ -367,6 +384,8 @@ class Gateway:
         token-cap gate's estimate of how much of the prompt would be
         adopted rather than prefilled (the exact tail is charged after
         placement)."""
+        if self.match_probe is not None:
+            return self.match_probe(prompt)
         best = 0
         for w in self.workers:
             if w.alive and w.prefix_cache is not None:

@@ -255,6 +255,417 @@ class CacheLayout:
             total += np.asarray(s).nbytes
         return total
 
+    def prefill_paddable(self, cache, max_seq: int) -> bool:
+        """True when slot index == absolute position for every leaf (pure
+        attention cache, no ring wrap): the precondition for chunked
+        prefill and prefix adoption."""
+        leaves, _ = self._leaves(cache)
+        if not all(k.startswith("attn_") for k in self.leaf_kind):
+            return False
+        return all(leaf.shape[ax + 1] >= max_seq
+                   for leaf, ax, kind in zip(leaves, self.batch_axis,
+                                             self.leaf_kind)
+                   if kind == "attn_k")
+
+
+# --------------------------------------------------------------------------
+# paged layout: block tables over refcounted physical page pools
+# --------------------------------------------------------------------------
+
+class PagedCacheLayout:
+    """CacheLayout twin for a PAGED cache (vLLM-style block tables).
+
+    The paged cache pytree is the contiguous pytree with every leaf's
+    per-slot rows replaced by a pool of physical pages — batch axis B ->
+    page axis P, position axis Sc -> page extent ``page_tokens`` — plus
+    one top-level block table ``bt`` [B, nblk] int32 shared by all layers
+    (nblk * page_tokens == max_seq, so a slot's gathered pages reproduce
+    its contiguous layout element-for-element). Page 0 is reserved: never
+    allocated, positions -1 forever; unmapped block-table entries point at
+    it so every gather reads a valid page and unmapped regions mask out
+    exactly like an empty contiguous cache.
+
+    Every read-side operation gathers the slot's pages into the contiguous
+    per-slot view and then applies the contiguous logic, so checkpoint
+    segments and request states are LAYOUT-INDEPENDENT: a segment written
+    by a paged AW restores onto a contiguous engine and vice versa — the
+    property prefix migration and failover restoration ride on.
+
+    Paged mode is attention-only and full-attention-only (no SSM state
+    leaves, no sliding-window ring buffers); the engine asserts both.
+    """
+
+    def __init__(self, init_cache_fn, page_tokens: int, max_seq: int):
+        assert page_tokens > 0 and max_seq % page_tokens == 0, \
+            (page_tokens, max_seq)
+        self.inner = CacheLayout(init_cache_fn)
+        assert all(k.startswith("attn_") for k in self.inner.leaf_kind), \
+            "paged KV requires a pure attention cache"
+        self.page_tokens = page_tokens
+        self.max_seq = max_seq
+        self.nblk = max_seq // page_tokens
+        # mirrored for callers that introspect the layout generically
+        self.paths = self.inner.paths
+        self.batch_axis = self.inner.batch_axis
+        self.leaf_kind = self.inner.leaf_kind
+        self.attn_parents = self.inner.attn_parents
+        self._copy_page_fn = jax.jit(self._copy_page_impl)
+        self._scrub_pages_fn = jax.jit(self._scrub_pages_impl)
+
+    # ------------------------------------------------------------------
+    def make_cache(self, init_cache_fn, batch: int, num_pages: int):
+        """Build the paged cache: per-layer page pools (the contiguous
+        init with batch=num_pages, max_seq=page_tokens) + the block
+        table, all entries at the null page."""
+        pools = init_cache_fn(num_pages, self.page_tokens)
+        cache = dict(pools)
+        cache["bt"] = jnp.zeros((batch, self.nblk), jnp.int32)
+        return cache
+
+    def _rest(self, cache):
+        rest = {k: v for k, v in cache.items() if k != "bt"}
+        leaves, treedef = jax.tree_util.tree_flatten(rest)
+        assert len(leaves) == len(self.inner.paths)
+        return cache["bt"], leaves, treedef
+
+    def _rebuild(self, bt, leaves, treedef):
+        rest = jax.tree_util.tree_unflatten(treedef, leaves)
+        out = dict(rest)
+        out["bt"] = bt
+        return out
+
+    def set_block_table(self, cache, bt_host):
+        """Install the host block-table mirror on device (a tiny [B, nblk]
+        int32 upload — the only per-allocation device traffic)."""
+        out = dict(cache)
+        out["bt"] = jnp.asarray(np.asarray(bt_host, np.int32))
+        return out
+
+    def _gather_slot(self, leaf, ax, row):
+        """Contiguous per-slot view of one pool leaf through a block-table
+        row [nblk]: [..., P, pt, ...] -> [..., nblk*pt, ...] at axis ax."""
+        g = jnp.take(leaf, row, axis=ax)
+        shp = leaf.shape[:ax] + (row.shape[0] * leaf.shape[ax + 1],) + \
+            leaf.shape[ax + 2:]
+        return g.reshape(shp)
+
+    # ------------------------------------------------------------------
+    def token_segment(self, cache, slot: int, token: int) -> List[Any]:
+        bt, leaves, _ = self._rest(cache)
+        pt = self.page_tokens
+        page = bt[slot, (token % self.max_seq) // pt]
+        off = token % pt
+        seg = []
+        for leaf, ax in zip(leaves, self.inner.batch_axis):
+            per = jax.lax.index_in_dim(
+                jax.lax.dynamic_index_in_dim(leaf, page, ax,
+                                             keepdims=False),
+                off, ax, keepdims=False)
+            seg.append(np.asarray(per))
+        return seg
+
+    def write_token_segment(self, cache, slot: int, token: int,
+                            seg: List[Any]):
+        bt, leaves, treedef = self._rest(cache)
+        pt = self.page_tokens
+        page = bt[slot, (token % self.max_seq) // pt]
+        off = token % pt
+        out = []
+        for leaf, ax, s in zip(leaves, self.inner.batch_axis, seg):
+            # an unmapped block (page 0 — the host failed to pre-allocate)
+            # drops the write instead of corrupting the shared null page
+            safe = jnp.where(page > 0, page, leaf.shape[ax])
+            idx = (slice(None),) * ax + (safe, off)
+            out.append(jnp.asarray(leaf).at[idx].set(
+                jnp.asarray(s, leaf.dtype), mode="drop"))
+        return self._rebuild(bt, out, treedef)
+
+    # ------------------------------------------------------------------
+    def make_batched_extractor(self):
+        batch_axes = list(self.inner.batch_axis)
+        pt, max_seq = self.page_tokens, self.max_seq
+
+        def extract(cache, slots, tokens):
+            bt, leaves, _ = self._rest(cache)
+            out = []
+            for leaf, ax in zip(leaves, batch_axes):
+                def one(slot, tok, leaf=leaf, ax=ax):
+                    row = jax.lax.dynamic_index_in_dim(bt, slot, 0,
+                                                       keepdims=False)
+                    page = jax.lax.dynamic_index_in_dim(
+                        row, (tok % max_seq) // pt, 0, keepdims=False)
+                    per = jax.lax.dynamic_index_in_dim(leaf, page, ax,
+                                                       keepdims=False)
+                    return jax.lax.dynamic_index_in_dim(
+                        per, tok % pt, ax, keepdims=False)
+
+                out.append(jax.vmap(one)(slots, tokens))
+            return out
+
+        return jax.jit(extract)
+
+    def make_slot_range_extractor(self):
+        batch_axes = list(self.inner.batch_axis)
+        max_seq = self.max_seq
+
+        def extract(cache, slot, start, *, count: int):
+            bt, leaves, _ = self._rest(cache)
+            row = jax.lax.dynamic_index_in_dim(bt, slot, 0, keepdims=False)
+            out = []
+            for leaf, ax in zip(leaves, batch_axes):
+                per = self._gather_slot(leaf, ax, row)
+                sl = jax.lax.dynamic_slice_in_dim(
+                    per, start % max_seq, count, axis=ax)
+                out.append(jnp.moveaxis(sl, ax, 0))
+            return out
+
+        return jax.jit(extract, static_argnames=("count",))
+
+    def make_multi_slot_range_extractor(self):
+        batch_axes = list(self.inner.batch_axis)
+        max_seq = self.max_seq
+
+        def extract(cache, slots, starts, *, count: int):
+            bt, leaves, _ = self._rest(cache)
+            out = []
+            for leaf, ax in zip(leaves, batch_axes):
+                def one(slot, start, leaf=leaf, ax=ax):
+                    row = jax.lax.dynamic_index_in_dim(bt, slot, 0,
+                                                       keepdims=False)
+                    per = self._gather_slot(leaf, ax, row)
+                    sl = jax.lax.dynamic_slice_in_dim(
+                        per, start % max_seq, count, axis=ax)
+                    return jnp.moveaxis(sl, ax, 0)
+
+                out.append(jax.vmap(one)(slots, starts))
+            return out
+
+        return jax.jit(extract, static_argnames=("count",))
+
+    # ------------------------------------------------------------------
+    def request_state(self, cache, slot: int) -> List[Any]:
+        """Whole-slot state in the CONTIGUOUS layout (gathered through the
+        block table) — interchangeable with a contiguous engine's."""
+        bt, leaves, _ = self._rest(cache)
+        row = bt[slot]
+        return [np.asarray(self._gather_slot(leaf, ax, row))
+                for leaf, ax in zip(leaves, self.inner.batch_axis)]
+
+    def write_request_state(self, cache, slot: int, state: List[Any]):
+        """Scatter a contiguous per-slot state into the slot's mapped
+        pages. Blocks left unmapped drop their writes — callers pre-
+        allocate pages covering the valid prefix; the dropped tail is
+        scrubbed (-1) state anyway."""
+        bt, leaves, treedef = self._rest(cache)
+        row = bt[slot]
+        out = []
+        for leaf, ax, s in zip(leaves, self.inner.batch_axis, state):
+            safe = jnp.where(row > 0, row, leaf.shape[ax])
+            s = jnp.asarray(s, leaf.dtype)
+            shp = s.shape[:ax] + (self.nblk, self.page_tokens) + \
+                s.shape[ax + 1:]
+            # block axis to the front to pair with the page-fronted pool;
+            # the page-offset axis stays at ax+1 in both, matching shapes
+            paged = jnp.moveaxis(s.reshape(shp), ax, 0)
+            dest = jnp.moveaxis(jnp.asarray(leaf), ax, 0)
+            dest = dest.at[safe].set(paged, mode="drop")
+            out.append(jnp.moveaxis(dest, 0, ax))
+        return self._rebuild(bt, out, treedef)
+
+    def scrub_request_state(self, state: List[Any], valid_len: int
+                            ) -> List[Any]:
+        return self.inner.scrub_request_state(state, valid_len)
+
+    def scrub_slot(self, cache, slot: int, valid_len: int):
+        """Mask positions >= valid_len in the slot's mapped pages. Writes
+        to shared pages are value-identical (a fully-shared page only
+        covers positions < valid_len), and null-page duplicates rewrite
+        -1 with -1, so sharing is never corrupted."""
+        bt, leaves, treedef = self._rest(cache)
+        row = bt[slot]
+        out = []
+        for leaf, ax, kind in zip(leaves, self.inner.batch_axis,
+                                  self.leaf_kind):
+            if kind == "attn_pos":
+                sub = jnp.take(leaf, row, axis=ax)
+                sub = jnp.where(sub >= valid_len, -1, sub)
+                idx = (slice(None),) * ax + (row,)
+                leaf = jnp.asarray(leaf).at[idx].set(sub)
+            out.append(leaf)
+        return self._rebuild(bt, out, treedef)
+
+    def clear_slot(self, cache, slot: int):
+        """Reset the slot's block-table row to the null page. Page
+        disposition (decref / scrub-on-free) is the PagePool's job — the
+        engine facade runs it before calling this."""
+        bt, leaves, treedef = self._rest(cache)
+        return self._rebuild(bt.at[slot].set(0), leaves, treedef)
+
+    def segment_nbytes(self, seg: List[Any], attn_only: bool = False) -> int:
+        return self.inner.segment_nbytes(seg, attn_only)
+
+    def prefill_paddable(self, cache, max_seq: int) -> bool:
+        return max_seq <= self.max_seq
+
+    # -- device page ops (jitted once; int operands are traced) ----------
+    def _copy_page_impl(self, cache, src, dst):
+        """Copy-on-extend: duplicate one physical page (all layers)."""
+        bt, leaves, treedef = self._rest(cache)
+        out = []
+        for leaf, ax in zip(leaves, self.inner.batch_axis):
+            page = jax.lax.dynamic_index_in_dim(leaf, src, ax,
+                                                keepdims=False)
+            idx = (slice(None),) * ax + (dst,)
+            out.append(leaf.at[idx].set(page))
+        return self._rebuild(bt, out, treedef)
+
+    def copy_page(self, cache, src: int, dst: int):
+        return self._copy_page_fn(cache, jnp.int32(src), jnp.int32(dst))
+
+    def _scrub_pages_impl(self, cache, pages):
+        """Invalidate freed pages' positions so a recycled page can never
+        leak stale entries into its next mapper's attention. ``pages`` is
+        a fixed-size [nblk] id vector padded with the null page (whose
+        positions are -1 already — a no-op rewrite)."""
+        bt, leaves, treedef = self._rest(cache)
+        out = []
+        for leaf, ax, kind in zip(leaves, self.inner.batch_axis,
+                                  self.leaf_kind):
+            if kind == "attn_pos":
+                idx = (slice(None),) * ax + (pages,)
+                leaf = leaf.at[idx].set(-1)
+            out.append(leaf)
+        return self._rebuild(bt, out, treedef)
+
+    def scrub_pages(self, cache, pages: List[int]):
+        """Scrub an arbitrary host list of freed page ids (chunked through
+        the fixed-size jitted scatter: one trace total)."""
+        k = self.nblk
+        for i in range(0, len(pages), k):
+            chunk = list(pages[i:i + k])
+            chunk += [0] * (k - len(chunk))
+            cache = self._scrub_pages_fn(
+                cache, jnp.asarray(chunk, jnp.int32))
+        return cache
+
+
+# --------------------------------------------------------------------------
+# host-side page allocator
+# --------------------------------------------------------------------------
+
+class PagePool:
+    """Host bookkeeping for the physical page pools: per-AW free lists
+    (pages partition across AWs like slots do — a failure domain owns its
+    pages), refcounts, and the host mirror of the device block table.
+
+    Page ids are global; page 0 is reserved (never allocated). Refcount
+    semantics: an allocated page starts at 1; prefix-cache entries and
+    adopting slots each hold one reference; a page returns to its AW's
+    free list only when the count hits 0 — the invariant the eviction fix
+    (never free a page with refcount > 1) and the property test lean on.
+    """
+
+    def __init__(self, num_slots: int, num_aw: int, blocks_per_slot: int,
+                 page_tokens: int, pages_per_aw: int = 0):
+        from collections import deque
+        self.page_tokens = page_tokens
+        self.nblk = blocks_per_slot
+        self.num_aw = num_aw
+        self.slots_per_aw = num_slots // num_aw
+        self.pages_per_aw = pages_per_aw or \
+            self.slots_per_aw * blocks_per_slot
+        self.num_pages = 1 + self.pages_per_aw * num_aw
+        self._free = [deque(range(1 + a * self.pages_per_aw,
+                                  1 + (a + 1) * self.pages_per_aw))
+                      for a in range(num_aw)]
+        self.ref = np.zeros(self.num_pages, np.int32)
+        self.bt = np.zeros((num_slots, self.nblk), np.int32)
+        self.dirty = False   # host bt differs from the device copy
+
+    # ------------------------------------------------------------------
+    def aw_of_page(self, pid: int) -> int:
+        assert pid > 0
+        return (pid - 1) // self.pages_per_aw
+
+    def aw_of_slot(self, slot: int) -> int:
+        return slot // self.slots_per_aw
+
+    def free_pages(self, aw: int) -> int:
+        return len(self._free[aw])
+
+    def alloc(self, aw: int) -> int:
+        """Allocate one page on AW ``aw`` (refcount 1), or -1 if its pool
+        is exhausted (caller evicts cached prefixes and retries)."""
+        if not self._free[aw]:
+            return -1
+        pid = self._free[aw].popleft()
+        assert self.ref[pid] == 0, pid
+        self.ref[pid] = 1
+        return pid
+
+    def incref(self, pid: int):
+        assert pid > 0 and self.ref[pid] > 0, pid
+        self.ref[pid] += 1
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; True when the page was freed (caller must
+        scrub it on device before it can be re-allocated)."""
+        assert pid > 0 and self.ref[pid] > 0, pid
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self._free[self.aw_of_page(pid)].append(pid)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def map_block(self, slot: int, blk: int, pid: int):
+        self.bt[slot, blk] = pid
+        self.dirty = True
+
+    def mapped_blocks(self, slot: int) -> int:
+        return int((self.bt[slot] > 0).sum())
+
+    def slot_pages(self, slot: int, upto_blocks: int = -1) -> List[int]:
+        row = self.bt[slot]
+        if upto_blocks >= 0:
+            row = row[:upto_blocks]
+        return [int(p) for p in row if p > 0]
+
+    def release_slot(self, slot: int) -> List[int]:
+        """Unmap the whole slot, decref its pages; returns the pages whose
+        refcount hit 0 (to scrub + recycle). Shared pages survive with
+        their remaining holders."""
+        freed = [pid for pid in self.slot_pages(slot) if self.decref(pid)]
+        if self.bt[slot].any():
+            self.bt[slot] = 0
+            self.dirty = True
+        return freed
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {"pages_total": self.num_pages - 1,
+                "pages_used": int((self.ref[1:] > 0).sum()),
+                "pages_shared": int((self.ref[1:] > 1).sum())}
+
+    def check(self) -> None:
+        """Allocator invariants (the property test's oracle): every page
+        is either free exactly once with refcount 0, or allocated with
+        refcount > 0 and on no free list; block tables only reference
+        allocated pages."""
+        seen: Dict[int, int] = {}
+        for aw, fl in enumerate(self._free):
+            for pid in fl:
+                assert self.aw_of_page(pid) == aw, (pid, aw)
+                seen[pid] = seen.get(pid, 0) + 1
+        for pid in range(1, self.num_pages):
+            if self.ref[pid] == 0:
+                assert seen.get(pid, 0) == 1, \
+                    f"page {pid} free-count {seen.get(pid, 0)} != 1"
+            else:
+                assert pid not in seen, f"page {pid} allocated AND free"
+        mapped = self.bt[self.bt > 0]
+        assert (self.ref[mapped] > 0).all(), "bt references a free page"
+
 
 # Slot allocation lives with the workers that own the partitions:
 # see serving/workers.py (SlotPartition / AttentionWorker / ClusterSlotView).

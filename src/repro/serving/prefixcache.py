@@ -32,6 +32,19 @@ KV still lives in the checkpoint store — recovery restores each hot
 session prefix per-request onto the failover AW (§6.2 applied to cache
 state), so the session's next turn still hits. Every transition here is
 a host-side array/bookkeeping update: zero new jit traces.
+
+On **paged** engines (``EngineConfig.kv_page_tokens > 0``) sharing moves
+down a level, from slots to physical pages: entries pin refcounted KV
+pages instead of holding a slot, adoption maps the SAME pages into any
+number of concurrently decoding slots (copy-on-extend at the boundary
+page keeps shared pages read-only), and eviction becomes page-granular —
+under allocation pressure the LRU entry loses tail pages one at a time,
+priced by the pages only it keeps alive. With
+``EngineConfig.prefix_global_index`` the plane also mirrors every per-AW
+trie into one cluster-wide index that routes arrivals to the AW holding
+their best cached prefix anywhere, and ``prefix_migrate`` lets a hot
+prefix follow demand to a free AW through the same checkpoint-replay
+path failover restoration uses.
 """
 from __future__ import annotations
 
@@ -348,23 +361,456 @@ class AWPrefixCache:
         if self.stats is not None:
             self.stats.prefix_evictions += 1
 
+    def snapshot(self) -> dict:
+        return {"entries": len(self.entries),
+                "live": sum(1 for e in self.entries.values() if e.live),
+                "cached_tokens": self.cached_tokens(),
+                **self.local.snapshot()}
+
+
+# --------------------------------------------------------------------------
+# paged mode: page-level sharing, entry-id keyed caches, global routing
+# --------------------------------------------------------------------------
+
+@dataclass
+class PagedPrefixEntry:
+    """One cached prefix on a PAGED engine: the entry holds pinned
+    references to the physical pages whose KV covers ``tokens`` — not a
+    slot. Entries are keyed by a synthetic id (``eid``), never consumed by
+    adoption, and serve any number of concurrent adopters: each adopter's
+    slot maps the SAME pages (refcount bumped, copy-on-extend at the
+    boundary), which is what lets far more shared-prefix sessions stay
+    resident than there are slots. ``rid`` names the checkpoint-store log
+    backing the entry across AW failures ('' = unbacked)."""
+    eid: int
+    tokens: np.ndarray
+    pages: List[int]
+    rid: str
+    session: Optional[str]
+    last_use: float
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+class PagedAWPrefixCache:
+    """Per-AW prefix cache over the engine's refcounted page pool.
+
+    Differences from the slot-level ``AWPrefixCache``:
+      * entries pin PAGES, not slots — ``take_slot`` always hands out a
+        real partition slot and maps the matched entry's pages into it
+        (``engine._kv_adopt``: shared full pages + a private boundary
+        copy), so ``evictable_count`` is 0 and the worker's free count is
+        its true partition free count;
+      * entries are multi-adopter: adoption neither truncates nor
+        consumes them, and two live requests decoding off the same prefix
+        reference the same physical pages;
+      * eviction is page-pressure driven and PARTIAL: under pressure the
+        LRU entry's tail pages are trimmed first (the entry survives,
+        shortened), and the victim's cost is priced by its EXCLUSIVE
+        pages — a mostly-shared entry is cheap to drop because its pages
+        outlive it with their other holders. A page with refcount > 1 is
+        never freed (the pool's decref invariant).
+    """
+
+    def __init__(self, aw_id: int, partition, engine, max_tokens: int = 0,
+                 min_match: int = 4, release_log=None, stats=None,
+                 eid_gen=None, plane=None):
+        self.aw_id = aw_id
+        self.partition = partition
+        self.engine = engine
+        self.pool = engine.pages
+        self.max_tokens = max(0, max_tokens)
+        self.min_match = max(1, min_match)
+        self.release_log = release_log or (lambda rid: None)
+        self.stats = stats
+        self._eid_gen = eid_gen or iter(range(1, 1 << 60)).__next__
+        self.plane = plane
+        self.entries: Dict[int, PagedPrefixEntry] = {}
+        self.index = RadixIndex()
+        self.local = PrefixCacheStats()
+
+    # -- index maintenance (local trie + the plane's global one) ------------
+    def _index_insert(self, e: PagedPrefixEntry):
+        self.index.insert(e.tokens, e.eid)
+        if self.plane is not None:
+            self.plane.on_index_insert(self.aw_id, e)
+
+    def _index_remove(self, e: PagedPrefixEntry):
+        self.index.remove(e.tokens, e.eid)
+        if self.plane is not None:
+            self.plane.on_index_remove(e)
+
+    # -- capacity view ------------------------------------------------------
+    def evictable_count(self) -> int:
+        return 0                 # entries hold pages, never slots
+
+    def cached_tokens(self) -> int:
+        return sum(e.length for e in self.entries.values())
+
+    def exclusive_pages(self, e: PagedPrefixEntry) -> int:
+        return sum(1 for p in e.pages if self.pool.ref[p] == 1)
+
+    def match_len(self, prompt) -> int:
+        if prompt is None or len(prompt) < 2:
+            return 0
+        _, lcp = self.index.match(prompt, set(self.entries.keys()))
+        lcp = min(lcp, len(prompt) - 1)
+        return lcp if lcp >= self.min_match else 0
+
+    # -- allocation: slot + page-level adoption -----------------------------
+    def take_slot(self, prompt, now: float = 0.0) -> Tuple[int, int]:
+        """Allocate a partition slot; when the prompt shares >= min_match
+        tokens with a cached entry, map the entry's pages into the slot
+        (zero KV copied for the shared full pages). The entry stays in
+        the cache for the next adopter."""
+        slot = self.partition.alloc()
+        if prompt is None or len(prompt) < 2:
+            return slot, 0
+        eid, lcp = self.index.match(prompt, set(self.entries.keys()))
+        lcp = min(lcp, len(prompt) - 1)
+        if eid < 0 or lcp < self.min_match:
+            return slot, 0
+        e = self.entries[eid]
+        hit = self.engine._kv_adopt(slot, e.pages, min(lcp, e.length))
+        if hit < self.min_match:
+            # boundary-copy degrade fell under the adoption threshold:
+            # roll the shared references back and admit cold
+            self.engine._kv_clear_slot(slot)
+            return slot, 0
+        e.last_use = now
+        return slot, hit
+
+    # -- population ---------------------------------------------------------
+    def offer(self, slot: int, tokens: np.ndarray, rid: str,
+              session: Optional[str], now: float) -> bool:
+        """Pin the finished request's pages as a new entry. The slot
+        itself is NOT retained — the caller releases it (decref'ing the
+        slot's references) and the entry's own references keep the pages
+        alive. Duplicates refresh the existing entry instead."""
+        self.local.offered += 1
+        n = len(tokens)
+        if n < 2 or (self.max_tokens and n > self.max_tokens):
+            self.local.refused += 1
+            return False
+        dup = self.index.exact_slot(tokens)
+        if dup >= 0 and dup in self.entries:
+            self.entries[dup].last_use = now
+            self.local.refused += 1
+            return False
+        while self.max_tokens and self.cached_tokens() + n > self.max_tokens:
+            victim = self._pick_victim()
+            if victim is None:
+                self.local.refused += 1
+                return False
+            self.engine._kv_free_pages(self.remove_entry(victim.eid))
+            if self.stats is not None:
+                self.stats.prefix_evictions += 1
+        pages = self.engine._kv_snapshot(slot, n)
+        if len(pages) < -(-n // self.pool.page_tokens):
+            # the slot's mapped extent doesn't cover the claimed prefix
+            # (should not happen — defensive roll-back, no leak)
+            for pid in pages:
+                self.pool.decref(pid)
+            self.local.refused += 1
+            return False
+        e = PagedPrefixEntry(self._eid_gen(), np.asarray(tokens, np.int32),
+                             pages, rid, session, now)
+        self.entries[e.eid] = e
+        self._index_insert(e)
+        self.local.cached += 1
+        return True
+
+    def insert_restored(self, slot: int, tokens: np.ndarray, rid: str,
+                        session: Optional[str], now: float) -> bool:
+        return self.offer(slot, tokens, rid, session, now)
+
+    # -- teardown -----------------------------------------------------------
+    def forget_slot(self, slot: int):
+        """No-op: paged entries are not slot-keyed — an adopter's teardown
+        just decrefs its slot's page references (engine._kv_clear_slot)."""
+
+    def remove_entry(self, eid: int, release_log: bool = True) -> List[int]:
+        """Drop one entry, decref its pages; returns the page ids whose
+        refcount hit 0 (the CALLER scrubs them on device — pages shared
+        with live slots or other entries survive untouched)."""
+        e = self.entries.pop(eid, None)
+        if e is None:
+            return []
+        self._index_remove(e)
+        freed = [p for p in e.pages if self.pool.decref(p)]
+        e.pages = []
+        if release_log and e.rid:
+            self.release_log(e.rid)
+        return freed
+
+    def release_all_pages(self) -> List[int]:
+        """AW failure path: drop every entry's page references (orphan
+        metadata was snapshotted by the plane already). Returns freed
+        page ids for the engine to scrub."""
+        freed = []
+        for e in list(self.entries.values()):
+            self._index_remove(e)
+            freed += [p for p in e.pages if self.pool.decref(p)]
+            e.pages = []
+            self._index_insert(e)   # keep metadata addressable until clear()
+        return freed
+
+    def clear(self):
+        for e in list(self.entries.values()):
+            self._index_remove(e)
+        self.entries = {}
+        self.index = RadixIndex()
+
+    # -- eviction: page-pressure, partial, exclusive-priced -----------------
+    def _pick_victim(self) -> Optional[PagedPrefixEntry]:
+        """LRU first; among equals the entry with the FEWEST exclusive
+        pages (eviction cost is the KV only this entry keeps alive —
+        shared pages survive their holder, so a mostly-shared entry is
+        nearly free to drop); eid breaks the final tie."""
+        if not self.entries:
+            return None
+        return min(self.entries.values(),
+                   key=lambda e: (e.last_use, self.exclusive_pages(e),
+                                  e.eid))
+
+    def evict_pages(self) -> List[int]:
+        """Free at least one physical page under allocation pressure by
+        trimming victims TAIL-FIRST: the LRU entry loses its last page
+        (partial-prefix eviction — the shortened entry still serves
+        shorter matches) until a page actually frees. Entries trimmed
+        below usefulness (< min_match tokens) drop entirely. Returns
+        freed page ids for the engine to scrub; [] when nothing more can
+        free a page."""
+        freed: List[int] = []
+        while not freed:
+            victim = self._pick_victim()
+            if victim is None:
+                break
+            freed += self._trim_tail(victim)
+        return freed
+
+    def _trim_tail(self, e: PagedPrefixEntry) -> List[int]:
+        freed: List[int] = []
+        self._index_remove(e)
+        if e.pages:
+            pid = e.pages.pop()
+            if self.pool.decref(pid):
+                freed.append(pid)
+        new_len = min(e.length, len(e.pages) * self.pool.page_tokens)
+        e.tokens = np.asarray(e.tokens[:new_len], np.int32)
+        if not e.pages or e.length < max(2, self.min_match):
+            del self.entries[e.eid]
+            freed += [p for p in e.pages if self.pool.decref(p)]
+            e.pages = []
+            if e.rid:
+                self.release_log(e.rid)
+        else:
+            self._index_insert(e)
+        if self.stats is not None:
+            self.stats.prefix_evictions += 1
+        return freed
+
+    # -- metrics ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"entries": len(self.entries),
+                "shared": sum(1 for e in self.entries.values()
+                              if any(self.pool.ref[p] > 1
+                                     for p in e.pages)),
+                "cached_tokens": self.cached_tokens(),
+                **self.local.snapshot()}
+
+
+class GlobalPrefixIndex:
+    """Gateway-level radix index over EVERY AW's cached prefixes: one trie
+    whose entries are global eids mapped to their home AW. The per-AW
+    indexes stay authoritative for adoption; this one answers the routing
+    question — \"which AW, cluster-wide, holds the longest cached prefix
+    of this prompt?\" — in one lookup instead of a per-AW scan, and is
+    what prefix migration consults for the source entry."""
+
+    def __init__(self):
+        self.index = RadixIndex()
+        self.home: Dict[int, int] = {}        # eid -> aw_id
+
+    def insert(self, tokens, eid: int, aw_id: int):
+        self.index.insert(tokens, eid)
+        self.home[eid] = aw_id
+
+    def remove(self, tokens, eid: int):
+        self.index.remove(tokens, eid)
+        self.home.pop(eid, None)
+
+    def match(self, prompt) -> Tuple[int, int, int]:
+        """(eid, home aw_id, lcp) of the best cluster-wide match, or
+        (-1, -1, 0)."""
+        eid, lcp = self.index.match(prompt, set(self.home.keys()))
+        return eid, self.home.get(eid, -1), lcp
+
 
 class PrefixCachePlane:
-    """Engine-level coordinator: attaches an ``AWPrefixCache`` to every
-    AttentionWorker, owns the offer/forget lifecycle hooks the engine
-    calls, and carries dead AWs' cached prefixes across failover via the
-    checkpoint store."""
+    """Engine-level coordinator: attaches an ``AWPrefixCache`` (or, on
+    paged engines, a ``PagedAWPrefixCache``) to every AttentionWorker,
+    owns the offer/forget lifecycle hooks the engine calls, and carries
+    dead AWs' cached prefixes across failover via the checkpoint store.
+
+    On paged engines with ``prefix_global_index`` the plane additionally
+    maintains one cluster-wide radix index mirroring every per-AW trie
+    and installs itself into the gateway's placement path: arrivals route
+    to the AW holding their best cached prefix anywhere in the cluster,
+    and (with ``prefix_migrate``) hot prefixes whose home AW is full
+    migrate to a free AW by replaying their committed checkpoint
+    segments — the same bulk-segment path failover restoration uses."""
 
     def __init__(self, engine, max_slots: int, max_tokens: int = 0,
                  min_match: int = 4):
         self.engine = engine
         self.orphans: List[PrefixEntry] = []
         self._log_seq = 0        # unique suffix for adopted-log keys
+        self.min_match = max(1, min_match)
+        self.paged = engine.pages is not None
+        self._eid = 0            # plane-owned: eids unique cluster-wide
+        self.global_index: Optional[GlobalPrefixIndex] = None
+        if self.paged and engine.ecfg.prefix_global_index:
+            self.global_index = GlobalPrefixIndex()
         for w in engine.aws:
-            w.prefix_cache = AWPrefixCache(
-                w.slots, max_slots, max_tokens, min_match=min_match,
-                release_log=engine.store.release,
-                stats=engine.gateway.stats)
+            if self.paged:
+                w.prefix_cache = PagedAWPrefixCache(
+                    w.aw_id, w.slots, engine, max_tokens=max_tokens,
+                    min_match=min_match, release_log=engine.store.release,
+                    stats=engine.gateway.stats, eid_gen=self._next_eid,
+                    plane=self)
+            else:
+                w.prefix_cache = AWPrefixCache(
+                    w.slots, max_slots, max_tokens, min_match=min_match,
+                    release_log=engine.store.release,
+                    stats=engine.gateway.stats)
+        if self.global_index is not None:
+            from repro.serving.gateway import SessionAffinityPolicy
+            pol = engine.gateway.policy
+            if isinstance(pol, SessionAffinityPolicy):
+                pol.global_router = self.route
+            engine.gateway.match_probe = self.global_match_len
+
+    # -- global-index maintenance (called by the per-AW caches) -------------
+    def _next_eid(self) -> int:
+        self._eid += 1
+        return self._eid
+
+    def on_index_insert(self, aw_id: int, e: PagedPrefixEntry):
+        if self.global_index is not None:
+            self.global_index.insert(e.tokens, e.eid, aw_id)
+
+    def on_index_remove(self, e: PagedPrefixEntry):
+        if self.global_index is not None:
+            self.global_index.remove(e.tokens, e.eid)
+
+    # -- cluster-wide routing ------------------------------------------------
+    def global_match_len(self, prompt) -> int:
+        """Gateway admission probe: longest cached prefix of ``prompt``
+        anywhere in the cluster (one trie walk instead of a per-AW scan).
+        Used only for token accounting — adoption still happens against
+        the chosen AW's own cache."""
+        if self.global_index is None or prompt is None or len(prompt) < 2:
+            return 0
+        _, _, lcp = self.global_index.match(prompt)
+        lcp = min(lcp, len(prompt) - 1)
+        return lcp if lcp >= self.min_match else 0
+
+    def route(self, workers, prompt) -> Optional[int]:
+        """SessionAffinityPolicy's ``global_router``: the AW holding the
+        best cluster-wide prefix match for this prompt, when it can take
+        the request. If the home AW has no slot headroom and
+        ``prefix_migrate`` is on, the entry is migrated to a free AW via
+        checkpoint replay and the request routes there instead."""
+        eng = self.engine
+        if self.global_index is None or prompt is None or len(prompt) < 2:
+            return None
+        eid, aw_id, lcp = self.global_index.match(prompt)
+        lcp = min(lcp, len(prompt) - 1)
+        if eid < 0 or aw_id < 0 or lcp < self.min_match:
+            return None
+        w = eng.aws[aw_id]
+        if w.alive and w.has_capacity():
+            eng.gateway.stats.prefix_global_hits += 1
+            return aw_id
+        if eng.ecfg.prefix_migrate:
+            dst = self._migrate(eid, aw_id, now=float(eng.steps))
+            if dst is not None:
+                eng.gateway.stats.prefix_global_hits += 1
+                return dst
+        return None
+
+    def _migrate(self, eid: int, src_aw: int, now: float) -> Optional[int]:
+        """Move one cached prefix to an AW with headroom by replaying its
+        committed store segments into fresh pages there (pages never move
+        between AW partitions — the checkpoint path is the only
+        cross-failure-domain channel). On success the destination entry
+        adopts the store log and the source entry is dropped WITHOUT
+        releasing it."""
+        eng = self.engine
+        src = eng.aws[src_aw].prefix_cache
+        e = src.entries.get(eid) if src is not None else None
+        if e is None or not e.rid or not eng.ecfg.checkpoint:
+            return None
+        best, best_free = None, -1
+        for w in eng.aws:
+            if not w.alive or w.aw_id == src_aw or not w.has_capacity():
+                continue
+            if w.slots.free_count() == 0:
+                continue
+            fp = eng.pages.free_pages(w.aw_id)
+            if fp > best_free:
+                best, best_free = w, fp
+        if best is None:
+            return None
+        if not self._materialize(best, e.tokens, e.rid, e.session, now):
+            return None
+        # the destination entry now backs the rid log; drop the source
+        # entry but keep the log alive
+        eng._kv_free_pages(src.remove_entry(eid, release_log=False))
+        eng.gateway.stats.prefix_migrated += 1
+        eng._note_request_event(
+            "prefix_migrated", e.rid, now,
+            f"aw{src_aw}->aw{best.aw_id}, {e.length} tokens"
+            + (f", session={e.session}" if e.session else ""))
+        return best.aw_id
+
+    def _materialize(self, target, tokens, rid: str, session, now: float
+                     ) -> bool:
+        """Rebuild a checkpointed prefix on ``target`` through a scratch
+        slot: allocate a free partition slot, replay the committed token
+        segments into freshly allocated pages, offer the result to the
+        target's cache (which pins its own page references), then release
+        the scratch slot either way. Shared by prefix migration and paged
+        orphan restoration."""
+        eng = self.engine
+        committed, _tv, segs = eng.store.restore_request(rid)
+        n = min(len(tokens), committed + 1)
+        if n < 2 or any(t not in segs for t in range(n)):
+            return False
+        slot = target.slots.alloc()
+        ok = False
+        try:
+            eng._kv_clear_slot(slot)
+            try:
+                eng._kv_ensure(slot, n)
+            except RuntimeError:
+                return False      # page pool exhausted on target
+            cache = eng.cache
+            for t in range(n):
+                cache = eng.layout.write_token_segment(cache, slot, t,
+                                                       segs[t])
+            eng.cache = cache
+            ok = bool(target.prefix_cache.offer(
+                slot, np.asarray(tokens[:n], np.int32), rid, session, now))
+            if ok:
+                eng.store.reassign(rid, target.aw_id)
+        finally:
+            eng._kv_clear_slot(slot)
+            target.slots.release(slot)
+        return ok
 
     # -- completion: adopt the slot ----------------------------------------
     def offer(self, r) -> bool:
@@ -416,7 +862,9 @@ class PrefixCachePlane:
             return
         restorable = eng.ecfg.checkpoint and eng.ecfg.prefix_restore
         for e in list(cache.entries.values()):
-            if restorable and e.rid and not e.live:
+            # paged entries have no live flag — adoption never consumes
+            # them, so every rid-backed entry is a restoration candidate
+            if restorable and e.rid and not getattr(e, "live", False):
                 self.orphans.append(e)
             elif e.rid:
                 eng.store.release(e.rid)
@@ -435,6 +883,23 @@ class PrefixCachePlane:
             target = self._pick_target(e, now)
             if target is None:
                 eng.store.release(e.rid)
+                continue
+            if self.paged:
+                # replay through a scratch slot into fresh pages on the
+                # target's partition; the offered entry pins the pages
+                if self._materialize(target, e.tokens, e.rid, e.session,
+                                     now):
+                    restored += 1
+                    eng.gateway.stats.prefix_restored += 1
+                    eng._note_request_event(
+                        "prefix_restored", e.rid, now,
+                        f"aw{target.aw_id}, {e.length} tokens"
+                        + (f", session={e.session}" if e.session else ""))
+                    if eng.telemetry is not None:
+                        eng.telemetry.registry.observe(
+                            "prefix.restored_len", e.length)
+                else:
+                    eng.store.release(e.rid)
                 continue
             committed, _tv, segs = eng.store.restore_request(e.rid)
             n = min(e.length, committed + 1)
@@ -493,10 +958,5 @@ class PrefixCachePlane:
         per_aw = {}
         for w in self.engine.aws:
             if w.prefix_cache is not None:
-                per_aw[w.aw_id] = {
-                    "entries": len(w.prefix_cache.entries),
-                    "live": sum(1 for e in w.prefix_cache.entries.values()
-                                if e.live),
-                    "cached_tokens": w.prefix_cache.cached_tokens(),
-                    **w.prefix_cache.local.snapshot()}
+                per_aw[w.aw_id] = w.prefix_cache.snapshot()
         return per_aw

@@ -248,5 +248,9 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                             "hit_tokens": gw.stats.prefix_hit_tokens,
                             "evictions": gw.stats.prefix_evictions,
                             "restored": gw.stats.prefix_restored,
+                            "global_hits": gw.stats.prefix_global_hits,
+                            "migrated": gw.stats.prefix_migrated,
                             "repins": gw.stats.session_repins}}
+    if engine.pages is not None:
+        m.gateway["pages"] = engine.pages.stats()
     return m

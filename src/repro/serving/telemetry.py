@@ -832,7 +832,8 @@ class TelemetryPlane:
         for k in ("enqueued", "admitted", "requeued", "blocked_ticks",
                   "preemptions", "host_syncs", "prefix_hits",
                   "prefix_misses", "prefix_hit_tokens", "prefix_evictions",
-                  "prefix_restored", "session_repins"):
+                  "prefix_restored", "prefix_global_hits",
+                  "prefix_migrated", "session_repins"):
             self.registry.set_counter(f"gateway.{k}", getattr(gs, k))
         for cls, counts in gs.by_class.items():
             for k, v in counts.items():
@@ -846,6 +847,16 @@ class TelemetryPlane:
             self.registry.gauge(f"aw{w.aw_id}.slots_used", used)
             self.registry.gauge(f"aw{w.aw_id}.slots_total", total)
             self.registry.gauge(f"aw{w.aw_id}.alive", int(w.alive))
+            ps = w.kv_page_stats()
+            if ps is not None:
+                self.registry.gauge(f"aw{w.aw_id}.pages_used", ps[0])
+                self.registry.gauge(f"aw{w.aw_id}.pages_total", ps[1])
+        pool = getattr(eng, "pages", None)
+        if pool is not None:
+            # paged KV-memory plane: physical occupancy + cross-request
+            # page sharing, cluster-wide
+            for k, v in pool.stats().items():
+                self.registry.gauge(f"kv.{k}", v)
         self.registry.gauge("ew.live", len(eng.live_ews))
         if eng.placement_mgr is not None:
             self.registry.gauge("placement.generation",

@@ -92,8 +92,15 @@ class AttentionWorker:
         # engine's PrefixCachePlane when the plane is enabled. Cached
         # slots are *this worker's* retained KV: they count as evictable
         # capacity and die with the worker (metadata is orphaned to the
-        # checkpoint store by the plane before fail()).
+        # checkpoint store by the plane before fail()). On paged engines
+        # the cache is page-level (PagedAWPrefixCache): entries pin pages
+        # rather than slots, so evictable_count() is 0 and free_slots()
+        # is the raw partition free count.
         self.prefix_cache = None
+        # paged engines install the engine's PagePool here: this AW's
+        # page partition is its second capacity axis (telemetry gauges
+        # ride kv_page_stats like slot gauges ride slot_occupancy)
+        self.page_pool = None
         self.alive = True
 
     # -- placement view -----------------------------------------------------
@@ -117,6 +124,18 @@ class AttentionWorker:
         if not self.alive:
             return (cap, cap)
         return (cap - self.slots.free_count(), cap)
+
+    def kv_page_stats(self):
+        """(pages in use, partition pages) over this AW's slice of the
+        physical page pool, or None on contiguous engines. A dead worker
+        reports full occupancy of nothing usable, mirroring
+        slot_occupancy."""
+        if self.page_pool is None:
+            return None
+        total = self.page_pool.pages_per_aw
+        if not self.alive:
+            return (total, total)
+        return (total - self.page_pool.free_pages(self.aw_id), total)
 
     def take_slot(self, prompt=None, now: float = 0.0):
         """Allocate a slot for an admission. With a prefix cache, a
