@@ -139,6 +139,72 @@ def _measure_scale_events():
     }
 
 
+def _measure_closed_loop_skew():
+    """Closed-loop control plane vs the fixed-threshold auto-rebalancer on
+    the same ``skewed_expert_load`` serving run: the controller fires off
+    the imbalance EMA *trajectory* (slope + predicted crossing, so the
+    plan lands around when the fixed threshold is first breached) and
+    packs *weighted* split replicas sized to measured expert heat; the
+    baseline waits for the instantaneous max/mean threshold and packs
+    parity splits. Reports the imbalance trajectory, its post-warmup mean,
+    and the rebalance/scale event counts."""
+    n_req = 6 if SMOKE else 8
+    max_new = 80 if SMOKE else 160
+    wl = make_workload("skewed_expert_load", rate_rps=8.0, duration=2.0,
+                       seed=11)
+    wl = [dataclasses.replace(w, arrival=0.0, prompt_len=10,
+                              max_new_tokens=max_new) for w in wl][:n_req]
+    out = {"workload": "skewed_expert_load", "num_ew": 4,
+           "num_experts": NUM_EXPERTS}
+    for label, kw in (("fixed_threshold", {}),
+                      ("controller", {"controller": "on"})):
+        eng = _elastic_engine(num_ew=4, **kw)
+        orch = Orchestrator(eng, worker_init_time=0.4,
+                            weight_push_time=0.2,
+                            auto_rebalance=(label == "fixed_threshold"))
+        traj = []
+        orig_step = eng.step
+
+        def sampled_step(now=None, _eng=eng, _traj=traj, _orig=orig_step):
+            o = _orig(now=now)
+            _traj.append(float(_eng.placement_mgr.imbalance()))
+            return o
+
+        eng.step = sampled_step
+        m = run_serving(eng, wl, duration=600.0, orchestrator=orch,
+                        step_time=0.02)
+        warm = min(len(traj) - 1, 15)   # EMA needs steps to see the skew
+        settled = traj[warm:]
+        rebs = sum(1 for e in orch.events
+                   if e.kind == "rebalance_started")
+        sec = {
+            "finished": len(m.finished),
+            "rebalances": rebs,
+            "scale_events": sum(1 for e in orch.events if e.kind in
+                                ("scale_out_started", "drain_started")),
+            "imbalance_mean": float(np.mean(settled)),
+            "imbalance_final": float(traj[-1]),
+            "imbalance_peak": float(np.max(settled)),
+            "generation": eng.placement_generation,
+            "decode_jit_traces": eng._decode._cache_size(),
+            "trajectory": [round(v, 3) for v in traj],
+        }
+        if label == "controller":
+            sec["decisions"] = dict(eng.controller.counts)
+            sec["first_trigger"] = next(
+                (d["detail"] for d in eng.controller.decisions
+                 if d["kind"] == "rebalance"), "")
+        out[label] = sec
+    f, c = out["fixed_threshold"], out["controller"]
+    out["imbalance_mean_reduction_x"] = \
+        f["imbalance_mean"] / max(c["imbalance_mean"], 1e-9)
+    # acceptance: the trajectory trigger + weighted splits beat the fixed
+    # threshold + parity splits on sustained per-EW max/mean imbalance
+    assert c["imbalance_mean"] <= f["imbalance_mean"] + 1e-9, out
+    assert c["rebalances"] >= 1, out
+    return out
+
+
 def _model_timelines():
     """GPU-comparable cost-model timelines (core/events.py) for the scale
     events: the paper-scale analogue of the measured engine section —
@@ -162,9 +228,10 @@ def run():
     rows = []
     reb = _measure_rebalance()
     scale = _measure_scale_events()
+    loop = _measure_closed_loop_skew()
     model = _model_timelines()
     payload = {"bench": "elastic", "rebalance": reb, "scale": scale,
-               "model_timelines": model}
+               "closed_loop": loop, "model_timelines": model}
     rows.append(Row(
         "elastic/model/promotion_stall",
         model["promotion"]["stall_s"] * 1e6,
@@ -180,6 +247,15 @@ def run():
         f"max/mean={reb['rebalanced']['imbalance_after']:.2f} "
         f"reduction={reb['imbalance_reduction']:.2f}x "
         f"gen={reb['rebalanced']['generation']}"))
+    rows.append(Row(
+        "elastic/closed_loop/imbalance_mean",
+        loop["controller"]["imbalance_mean"] * 1e6,
+        f"fixed={loop['fixed_threshold']['imbalance_mean']:.3f} "
+        f"ctl={loop['controller']['imbalance_mean']:.3f} "
+        f"reduction={loop['imbalance_mean_reduction_x']:.2f}x "
+        f"rebalances ctl={loop['controller']['rebalances']} "
+        f"fixed={loop['fixed_threshold']['rebalances']} "
+        f"jit_traces={loop['controller']['decode_jit_traces']}"))
     rows.append(Row(
         "elastic/scale_events/max_stall", scale["max_stall_s"] * 1e6,
         f"tbt_p99={scale['tbt_p99_s']*1e3:.1f}ms "

@@ -153,6 +153,71 @@ def _measure_mixed_slo():
     return out
 
 
+def _measure_controller_mixed_slo():
+    """Closed-loop control plane vs the hand-tuned static configuration on
+    the same ``mixed_slo`` run (virtual clock, so the comparison is exact):
+    batch waves carry LONG prompts whose per-tick prefill charge stalls
+    co-resident interactive decodes; the static config runs the shipped
+    fixed chunk budget + remaining-work preemption, while the controller
+    adapts the budget to interactive deadline headroom and gates
+    preemption on actual deadline risk (victim_policy="controller").
+    Reports per-class TTFT/TBT p50/p99 and the decision audit."""
+    batch_new = 30 if SMOKE else 60
+    dur = 2.0 if SMOKE else 3.0
+    wl = make_workload("mixed_slo", rate_rps=3.0, duration=dur, seed=7,
+                       max_new=batch_new, interactive_deadline=0.3,
+                       batch_wave=6, batch_every=dur + 1.0)
+    # long batch prompts: the chunk budget becomes the knob that decides
+    # how much prefill stall interactive requests absorb per tick
+    wl = [dataclasses.replace(w, prompt_len=64)
+          if w.slo_class == "batch" else w for w in wl]
+    out = {"workload": "mixed_slo", "requests": len(wl),
+           "interactive": sum(1 for w in wl
+                              if w.slo_class == "interactive"),
+           "batch": sum(1 for w in wl if w.slo_class == "batch")}
+    base_kw = dict(seed=0, max_batch=8, max_seq=96, preempt=True,
+                   chunk_token_budget=16, prefill_token_cap=128)
+    for label, kw in (
+            ("static", {}),
+            ("controller", {"controller": "on",
+                            "victim_policy": "controller"})):
+        eng = reduced_engine(**base_kw, **kw)
+        m = run_serving(eng, wl, duration=600.0, step_time=0.02,
+                        prefill_token_time=0.002)
+        sec = {"finished": len(m.finished),
+               "preemptions": m.gateway["preemptions"]}
+        for cls in ("interactive", "batch"):
+            ttft = m.ttft_values(cls)
+            tbt = m.tbt_values(cls)
+            sec[cls] = {
+                "ttft_p50_s": pct(ttft, 50),
+                "ttft_p99_s": pct(ttft, 99),
+                "tbt_p50_s": pct(tbt, 50),
+                "tbt_p99_s": pct(tbt, 99),
+                "max_stall_s": m.max_stall(cls),
+            }
+        if eng.controller is not None:
+            sec["decisions"] = dict(eng.controller.counts)
+            sec["budget_changes"] = [
+                d["detail"] for d in eng.controller.decisions
+                if d["kind"] == "budget"]
+            sec["decode_jit_traces"] = eng._decode._cache_size()
+        out[label] = sec
+    s, c = out["static"], out["controller"]
+    out["interactive_ttft_p99_ratio"] = \
+        c["interactive"]["ttft_p99_s"] / \
+        max(s["interactive"]["ttft_p99_s"], 1e-9)
+    out["interactive_tbt_p99_ratio"] = \
+        c["interactive"]["tbt_p99_s"] / \
+        max(s["interactive"]["tbt_p99_s"], 1e-9)
+    # acceptance: the closed loop matches or beats the hand-tuned static
+    # config on interactive TTFT/TBT p99 (<= within rounding)
+    assert out["interactive_ttft_p99_ratio"] <= 1.001, out
+    assert out["interactive_tbt_p99_ratio"] <= 1.001, out
+    assert c["decisions"]["budget"] >= 1, out
+    return out
+
+
 def _measure_telemetry():
     """Observability-plane cost + fidelity (telemetry.py): wall-clock
     overhead of the plane on identical virtual-clock serving work,
@@ -451,7 +516,8 @@ def run():
     rows = []
     payload = {"bench": "steady_state", "serving": [], "decode_path": [],
                "chunked_prefill": None, "mixed_slo": None,
-               "device_decode": None, "telemetry": None}
+               "device_decode": None, "telemetry": None,
+               "controller": None}
     t = _measure_telemetry()
     payload["telemetry"] = t
     rows.append(Row(
@@ -482,6 +548,18 @@ def run():
             f"syncs/token={s['seg8']['host_syncs_per_token']:.3f} "
             f"mismatches={dd['identity']['mismatches']}+"
             f"{dd['identity']['mismatches_after_aw_failure']}(failure)"))
+    cl = _measure_controller_mixed_slo()
+    payload["controller"] = cl
+    n_dec = sum(v for k, v in cl["controller"]["decisions"].items()
+                if k != "preempt_denied")
+    rows.append(Row(
+        "serving/controller/interactive_ttft_p99",
+        cl["controller"]["interactive"]["ttft_p99_s"] * 1e6,
+        f"static={cl['static']['interactive']['ttft_p99_s']*1e3:.0f}ms "
+        f"ratio={cl['interactive_ttft_p99_ratio']:.2f} "
+        f"tbt_ratio={cl['interactive_tbt_p99_ratio']:.2f} "
+        f"decisions={n_dec} "
+        f"jit_traces={cl['controller']['decode_jit_traces']}"))
     s = _measure_mixed_slo()
     payload["mixed_slo"] = s
     rows.append(Row(

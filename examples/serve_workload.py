@@ -41,6 +41,12 @@ def main():
                     help="disable preempt-and-requeue (pairs with "
                          "--workload mixed_slo: blocked interactive "
                          "requests then wait out the batch wave)")
+    ap.add_argument("--controller", action="store_true",
+                    help="SLO-driven closed-loop control plane: the "
+                         "engine autoscales the EW pool, triggers "
+                         "weighted rebalances off the load trajectory, "
+                         "adapts the chunk budget to deadline headroom, "
+                         "and gates preemption on deadline risk")
     ap.add_argument("--prefix-slots", type=int, default=0,
                     help="per-AW prefix-cache slot budget (pairs with "
                          "--workload multi_turn_chat; needs a chunk "
@@ -61,14 +67,20 @@ def main():
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
     placement = "session_affinity" if args.workload == "multi_turn_chat" \
         else "least_loaded"
+    if args.controller and not args.chunk_budget:
+        args.chunk_budget = 16     # the budget policy needs the plane on
     ecfg = EngineConfig(max_batch=8, max_seq=96, num_aw=2, num_ew=2,
+                        max_ew=4 if args.controller else 0,
                         chunk_token_budget=args.chunk_budget,
                         prefill_token_cap=8 * args.chunk_budget,
                         preempt=not args.no_preempt,
                         placement=placement,
                         prefix_cache_slots=args.prefix_slots,
                         telemetry=not args.no_telemetry,
-                        trace_export_path=args.trace_out)
+                        trace_export_path=args.trace_out,
+                        controller="on" if args.controller else "off",
+                        victim_policy="controller" if args.controller and
+                        not args.no_preempt else "remaining_work")
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         auto_rebalance=args.rebalance)
@@ -133,6 +145,10 @@ def main():
               f"per-EW load={ {k: round(v, 1) for k, v in mgr.per_ew_load().items()} }")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}s] {e.kind} {e.worker} {e.detail}")
+    if eng.controller is not None:
+        print(f"control plane: decisions={eng.controller.counts}")
+        for d in eng.controller.decisions:
+            print(f"  [ctl t={d['t']:.2f}s] {d['kind']} {d['detail']}")
     if m.telemetry is not None:
         stalls = m.telemetry.stall_report()
         for st in stalls:

@@ -88,6 +88,12 @@ class Orchestrator:
         # consumers see them without waiting for (or racing) this
         # orchestrator's own audit log
         self.bus = getattr(engine, "bus", None)
+        # control plane (serving/controller.py): the controller decides,
+        # this orchestrator actuates — attach so scale/rebalance requests
+        # land on the same virtual clock as operator-driven ones
+        ctl = getattr(engine, "controller", None)
+        if ctl is not None:
+            ctl.attach_orchestrator(self)
 
     def _emit(self, ev: WorkerEvent):
         self.events.append(ev)
@@ -256,6 +262,12 @@ class Orchestrator:
             try:
                 if s.kind == "add_ew":
                     new_ew = self.engine.add_ew(now=now)
+                    # a scale-out invalidates the rebalance cooldown: the
+                    # joiner starts empty, and a rebalance suppressed by a
+                    # recent (pre-join) window would leave it idle for the
+                    # rest of the cooldown — reset so the next auto pass
+                    # may ship load to it immediately
+                    self._last_rebalance = -1e30
                     ev = WorkerEvent(now, "scaled_out", f"ew{new_ew}",
                                      f"pool={sorted(self.engine.live_ews)}")
                 elif s.kind == "drain_ew":

@@ -136,6 +136,16 @@ class ExpertPlacementManager:
             ema_ew=np.zeros((self.max_ew,), np.float64), decay=ema_decay)
         self.rebalance_threshold = rebalance_threshold
         self.min_load_signal = min_load_signal
+        # replica packing discipline for leftover slots:
+        #   "parity"   — hottest-first onto the globally lightest EW (the
+        #                pre-controller behavior, byte-identical plans)
+        #   "weighted" — best-fit-decreasing against the measured per-EW
+        #                deficit (set by the control plane)
+        # Either way the DEVICE split is parity — a replica takes exactly
+        # half its expert's traffic by (token, choice) parity — so the
+        # mode changes which experts replicate and where, never routing
+        # semantics, and stays bit-identical while capacity doesn't bind.
+        self.split_mode = "parity"
         self.plan = self._initial_plan()
         self.history: List[PlacementPlan] = [self.plan]
 
@@ -248,28 +258,79 @@ class ExpertPlacementManager:
             slot_expert[s] = ex
             primary[ex] = s
             ew_load[m] += float(load[ex])
-        # replicas into leftover slots, hottest experts first; a replica on
-        # a different EW than the primary takes half the expert's traffic
+        # replicas into leftover slots; a replica on a different EW than
+        # the primary takes half the expert's traffic
         split_slot = np.full((e,), -1, np.int32)
-        for ex in order:
-            if primary[ex] < 0 or split_slot[ex] >= 0:
-                continue
-            home = int(slot_owner[primary[ex]])
-            cands = [m for m in members if free[m] and m != home]
-            if not cands:
-                continue
-            half = float(load[ex]) / 2.0
-            m = min(cands, key=lambda w: (ew_load[w], w))
-            # only replicate if it actually helps the imbalance
-            if ew_load[m] + half >= ew_load[home]:
-                continue
-            s = free[m].pop(0)
-            slot_expert[s] = ex
-            split_slot[ex] = s
-            ew_load[m] += half
-            ew_load[home] -= half
+        if self.split_mode == "weighted":
+            self._weighted_splits(load, slot_owner, members, free, ew_load,
+                                  slot_expert, primary, split_slot)
+        else:
+            # parity mode: hottest experts first, each onto the globally
+            # lightest EW with a free slot
+            for ex in order:
+                if primary[ex] < 0 or split_slot[ex] >= 0:
+                    continue
+                home = int(slot_owner[primary[ex]])
+                cands = [m for m in members if free[m] and m != home]
+                if not cands:
+                    continue
+                half = float(load[ex]) / 2.0
+                m = min(cands, key=lambda w: (ew_load[w], w))
+                # only replicate if it actually helps the imbalance
+                if ew_load[m] + half >= ew_load[home]:
+                    continue
+                s = free[m].pop(0)
+                slot_expert[s] = ex
+                split_slot[ex] = s
+                ew_load[m] += half
+                ew_load[home] -= half
         return self._commit(slot_expert, slot_owner, primary, split_slot,
                             reason)
+
+    @staticmethod
+    def _weighted_splits(load, slot_owner, members, free, ew_load,
+                         slot_expert, primary, split_slot):
+        """Best-fit-decreasing replica packing (``split_mode="weighted"``):
+        each round targets the most-deficient member EW and picks the
+        un-split expert whose half-heat best fills that EW's gap to the
+        pool mean, instead of walking experts hottest-first. The replica
+        still takes exactly half its expert's traffic on device; what this
+        sizes to the measured load is WHICH experts replicate and WHERE —
+        so a 70/20/10 heat profile lands replicas that close the 70's
+        overhang rather than whatever the hottest-first walk happens to
+        pick. Mutates ``free``/``ew_load``/``slot_expert``/``split_slot``
+        in place."""
+        while True:
+            mean = sum(ew_load.values()) / max(1, len(ew_load))
+            targets = [m for m in members if free[m] and ew_load[m] < mean]
+            if not targets:
+                return
+            m = min(targets, key=lambda w: (ew_load[w], w))
+            deficit = mean - ew_load[m]
+            best_ex, best_fit = -1, None
+            for ex in range(len(primary)):
+                if primary[ex] < 0 or split_slot[ex] >= 0:
+                    continue
+                home = int(slot_owner[primary[ex]])
+                if home == m:
+                    continue
+                half = float(load[ex]) / 2.0
+                # the same improvement guard as parity mode: a split that
+                # overshoots past its donor makes the imbalance worse
+                if ew_load[m] + half >= ew_load[home]:
+                    continue
+                fit = abs(deficit - half)
+                if best_fit is None or fit < best_fit - 1e-12:
+                    best_ex, best_fit = ex, fit
+            if best_ex < 0:
+                return
+            home = int(slot_owner[primary[best_ex]])
+            half = float(load[best_ex]) / 2.0
+            s = free[m].pop(0)
+            slot_expert[s] = best_ex
+            split_slot[best_ex] = s
+            ew_load[m] += half
+            ew_load[home] -= half
 
     def adopt(self, slot_expert, slot_owner=None, primary=None,
               split_slot=None, reason: str = "custom") -> PlacementPlan:

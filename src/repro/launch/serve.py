@@ -76,6 +76,18 @@ def main():
                          "permanent shadow promotion (pool shrinks)")
     ap.add_argument("--rebalance", action="store_true",
                     help="auto-rebalance expert placement under load skew")
+    ap.add_argument("--controller", action="store_true",
+                    help="SLO-driven closed-loop control plane: EW "
+                         "autoscaling, trajectory-triggered rebalance with "
+                         "weighted splits, adaptive chunk budget, and "
+                         "deadline-aware preemption (serving/controller.py)")
+    ap.add_argument("--no-ctl-autoscale", action="store_true",
+                    help="with --controller: disable the autoscale policy")
+    ap.add_argument("--no-ctl-rebalance", action="store_true",
+                    help="with --controller: disable the rebalance policy")
+    ap.add_argument("--no-ctl-budget", action="store_true",
+                    help="with --controller: disable the adaptive "
+                         "chunk budget policy")
     ap.add_argument("--no-preempt", action="store_true",
                     help="disable preempt-and-requeue (blocked interactive "
                          "requests wait instead of evicting batch victims)")
@@ -116,7 +128,13 @@ def main():
                         prefill_token_cap=8 * args.chunk_budget,
                         prefix_cache_slots=args.prefix_slots,
                         telemetry=not args.no_telemetry,
-                        trace_export_path=args.trace_out)
+                        trace_export_path=args.trace_out,
+                        controller="on" if args.controller else "off",
+                        ctl_autoscale=not args.no_ctl_autoscale,
+                        ctl_rebalance=not args.no_ctl_rebalance,
+                        ctl_chunk_budget=not args.no_ctl_budget,
+                        victim_policy="controller" if args.controller and
+                        not args.no_preempt else "remaining_work")
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         ew_policy=args.ew_policy,
@@ -166,6 +184,9 @@ def main():
             print(f"    {cls}: {counts}{extra}")
     for e in orch.events:
         print(f"  [orch t={e.t:.2f}] {e.kind} {e.worker} {e.detail}")
+    if eng.controller is not None:
+        for d in eng.controller.decisions:
+            print(f"  [ctl t={d['t']:.2f}] {d['kind']} {d['detail']}")
     if m.telemetry is not None:
         for st in m.telemetry.stall_report():
             comps = ", ".join(f"{k}={v*1e3:.0f}ms"

@@ -330,6 +330,11 @@ class ContinuousBatchScheduler:
         dispatch (1 = per-step cadence). Returns {rid: new_tokens}."""
         eng = self.engine
         t_now = now if now is not None else float(eng.steps)
+        if eng.controller is not None:
+            # control-plane decision pass BEFORE admission: scale/rebalance
+            # requests land on the orchestrator's virtual clock and the
+            # chunk budget is set before this tick's planner slice runs
+            eng.controller.tick(t_now)
         if self.gateway.depth():
             self.admit(t_now)
         eng.check_deadlines(t_now)

@@ -107,6 +107,15 @@ class ChunkedPrefillPlane:
         self.stats = ChunkedPrefillStats()
         self._extract_range = engine.layout.make_slot_range_extractor()
 
+    def set_budget(self, budget: int) -> int:
+        """Control-plane actuator: retarget the per-tick token budget. The
+        budget is a host int the planner reads fresh each ``plan()`` pass;
+        the chunk SHAPE set (pow2 buckets capped at ``max_shape``) never
+        changes with it, so adjusting the budget at runtime introduces no
+        new jit keys. Returns the clamped value now in effect."""
+        self.budget = max(1, int(budget))
+        return self.budget
+
     # ------------------------------------------------------------------
     # admission-side API
     # ------------------------------------------------------------------

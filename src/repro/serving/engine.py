@@ -46,6 +46,7 @@ from repro.serving.api import (PREEMPTIBLE_CLASSES, STANDARD, Client,
                                SamplingParams)
 from repro.serving.batching import ContinuousBatchScheduler
 from repro.serving.chunked import ChunkedPrefillPlane
+from repro.serving.controller import ServingController
 from repro.serving.decode_loop import DecodeLoopPlane
 from repro.serving.gateway import Gateway, QueuedRequest
 from repro.serving.kvcache import CacheLayout, PagedCacheLayout, PagePool
@@ -147,6 +148,38 @@ class EngineConfig:
     #                                      ~7.5% at 32)
     trace_export_path: str = ""          # write the Perfetto/Chrome trace
     #                                      here at run finalize ("" = off)
+    # ---- control plane (serving/controller.py) ---------------------------
+    controller: str = "off"              # "off" (shipped default: every
+    #                                      knob stays static, byte-identical
+    #                                      to pre-controller behavior) |
+    #                                      "on" (one decision pass per tick)
+    ctl_autoscale: bool = True           # policy 1: EW pool sizing from
+    #                                      queue-depth EMA watermarks
+    ctl_rebalance: bool = True           # policy 2: trajectory-triggered
+    #                                      rebalance + weighted split plans
+    ctl_chunk_budget: bool = True        # policy 3: SLO-headroom-adaptive
+    #                                      chunk budget
+    ctl_queue_high: float = 3.0          # scale-out watermark (queue EMA)
+    ctl_queue_low: float = 0.25          # scale-in watermark (queue EMA;
+    #                                      pool must also be idle + above
+    #                                      its boot size)
+    ctl_scale_dwell: float = 0.0         # debounce between scale decisions
+    #                                      (0 = auto: T_w + 2*T_push of the
+    #                                      attached orchestrator)
+    ctl_headroom: float = 0.25           # interactive deadline headroom
+    #                                      (virtual s) under which the
+    #                                      chunk budget shrinks
+    ctl_budget_min: int = 0              # adaptive-budget floor (0 = auto:
+    #                                      max(min_chunk, base/4))
+    ctl_budget_max: int = 0              # adaptive-budget ceiling (0 =
+    #                                      auto: 4x the configured base)
+    ctl_deadline_risk: float = 0.1       # head deadline headroom (virtual
+    #                                      s) below which the preemption
+    #                                      gate opens (victim_policy=
+    #                                      "controller" only)
+    ctl_kv_weight: float = 1.0           # victim pricing: weight on the
+    #                                      resident/exclusive-KV value
+    #                                      subtracted from remaining work
 
 
 @dataclass
@@ -376,8 +409,23 @@ class InferenceEngine:
             ecfg.prefix_global_index or ecfg.prefix_migrate), (
             "prefix_global_index/prefix_migrate require the prefix-cache "
             "plane (prefix_cache_slots > 0)")
-        assert ecfg.victim_policy in ("remaining_work", "youngest"), (
+        assert ecfg.victim_policy in ("remaining_work", "youngest",
+                                      "controller"), (
             f"unknown victim_policy {ecfg.victim_policy!r}")
+
+        # ---- control plane (serving/controller.py) ------------------------
+        # one decision pass per tick over signals the stack already emits,
+        # actuating only through existing mechanisms — host-side only, so
+        # controller on/off is bit-identical under identical decisions and
+        # adds zero new jit traces by construction
+        assert ecfg.controller in ("off", "on"), (
+            f"unknown controller mode {ecfg.controller!r}")
+        self.controller: Optional[ServingController] = None
+        if ecfg.controller == "on":
+            self.controller = ServingController(self)
+        assert ecfg.victim_policy != "controller" or \
+            self.controller is not None, (
+            'victim_policy="controller" requires controller="on"')
 
     # ------------------------------------------------------------------
     # decode routing capacity (§5.2): the decode path may run at a tighter
@@ -587,7 +635,8 @@ class InferenceEngine:
         debt = (len(r.prompt) - 1 - r.prefill_cursor) if r.prefilling else 0
         return (r.max_new - len(r.tokens)) + debt
 
-    def _choose_victim(self, exclude: str = "") -> Optional[RequestState]:
+    def _choose_victim(self, exclude: str = "", head=None,
+                       now: float = 0.0) -> Optional[RequestState]:
         """Pick the preemption victim among preemptible-class requests
         resident on live AWs.
 
@@ -600,7 +649,15 @@ class InferenceEngine:
         same just-restored victim in an evict/restore ping-pong). Both
         policies prefer, among equals, the candidate evicted the fewest
         times (repeated preemptions rotate through a wave instead of
-        starving one rid), with a final rid tie-break for determinism."""
+        starving one rid), with a final rid tie-break for determinism.
+
+        ``victim_policy="controller"`` delegates to the control plane's
+        deadline- and prefix-aware policy: batch work is evicted only when
+        the blocked head's deadline is actually at risk, and the victim
+        score prices in its exclusive paged-KV / resident-prefix value
+        (an eviction tears that down and the restore path must rebuild
+        it). The candidate filter is shared, so interactive work can
+        never be a victim under ANY policy."""
         cands = [r for r in self.requests.values()
                  if r.slo_class in PREEMPTIBLE_CLASSES and not r.done
                  and not r.paused and not r.cancelled
@@ -608,6 +665,8 @@ class InferenceEngine:
                  and r._aw >= 0 and self.aws[r._aw].alive]
         if not cands:
             return None
+        if self.ecfg.victim_policy == "controller":
+            return self.controller.choose_victim(cands, head=head, now=now)
         if self.ecfg.victim_policy == "youngest":
             return max(cands, key=lambda r: (r.t_enqueue, -r.preemptions,
                                              r.rid))
@@ -617,7 +676,7 @@ class InferenceEngine:
     def _preempt_for(self, head: QueuedRequest, now: float) -> bool:
         """Gateway preemptor hook: a blocked interactive head asks for a
         slot; evict a batch victim if one exists."""
-        victim = self._choose_victim(exclude=head.rid)
+        victim = self._choose_victim(exclude=head.rid, head=head, now=now)
         if victim is None:
             return False
         return self.preempt_request(victim.rid, now=now)

@@ -355,6 +355,17 @@ class Gateway:
     def depth(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
+    # -- control-plane signals (serving/controller.py) ----------------------
+    def class_depth(self, slo_class: str) -> int:
+        return len(self.queues[slo_class])
+
+    def min_queued_deadline(self, slo_class: str) -> Optional[float]:
+        """Earliest first-token deadline waiting in one class queue (None
+        when the queue is empty or nothing in it carries a deadline)."""
+        dls = [e.deadline for e in self.queues[slo_class]
+               if e.deadline is not None]
+        return min(dls) if dls else None
+
     def find(self, rid: str) -> Optional[QueuedRequest]:
         for q in self.queues.values():
             for e in q:

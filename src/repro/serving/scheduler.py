@@ -48,6 +48,8 @@ class ServeMetrics:
     telemetry: object = None   # the engine's TelemetryPlane (None = off):
     #                            streamed twins of the exact lists above,
     #                            spans, and per-cause stall attribution
+    controller: dict = field(default_factory=dict)  # control-plane audit
+    #                            (decision history + counters; {} = off)
 
     def throughput(self) -> float:
         return len(self.token_log) / self.duration if self.duration else 0.0
@@ -253,4 +255,6 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                             "repins": gw.stats.session_repins}}
     if engine.pages is not None:
         m.gateway["pages"] = engine.pages.stats()
+    if engine.controller is not None:
+        m.controller = engine.controller.snapshot()
     return m

@@ -876,6 +876,17 @@ class TelemetryPlane:
             self.registry.set_counter("prefill.chunked.real_tokens",
                                       cs.real_tokens)
             self.registry.set_counter("prefill.chunked.resumed", cs.resumed)
+        ctl = getattr(eng, "controller", None)
+        if ctl is not None:
+            # control plane (serving/controller.py): decision counters +
+            # live signals, alongside the per-decision events.controller_*
+            # counters and req:controller trace instants emitted at
+            # decision time
+            for k, v in ctl.stats().items():
+                if isinstance(v, float):
+                    self.registry.gauge(f"controller.{k}", v)
+                else:
+                    self.registry.set_counter(f"controller.{k}", int(v))
         # the zero-new-traces invariant, as a gauge anyone can scrape
         traces = eng._decode._cache_size() + \
             eng.decode_plane.segment_traces()

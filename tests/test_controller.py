@@ -1,0 +1,352 @@
+"""Control-plane invariants (serving/controller.py).
+
+The bar matches every other plane in this repo: the controller may only
+make decisions an operator could have scripted — so a controller-driven
+run replayed as a script on a controller-off engine is bit-identical, the
+whole closed loop adds zero new jit traces, scale decisions never flap
+under an oscillating load trace, and the deadline-aware victim policy can
+never evict interactive work. Plus the rebalance-cooldown regression: a
+scale-out must reset the auto-rebalance cooldown so the joiner receives
+load immediately."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from conftest import reduced
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import make_workload
+from repro.serving.api import RequestSpec
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.scheduler import ScalePlan, run_serving
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(**kw):
+    cfg = reduced("mixtral_8x7b", cap_factor=4.0)
+    defaults = dict(max_batch=8, max_seq=64, num_aw=2, num_ew=2)
+    defaults.update(kw)
+    return InferenceEngine(cfg, EngineConfig(**defaults),
+                           jax.random.PRNGKey(0))
+
+
+def mixed_workload(duration=5.0):
+    wl = make_workload("mixed_slo", rate_rps=3.0, duration=duration,
+                       seed=7, interactive_deadline=0.3)
+    return [dataclasses.replace(w, prompt_len=min(w.prompt_len, 16),
+                                max_new_tokens=min(w.max_new_tokens, 8))
+            for w in wl]
+
+
+def traces(eng):
+    return eng._decode._cache_size() + eng.decode_plane.segment_traces()
+
+
+# --------------------------------------------------------------------------
+# bit-identity: controller on == its decisions replayed as a script
+# --------------------------------------------------------------------------
+
+def test_controller_bit_identical_to_replayed_script():
+    """A controller-on run records its decision history; the same
+    decisions replayed as ScalePlans + scripted budget changes on a
+    controller-off engine produce byte-for-byte the same outputs — the
+    controller changes WHEN knobs move, never what any knob does."""
+    kw = dict(max_ew=4, chunk_token_budget=32, prefill_token_cap=256)
+    wl = mixed_workload()
+
+    eng_on = make_engine(controller="on", **kw)
+    orch_on = Orchestrator(eng_on, worker_init_time=0.4,
+                           weight_push_time=0.2)
+    m_on = run_serving(eng_on, wl, 60.0, orchestrator=orch_on,
+                       step_time=0.02, prefill_token_time=0.002)
+    decisions = eng_on.controller.decisions
+    # non-vacuous: the loop actually closed at least once
+    assert any(d["kind"] in ("rebalance", "budget", "scale_out")
+               for d in decisions), decisions
+
+    eng_off = make_engine(**kw)
+    assert eng_off.controller is None
+    # the controller switched the replica packer to weighted mode at
+    # construction; the scripted twin must compute identical plans
+    eng_off.placement_mgr.split_mode = "weighted"
+    kind_map = {"scale_out": "add_ew", "scale_in": "drain_ew",
+                "rebalance": "rebalance"}
+    scales = [ScalePlan(d["t"], kind_map[d["kind"]], d.get("ew", -1))
+              for d in decisions if d["kind"] in kind_map]
+    budget_script = sorted((d["t"], d["budget"]) for d in decisions
+                           if d["kind"] == "budget")
+    orig_step = eng_off.step
+
+    def scripted_step(now=None):
+        while budget_script and now is not None and \
+                now >= budget_script[0][0]:
+            eng_off.chunked.set_budget(budget_script.pop(0)[1])
+        return orig_step(now=now)
+
+    eng_off.step = scripted_step
+    orch_off = Orchestrator(eng_off, worker_init_time=0.4,
+                            weight_push_time=0.2)
+    m_off = run_serving(eng_off, wl, 60.0, orchestrator=orch_off,
+                        scale_events=scales, step_time=0.02,
+                        prefill_token_time=0.002)
+
+    assert sorted(m_on.finished) == sorted(m_off.finished)
+    assert m_on.outputs == m_off.outputs   # exact token identity
+
+
+# --------------------------------------------------------------------------
+# zero new jit traces across controller-driven reconfigurations
+# --------------------------------------------------------------------------
+
+def test_controller_zero_new_decode_traces():
+    eng = make_engine(controller="on", victim_policy="controller",
+                      max_ew=4, chunk_token_budget=32,
+                      prefill_token_cap=256)
+    orch = Orchestrator(eng, worker_init_time=0.4, weight_push_time=0.2)
+    # warm the decode trace once, before any controller decision
+    eng.generate("warm", PROMPT, 4)
+    base = traces(eng)
+    gen0 = eng.placement_generation
+    run_serving(eng, mixed_workload(8.0), 60.0, orchestrator=orch,
+                step_time=0.02, prefill_token_time=0.002)
+    n_decisions = sum(v for k, v in eng.controller.counts.items()
+                      if k != "preempt_denied")
+    # the loop reconfigured the stack repeatedly (>= 5 decisions, with
+    # placement generations among them) off one warm trace set
+    assert n_decisions >= 5, eng.controller.counts
+    assert eng.placement_generation > gen0
+    assert traces(eng) == base
+
+
+# --------------------------------------------------------------------------
+# hysteresis: an oscillating load trace must not flap the pool
+# --------------------------------------------------------------------------
+
+def test_autoscale_no_flapping_under_oscillating_queue():
+    eng = make_engine(controller="on", max_ew=4, chunk_token_budget=16)
+    orch = Orchestrator(eng, worker_init_time=0.4, weight_push_time=0.2)
+    ctl = eng.controller
+    dwell = ctl._scale_dwell()
+    assert dwell == 0.4 + 2 * 0.2   # T_push-aware default: T_w + 2*T_push
+    rid = 0
+    for i in range(60):
+        t = i * 0.05
+        if i % 2 == 0:     # burst: well above the scale-out watermark
+            for _ in range(8):
+                eng.gateway.enqueue(f"h{rid}", PROMPT, 4, now=t)
+                rid += 1
+        else:              # trough: queue drains completely
+            for q in eng.gateway.queues.values():
+                q.clear()
+        ctl.tick(t)
+        orch.tick(t)
+    scale_ts = [d["t"] for d in ctl.decisions
+                if d["kind"].startswith("scale")]
+    # never shrinks in response to a transient trough...
+    assert ctl.counts["scale_in"] == 0
+    # ...and consecutive scale decisions are separated by >= the dwell
+    assert all(b - a >= dwell - 1e-9
+               for a, b in zip(scale_ts, scale_ts[1:])), scale_ts
+    assert ctl.counts["scale_out"] >= 1   # the sustained EMA does react
+
+
+# --------------------------------------------------------------------------
+# deadline-aware preemption: gate + never-evict-interactive
+# --------------------------------------------------------------------------
+
+def test_controller_preemption_gate_and_interactive_immunity():
+    eng = make_engine(controller="on", victim_policy="controller",
+                      max_batch=4, ctl_autoscale=False,
+                      ctl_rebalance=False)
+    # fill every slot: half interactive, half batch
+    for i in range(2):
+        eng.client.submit(RequestSpec(rid=f"i{i}", prompt=PROMPT,
+                                      max_new=20,
+                                      slo_class="interactive"))
+        eng.client.submit(RequestSpec(rid=f"b{i}", prompt=PROMPT,
+                                      max_new=20, slo_class="batch"))
+    eng.step(now=0.0)
+    assert len(eng.active_requests()) == 4
+
+    # a blocked interactive head with a DISTANT deadline: the gate denies
+    # (nothing is at risk — evicting batch work would waste its progress)
+    eng.client.submit(RequestSpec(rid="late", prompt=PROMPT, max_new=4,
+                                  slo_class="interactive", deadline=100.0))
+    eng.step(now=0.1)
+    assert eng.controller.counts["preempt"] == 0
+    assert eng.controller.counts["preempt_denied"] >= 1
+    assert eng.gateway.stats.preemptions == 0
+
+    # an IMMINENT deadline opens the gate: a batch victim is evicted,
+    # interactive residents are untouchable by construction ("late" is
+    # dropped first — a retried head pins the front of its class queue)
+    eng.gateway.drop("late")
+    eng.client.submit(RequestSpec(rid="soon", prompt=PROMPT, max_new=4,
+                                  slo_class="interactive", deadline=0.25))
+    eng.step(now=0.2)
+    assert eng.gateway.stats.preemptions >= 1
+    assert eng.controller.counts["preempt"] >= 1
+    for i in range(2):
+        r = eng.requests[f"i{i}"]
+        assert r.preemptions == 0 and not r.queued_for_recovery
+    assert any(eng.requests[f"b{i}"].preemptions == 1 or
+               eng.requests[f"b{i}"].queued_for_recovery
+               for i in range(2))
+
+
+def test_controller_victim_pricing_prefers_low_kv_value():
+    """Equal remaining work: the victim is the batch request with the
+    LEAST resident KV to tear down (mid-prefill beats deep-decode)."""
+    eng = make_engine(controller="on", victim_policy="controller",
+                      max_batch=4, ctl_autoscale=False,
+                      ctl_rebalance=False)
+    eng.client.submit(RequestSpec(rid="deep", prompt=PROMPT, max_new=24,
+                                  slo_class="batch"))
+    eng.step(now=0.0)
+    for _ in range(8):           # "deep" accumulates resident KV
+        eng.step(now=0.0)
+    eng.client.submit(RequestSpec(rid="shallow", prompt=PROMPT,
+                                  max_new=24 - len(
+                                      eng.requests["deep"].tokens),
+                                  slo_class="batch"))
+    eng.step(now=0.1)
+    deep, shallow = eng.requests["deep"], eng.requests["shallow"]
+    # same remaining work by construction; resident extents differ
+    assert eng._remaining_work(deep) == eng._remaining_work(shallow)
+    cands = [deep, shallow]
+    victim = eng.controller.choose_victim(cands, head=None, now=0.2)
+    assert victim.rid == "shallow"
+    assert eng.controller._victim_kv_value(shallow) < \
+        eng.controller._victim_kv_value(deep)
+
+
+# --------------------------------------------------------------------------
+# satellite: scale-out resets the auto-rebalance cooldown
+# --------------------------------------------------------------------------
+
+def test_scale_out_resets_rebalance_cooldown():
+    """Regression: a long cooldown window used to swallow the rebalance a
+    scale-out needs — the joiner sat idle until the window expired. The
+    add_ew completion now resets the cooldown, so the very next auto
+    pass ships load to the new EW."""
+    eng = make_engine(max_ew=3)
+    orch = Orchestrator(eng, worker_init_time=0.1, weight_push_time=0.1,
+                        auto_rebalance=True, rebalance_cooldown=100.0)
+    mgr = eng.placement_mgr
+    plan = mgr.plan
+    skew = np.where(plan.slot_owner == 0, 50.0, 1.0) * \
+        (plan.slot_expert >= 0)
+    for _ in range(5):
+        mgr.record_slot_load(skew)
+    assert mgr.should_rebalance()
+
+    orch.tick(0.0)               # auto-rebalance #1 fires, cooldown opens
+    orch.tick(0.2)               # ...and completes (T_push = 0.1)
+    starts = [e for e in orch.events if e.kind == "rebalance_started"]
+    assert len(starts) == 1
+    orch.tick(0.3)               # still skewed, but inside the cooldown
+    assert len([e for e in orch.events
+                if e.kind == "rebalance_started"]) == 1
+
+    orch.request_scale_out(0.4)  # t_ready = 0.4 + T_w + T_push = 0.6
+    orch.tick(0.7)               # joiner lands; cooldown must reset
+    assert any(e.kind == "scaled_out" for e in orch.events)
+    starts = [e for e in orch.events if e.kind == "rebalance_started"]
+    assert len(starts) == 2, [
+        (e.t, e.kind) for e in orch.events]
+    assert starts[1].t == 0.7    # immediately, not 100s later
+
+
+# --------------------------------------------------------------------------
+# weighted split replicas
+# --------------------------------------------------------------------------
+
+def test_weighted_splits_valid_and_no_worse_than_parity():
+    def skewed_mgr(mode):
+        eng = make_engine()
+        mgr = eng.placement_mgr
+        mgr.split_mode = mode
+        rng = np.random.default_rng(3)
+        heat = rng.zipf(1.5, size=mgr.plan.slot_expert.shape).astype(
+            np.float64) * (mgr.plan.slot_expert >= 0)
+        for _ in range(6):
+            mgr.record_slot_load(heat)
+        return mgr
+
+    def predicted_imbalance(mgr, plan):
+        load = mgr.load.ema_expert
+        ew = {m: 0.0 for m in plan.members}
+        for ex in range(len(plan.primary)):
+            if plan.primary[ex] < 0:
+                continue
+            home = int(plan.slot_owner[plan.primary[ex]])
+            if plan.split_slot[ex] >= 0:
+                other = int(plan.slot_owner[plan.split_slot[ex]])
+                ew[home] += load[ex] / 2
+                ew[other] += load[ex] / 2
+            else:
+                ew[home] += load[ex]
+        vals = np.asarray(list(ew.values()))
+        return float(vals.max() / vals.mean()) if vals.sum() else 1.0
+
+    m_w = skewed_mgr("weighted")
+    plan_w = m_w.plan_rebalance()
+    m_p = skewed_mgr("parity")
+    plan_p = m_p.plan_rebalance()
+
+    # structural validity: every expert placed; every split references a
+    # slot assigned to the same expert on a DIFFERENT EW than its primary
+    assert (plan_w.primary >= 0).all()
+    for ex in range(len(plan_w.primary)):
+        s = plan_w.split_slot[ex]
+        if s >= 0:
+            assert plan_w.slot_expert[s] == ex
+            assert plan_w.slot_owner[s] != \
+                plan_w.slot_owner[plan_w.primary[ex]]
+    # sizing replicas to the measured deficit never loses to parity on
+    # the predicted post-plan imbalance (same load, same slots)
+    assert predicted_imbalance(m_w, plan_w) <= \
+        predicted_imbalance(m_p, plan_p) + 1e-9
+
+
+def test_parity_split_mode_unchanged_by_default():
+    eng = make_engine()
+    assert eng.placement_mgr.split_mode == "parity"
+    eng_on = make_engine(controller="on", max_ew=4)
+    assert eng_on.placement_mgr.split_mode == "weighted"
+
+
+# --------------------------------------------------------------------------
+# knob hygiene: controller="off" is byte-identical static behavior
+# --------------------------------------------------------------------------
+
+def test_controller_off_is_default_and_inert():
+    eng = make_engine()
+    assert eng.ecfg.controller == "off" and eng.controller is None
+    ref = make_engine().generate("r", PROMPT, 10)
+    assert make_engine().generate("r", PROMPT, 10) == ref
+
+
+def test_controller_decisions_surface_in_telemetry():
+    eng = make_engine(controller="on", victim_policy="controller",
+                      max_ew=4, chunk_token_budget=32,
+                      prefill_token_cap=256)
+    orch = Orchestrator(eng, worker_init_time=0.4, weight_push_time=0.2)
+    m = run_serving(eng, mixed_workload(), 60.0, orchestrator=orch,
+                    step_time=0.02, prefill_token_time=0.002)
+    snap = eng.telemetry.snapshot()
+    assert snap["counters"]["controller.decisions.total"] == \
+        sum(v for k, v in eng.controller.counts.items()
+            if k != "preempt_denied") > 0
+    # per-decision WorkerEvents became events.* counters + trace instants
+    kinds = {d["kind"] for d in eng.controller.decisions}
+    for k in kinds:
+        assert snap["counters"][f"events.controller_{k}"] == \
+            eng.controller.counts[k]
+    chrome = eng.telemetry.export_chrome()
+    names = {e.get("name") for e in chrome["traceEvents"]}
+    assert any(k in names for k in
+               (f"controller_{k}" for k in kinds))
+    # and the audit history rides ServeMetrics
+    assert m.controller["counts"] == eng.controller.counts
