@@ -1,0 +1,145 @@
+"""Soak smoke with continuous health watchdogs (PR-10 forensics plane).
+
+Two runs on a paged, chunked, preemptible engine with the watchdogs on:
+
+* **clean soak** — a few hundred mixed-SLO requests with two injected
+  faults (one AW, one EW). The acceptance bar: the watchdogs stay
+  completely quiet — failover churn is *expected* behavior, and the
+  disturbance suppression must keep the leak/stall detectors from
+  mistaking it for degradation. The run also exercises the
+  postmortem-on-demand path: the flight recorder's bundle is dumped to
+  ``results/soak_postmortem.json`` at the end.
+* **seeded-leak soak** — the same engine shape under a light steady
+  trickle, with one KV page allocated-and-orphaned every few ticks (an
+  injected allocator leak that keeps ``PagePool.check()`` green — only
+  the watermark-trend detector can see it). The bar: the leak watchdog
+  trips within its sliding window.
+
+Writes benchmarks/results/soak.json; ``BENCH_SMOKE=1`` shrinks the
+request count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import Row, reduced_engine
+from repro.core.costmodel import TarragonProfile
+from repro.core.orchestrator import Orchestrator
+from repro.data.workloads import make_workload
+from repro.serving.scheduler import FailurePlan, run_serving
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "soak.json")
+POSTMORTEM_PATH = os.path.join(os.path.dirname(__file__), "results",
+                               "soak_postmortem.json")
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+STEP = 0.02
+PF_TOK = 0.002
+
+
+def _cap(wl, prompt=16, max_new=8):
+    return [dataclasses.replace(w, prompt_len=min(w.prompt_len, prompt),
+                                max_new_tokens=min(w.max_new_tokens,
+                                                   max_new))
+            for w in sorted(wl, key=lambda r: (r.arrival, r.request_id))]
+
+
+def _engine(**kw):
+    defaults = dict(max_batch=8, max_seq=96, num_aw=2, num_ew=2,
+                    kv_page_tokens=16, chunk_token_budget=32,
+                    prefill_token_cap=256, preempt=True, telemetry=True,
+                    watchdogs=True)
+    defaults.update(kw)
+    return reduced_engine(seed=3, **defaults)
+
+
+def clean_soak() -> dict:
+    rate = 10.0 if SMOKE else 20.0
+    dur = 12.0 if SMOKE else 20.0
+    wl = _cap(make_workload("mixed_slo", rate_rps=rate, duration=dur,
+                            seed=21, interactive_deadline=0.3,
+                            batch_wave=6, batch_every=4.0))
+    eng = _engine()
+    orch = Orchestrator(eng, profile=TarragonProfile(detect=0.05,
+                                                     detect_retries=2),
+                        worker_init_time=0.4, weight_push_time=0.2)
+    faults = [FailurePlan(1.0, "aw", 0), FailurePlan(3.0, "ew", 1)]
+    m = run_serving(eng, wl, duration=120.0, orchestrator=orch,
+                    failures=faults, step_time=STEP,
+                    prefill_token_time=PF_TOK)
+    wd = eng.flightrec.watchdogs
+    eng.flightrec.dump(POSTMORTEM_PATH, reason="soak postmortem "
+                       "(on demand, end of clean soak)")
+    return {"workload": "mixed_slo", "requests": len(wl),
+            "finished": len(m.finished), "faults": len(faults),
+            "duration_virtual_s": m.duration,
+            "watchdog_trips": len(wd.trips),
+            "watchdog_trips_by_kind": dict(wd.trip_counts),
+            "watchdog_intervals": wd.intervals,
+            "recorder_records": len(eng.flightrec.records),
+            "recorder_dropped": eng.flightrec.records_dropped,
+            "postmortem": os.path.relpath(
+                POSTMORTEM_PATH, os.path.dirname(__file__))}
+
+
+def leak_soak() -> dict:
+    rate = 2.0 if SMOKE else 3.0
+    dur = 8.0 if SMOKE else 12.0
+    wl = _cap(make_workload("mixed_slo", rate_rps=rate, duration=dur,
+                            seed=22, interactive_deadline=0.3,
+                            batch_wave=2, batch_every=5.0))
+    eng = _engine(wd_interval=0.25, wd_window=4, wd_leak_min_drop=3,
+                  wd_settle=0.5)
+    wd = eng.flightrec.watchdogs
+    pool, ticks = eng.pages, [0]
+    orig_step = eng.step
+
+    def leaky_step(now=None):
+        ticks[0] += 1
+        # orphan one page every 4 ticks until the detector fires (keep a
+        # floor of free pages so the serving path itself never starves)
+        if not wd.trips and ticks[0] % 4 == 0 and \
+                sum(pool.free_pages(a) for a in range(pool.num_aw)) > 16:
+            pool.alloc(ticks[0] % pool.num_aw)
+        return orig_step(now=now)
+
+    eng.step = leaky_step
+    m = run_serving(eng, wl, duration=120.0, step_time=STEP,
+                    prefill_token_time=PF_TOK)
+    pool.check()    # the leak is invisible to the allocator oracle
+    leak_trips = wd.trip_counts.get("leak", 0)
+    first = next((t for t in wd.trips if t["kind"] == "leak"), None)
+    return {"workload": "mixed_slo", "requests": len(wl),
+            "finished": len(m.finished),
+            "pages_leaked": len(
+                {p for p in range(1, pool.num_pages) if pool.ref[p] > 0}
+                - {int(p) for p in pool.bt[pool.bt > 0]}),
+            "leak_trips": leak_trips,
+            "detected": leak_trips >= 1,
+            "first_trip": first,
+            "invariant_trips": wd.trip_counts.get("invariant", 0)}
+
+
+def run():
+    clean = clean_soak()
+    leak = leak_soak()
+    payload = {"bench": "soak", "smoke": SMOKE, "clean": clean,
+               "leak": leak}
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows = [
+        Row("soak_clean_finished", 0.0,
+            f"{clean['finished']}/{clean['requests']}"),
+        Row("soak_clean_watchdog_trips", 0.0,
+            str(clean["watchdog_trips"])),
+        Row("soak_leak_detected", 0.0,
+            "pass" if leak["detected"] else "FAIL"),
+    ]
+    assert clean["watchdog_trips"] == 0, (
+        f"clean soak tripped watchdogs: {clean['watchdog_trips_by_kind']}")
+    assert leak["detected"], "seeded page leak was not detected"
+    return rows

@@ -318,6 +318,19 @@ def _measure_telemetry():
                 plane.observe_tokens(rid, (i + 1) * 0.02, 1)
         hook_s_per_step = min(hook_s_per_step,
                               (time.monotonic() - t0) / iters)
+    # the flight recorder (serving/flightrec.py) ticks once per engine
+    # step too: bus drain + ring append + a fingerprint every
+    # flight_fingerprint_every of virtual time — same gate, same method
+    fr = engines["on"].flightrec
+    rec_s_per_step = float("inf")
+    for _ in range(5):
+        gc.collect()
+        base = fr._next_fp          # keep the fingerprint cadence live
+        t0 = time.monotonic()
+        for i in range(iters):
+            fr.tick(base + i * 0.02)
+        rec_s_per_step = min(rec_s_per_step,
+                             (time.monotonic() - t0) / iters)
     step_wall_s = wall["off"] / max(steps_per_run, 1)
     out["overhead"] = {
         "wall_s_on": wall["on"], "wall_s_off": wall["off"],
@@ -327,7 +340,9 @@ def _measure_telemetry():
         "tok_per_s_off": toks["off"] / wall["off"],
         "overhead_ab_pct": (wall["on"] - wall["off"]) / wall["off"] * 100,
         "hook_us_per_step": hook_s_per_step * 1e6,
-        "overhead_pct": hook_s_per_step / step_wall_s * 100,
+        "recorder_us_per_step": rec_s_per_step * 1e6,
+        "overhead_pct":
+            (hook_s_per_step + rec_s_per_step) / step_wall_s * 100,
     }
 
     # -- failure-injection export run: on/off twins, AW 0 dies mid-run

@@ -3,10 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,appC]
+
+Perf-regression tracker: ``--compare`` diffs the fresh ``results/*.json``
+against the committed ``baselines/*.json`` with per-metric tolerance
+bands, prints a regression table, and exits nonzero on any breach.
+Baselines are regenerated with ``--rebaseline`` (run the benches first,
+then copy results into baselines/ — commit the diff deliberately).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import shutil
 import sys
 import time
 import traceback
@@ -18,6 +27,7 @@ MODULES = [
     "bench_steady_state",  # Fig 10/11 / §7.3
     "bench_elastic",       # PR-3 tentpole: elastic EW plane
     "bench_prefix",        # PR-5 tentpole: prefix-cache plane
+    "bench_soak",          # PR-10 tentpole: watchdog soak smoke
     "bench_checkpoint",    # §7.4 + App C
     "bench_restoration",   # Fig 12
     "bench_expert_batch",  # App B
@@ -27,13 +37,133 @@ MODULES = [
     "bench_roofline",      # §Roofline (dry-run artifacts)
 ]
 
+_DIR = os.path.dirname(__file__)
+RESULTS_DIR = os.path.join(_DIR, "results")
+BASELINES_DIR = os.path.join(_DIR, "baselines")
+
+# Per-metric tolerance bands for --compare. Modes:
+#   equal          — any change is a breach (determinism claims: mismatch
+#                    counts, jit trace counts, watchdog trips)
+#   higher_better  — breach when fresh < baseline * (1 - tol)
+#   lower_better   — breach when fresh > baseline * (1 + tol)
+# Bands are generous because smoke-mode virtual-clock metrics are
+# deterministic but shift legitimately when scheduling behavior changes;
+# the equal-mode rows are the hard invariants.
+BASELINE_SPECS = [
+    ("steady_state.json", "mixed_slo.interactive_ttft_p99_improvement_x",
+     "higher_better", 0.30),
+    ("steady_state.json", "controller.interactive_ttft_p99_ratio",
+     "lower_better", 0.30),
+    ("elastic.json", "rebalance.imbalance_reduction",
+     "higher_better", 0.20),
+    ("elastic.json", "closed_loop.imbalance_mean_reduction_x",
+     "higher_better", 0.20),
+    ("elastic.json", "scale.decode_jit_traces", "equal", 0.0),
+    ("prefix.json", "multi_turn_chat.output_mismatches", "equal", 0.0),
+    ("prefix.json", "paged.identity_mismatches", "equal", 0.0),
+    ("prefix.json", "multi_turn_chat.warm_ttft_improvement_x",
+     "higher_better", 0.25),
+    ("soak.json", "clean.watchdog_trips", "equal", 0.0),
+    ("soak.json", "leak.detected", "equal", 0.0),
+]
+
+
+def _lookup(d: dict, dotted: str):
+    for k in dotted.split("."):
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def compare(only=None) -> int:
+    """Diff fresh results against committed baselines. Returns the number
+    of breaches (0 = green). Missing results files are skipped (a partial
+    --only run must not fail the benches it did not run); a missing
+    metric inside an existing file IS a breach."""
+    rows, breaches, skipped = [], 0, []
+    for fname, path, mode, tol in BASELINE_SPECS:
+        if only and not any(o in fname for o in only):
+            continue
+        bpath = os.path.join(BASELINES_DIR, fname)
+        rpath = os.path.join(RESULTS_DIR, fname)
+        if not os.path.exists(bpath):
+            skipped.append(f"{fname} (no baseline committed)")
+            continue
+        if not os.path.exists(rpath):
+            skipped.append(f"{fname} (no fresh results)")
+            continue
+        with open(bpath) as f:
+            base = _lookup(json.load(f), path)
+        with open(rpath) as f:
+            fresh = _lookup(json.load(f), path)
+        if base is None:
+            skipped.append(f"{fname}:{path} (not in baseline)")
+            continue
+        if fresh is None:
+            rows.append((fname, path, base, "MISSING", mode, "BREACH"))
+            breaches += 1
+            continue
+        if mode == "equal":
+            ok = fresh == base
+        elif mode == "higher_better":
+            ok = float(fresh) >= float(base) * (1.0 - tol)
+        else:
+            ok = float(fresh) <= float(base) * (1.0 + tol)
+        rows.append((fname, path, base, fresh,
+                     f"{mode}±{tol:g}" if tol else mode,
+                     "ok" if ok else "BREACH"))
+        if not ok:
+            breaches += 1
+    w = max((len(r[1]) for r in rows), default=10)
+    print(f"{'file':<20} {'metric':<{w}} {'baseline':>12} "
+          f"{'fresh':>12} {'band':<18} verdict")
+    for fname, path, base, fresh, band, verdict in rows:
+        fb = base if isinstance(base, (int, bool)) else f"{base:.4g}"
+        ff = fresh if isinstance(fresh, (int, bool, str)) \
+            else f"{fresh:.4g}"
+        print(f"{fname:<20} {path:<{w}} {fb!s:>12} {ff!s:>12} "
+              f"{band:<18} {verdict}")
+    for s in skipped:
+        print(f"# skipped: {s}", file=sys.stderr)
+    print(f"# compare: {len(rows)} metrics, {breaches} breach(es)",
+          file=sys.stderr)
+    return breaches
+
+
+def rebaseline(only=None):
+    os.makedirs(BASELINES_DIR, exist_ok=True)
+    files = sorted({s[0] for s in BASELINE_SPECS})
+    for fname in files:
+        if only and not any(o in fname for o in only):
+            continue
+        src = os.path.join(RESULTS_DIR, fname)
+        if os.path.exists(src):
+            shutil.copy(src, os.path.join(BASELINES_DIR, fname))
+            print(f"# rebaselined {fname}", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated substring filters on module names")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff fresh results/*.json against committed "
+                         "baselines/*.json and exit nonzero on breach "
+                         "(does not run the benches)")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="copy fresh results over the committed baselines")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
+
+    if args.compare:
+        breaches = compare(only)
+        if breaches:
+            raise SystemExit(2)
+        return
+    if args.rebaseline:
+        rebaseline(only)
+        return
 
     print("name,us_per_call,derived")
     failed = []

@@ -58,6 +58,14 @@ def main():
     ap.add_argument("--trace-out", default="",
                     help="write a Perfetto/Chrome trace_event JSON of "
                          "the run here (open at ui.perfetto.dev)")
+    ap.add_argument("--postmortem", default="", metavar="PATH",
+                    help="dump the flight-recorder postmortem bundle "
+                         "here at exit (deterministically replayable: "
+                         "python -m repro.launch.replay PATH)")
+    ap.add_argument("--watchdogs", action="store_true",
+                    help="continuous health watchdogs (leak / stall "
+                         "regression / invariant probes); prints the "
+                         "health summary at exit")
     args = ap.parse_args()
     if args.prefix_slots and not args.chunk_budget:
         args.chunk_budget = 16     # the prefix plane rides chunked prefill
@@ -80,7 +88,8 @@ def main():
                         trace_export_path=args.trace_out,
                         controller="on" if args.controller else "off",
                         victim_policy="controller" if args.controller and
-                        not args.no_preempt else "remaining_work")
+                        not args.no_preempt else "remaining_work",
+                        watchdogs=args.watchdogs)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(0))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         auto_rebalance=args.rebalance)
@@ -160,6 +169,19 @@ def main():
         if args.trace_out:
             print(f"trace written to {args.trace_out} "
                   f"(open at ui.perfetto.dev)")
+    fr = eng.flightrec
+    if fr is not None and fr.watchdogs is not None:
+        hs = fr.watchdogs.summary()
+        print(f"health: {hs['trips']} watchdog trip(s) over "
+              f"{hs['intervals']} interval(s) {dict(hs['by_kind'])}")
+        for t in hs["last_trips"]:
+            print(f"  [health t={t['t']:.2f}s] {t['kind']} "
+                  f"{t['what']}: {t['detail']}")
+    if args.postmortem and fr is not None:
+        fr.dump(args.postmortem,
+                reason="postmortem on demand (--postmortem)")
+        print(f"postmortem bundle written to {args.postmortem} "
+              f"(replay: python -m repro.launch.replay {args.postmortem})")
 
 
 if __name__ == "__main__":

@@ -94,6 +94,12 @@ class Orchestrator:
         ctl = getattr(engine, "controller", None)
         if ctl is not None:
             ctl.attach_orchestrator(self)
+        # forensics plane (serving/flightrec.py): pin this orchestrator's
+        # timing/policy parameters so a postmortem bundle can rebuild an
+        # identically-clocked one for replay
+        fr = getattr(engine, "flightrec", None)
+        if fr is not None:
+            fr.note_orchestrator(self)
 
     def _emit(self, ev: WorkerEvent):
         self.events.append(ev)

@@ -103,6 +103,14 @@ def main():
                          "bit-identical either way)")
     ap.add_argument("--trace-out", default="",
                     help="write a Perfetto/Chrome trace_event JSON here")
+    ap.add_argument("--postmortem", default="", metavar="PATH",
+                    help="dump the flight-recorder postmortem bundle "
+                         "(repro.postmortem.v1 JSON, replayable with "
+                         "python -m repro.launch.replay) here at exit")
+    ap.add_argument("--watchdogs", action="store_true",
+                    help="continuous health watchdogs: leak/stall "
+                         "regression detectors + invariant probes "
+                         "(prints the health summary at exit)")
     ap.add_argument("--metrics-out", default="",
                     help="write the JSON metrics snapshot here")
     ap.add_argument("--prom-out", default="",
@@ -134,7 +142,8 @@ def main():
                         ctl_rebalance=not args.no_ctl_rebalance,
                         ctl_chunk_budget=not args.no_ctl_budget,
                         victim_policy="controller" if args.controller and
-                        not args.no_preempt else "remaining_work")
+                        not args.no_preempt else "remaining_work",
+                        watchdogs=args.watchdogs)
     eng = InferenceEngine(cfg, ecfg, jax.random.PRNGKey(args.seed))
     orch = Orchestrator(eng, worker_init_time=1.0, weight_push_time=0.25,
                         ew_policy=args.ew_policy,
@@ -205,6 +214,18 @@ def main():
         if args.trace_out:
             print(f"  perfetto trace -> {args.trace_out} "
                   f"(open at ui.perfetto.dev)")
+    fr = eng.flightrec
+    if fr is not None and fr.watchdogs is not None:
+        hs = fr.watchdogs.summary()
+        print(f"  health: {hs['trips']} watchdog trip(s) over "
+              f"{hs['intervals']} interval(s) {dict(hs['by_kind'])}")
+        for t in hs["last_trips"]:
+            print(f"    [health t={t['t']:.2f}] {t['kind']} "
+                  f"{t['what']}: {t['detail']}")
+    if args.postmortem and fr is not None:
+        fr.dump(args.postmortem, reason="postmortem on demand (--postmortem)")
+        print(f"  postmortem bundle -> {args.postmortem} "
+              f"(replay: python -m repro.launch.replay {args.postmortem})")
 
 
 if __name__ == "__main__":

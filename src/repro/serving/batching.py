@@ -296,6 +296,8 @@ class ContinuousBatchScheduler:
         eng.decode_plane.bind(r)
         if eng.telemetry is not None:
             eng.telemetry.on_restore(q.rid, now, len(segs), r.prefilling)
+        if eng.flightrec is not None:
+            eng.flightrec.on_restore(q.rid, now, len(segs), r.prefilling)
 
         if r.prefilling:
             # mid-prefill preemption: resume the chunk stream after the
@@ -338,6 +340,11 @@ class ContinuousBatchScheduler:
         if self.gateway.depth():
             self.admit(t_now)
         eng.check_deadlines(t_now)
+        if eng.flightrec is not None:
+            # forensics plane: drain the bus through the recorder's own
+            # cursor, fingerprint when due, advance the watchdogs —
+            # host-side only, no effect on anything below
+            eng.flightrec.tick(t_now)
         if eng.chunked is not None:
             eng.chunked.tick(t_now)
         act = eng.active_requests()

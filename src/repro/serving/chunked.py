@@ -297,6 +297,8 @@ class ChunkedPrefillPlane:
                 self.stats.prefilled_tokens.get(job.rid, 0) + take
             if eng.telemetry is not None:
                 eng.telemetry.on_prefill_chunk(job.rid, now, take, shape)
+            if eng.flightrec is not None:
+                eng.flightrec.on_chunk(job.rid, now, take, shape, c)
             if r.prefill_cursor >= job.n_pre:
                 del self.jobs[job.rid]
                 eng.aws[job.aw].prefills.pop(job.rid, None)

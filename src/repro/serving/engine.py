@@ -42,6 +42,7 @@ from repro.core.orchestrator import WorkerEvent
 from repro.core.placement import ExpertPlacementManager, PlacementPlan
 from repro.core.refe import RouteState
 from repro.models import get_model
+from repro.serving import flightrec
 from repro.serving.api import (PREEMPTIBLE_CLASSES, STANDARD, Client,
                                SamplingParams)
 from repro.serving.batching import ContinuousBatchScheduler
@@ -180,6 +181,37 @@ class EngineConfig:
     ctl_kv_weight: float = 1.0           # victim pricing: weight on the
     #                                      resident/exclusive-KV value
     #                                      subtracted from remaining work
+    # ---- forensics plane (serving/flightrec.py) --------------------------
+    flight_recorder: bool = True         # black-box FlightRecorder riding
+    #                                      the EventBus (host-side only:
+    #                                      on/off is bit-identical and
+    #                                      trace-count-identical)
+    flight_capacity: int = 4096          # ring size for records /
+    #                                      submissions / outputs (oldest
+    #                                      drop past this; drops counted)
+    flight_fingerprint_every: float = 0.5  # virtual-clock period between
+    #                                      engine-state fingerprints
+    #                                      (0 = only on dump)
+    flight_autodump: str = ""            # write a postmortem bundle here
+    #                                      on the first failure detection
+    #                                      or watchdog trip ("" = off)
+    watchdogs: bool = False              # continuous health watchdogs:
+    #                                      leak detector, stall-regression
+    #                                      detector, invariant probes
+    wd_interval: float = 0.25            # watchdog sampling interval
+    #                                      (virtual s); watermarks close
+    #                                      once per interval
+    wd_window: int = 8                   # sliding window length
+    #                                      (intervals) for trend tests
+    wd_leak_min_drop: int = 2            # free-list watermark drop across
+    #                                      a full window that counts as a
+    #                                      leak (monotone trend required)
+    wd_stall_factor: float = 2.0         # windowed TTFT/TBT p99 multiple
+    #                                      over baseline that trips the
+    #                                      stall-regression detector
+    wd_settle: float = 1.0               # quiet time after a disturbance
+    #                                      (fault/scale/preempt) before
+    #                                      leak/stall judgments resume
 
 
 @dataclass
@@ -249,6 +281,9 @@ class InferenceEngine:
         self.cfg = cfg
         self.ecfg = ecfg
         key = key if key is not None else jax.random.PRNGKey(0)
+        # host copy of the init key, pinned so a postmortem bundle can
+        # rebuild THIS engine exactly (serving/flightrec.py)
+        self.init_key_data = flightrec.key_host_data(key)
         self.api = get_model(cfg, num_aw=ecfg.num_aw, num_ew=ecfg.num_ew,
                              tarragon=ecfg.tarragon)
         self.params = self.api.init_params(key)
@@ -426,6 +461,18 @@ class InferenceEngine:
         assert ecfg.victim_policy != "controller" or \
             self.controller is not None, (
             'victim_policy="controller" requires controller="on"')
+
+        # ---- forensics plane (serving/flightrec.py) -----------------------
+        # bounded-memory black box + health watchdogs, riding the bus as
+        # its own consumer. Host-side bookkeeping only, like telemetry:
+        # on/off is bit-identical and adds zero new jit traces.
+        self.flightrec: Optional[flightrec.FlightRecorder] = None
+        if ecfg.flight_recorder:
+            self.flightrec = flightrec.FlightRecorder(self)
+        self.gateway.flightrec = self.flightrec
+        assert not ecfg.watchdogs or ecfg.flight_recorder, (
+            "watchdogs=True requires flight_recorder=True (the watchdogs "
+            "ride the recorder's bus cursor and trip its dump)")
 
     # ------------------------------------------------------------------
     # decode routing capacity (§5.2): the decode path may run at a tighter
@@ -1360,6 +1407,8 @@ class InferenceEngine:
         self.store.release(rid)
         if self.telemetry is not None:
             self.telemetry.on_release(r)
+        if self.flightrec is not None:
+            self.flightrec.on_release(r)
         for hook in self._release_hooks:
             hook(r)
 

@@ -291,6 +291,9 @@ class Gateway:
         # event bus and (optionally) the TelemetryPlane after construction
         self.bus = None
         self.telemetry = None
+        # forensics plane (serving/flightrec.py): records every external
+        # submission — the replay workload — at the enqueue boundary
+        self.flightrec = None
 
     def attach_bus(self, bus):
         """Install the publish-at-emission event bus; the placement policy
@@ -326,6 +329,8 @@ class Gateway:
         self.stats.bump(slo_class, "enqueued")
         if self.telemetry is not None:
             self.telemetry.on_enqueue(rid, now, slo_class)
+        if self.flightrec is not None:
+            self.flightrec.on_submit(entry, now)
 
     def _insert(self, entry: QueuedRequest):
         """Deadline-aware, stable insertion: after every recovery entry,

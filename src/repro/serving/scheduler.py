@@ -124,6 +124,13 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
     gw = engine.gateway
     tel = engine.telemetry
     m.telemetry = tel
+    fr = engine.flightrec
+    if fr is not None:
+        # forensics plane: pin the loop's replay parameters — a bundle
+        # replays the incident only if it can re-run THIS loop verbatim
+        fr.note_loop(duration=duration, step_time=step_time,
+                     prefill_token_time=prefill_token_time,
+                     max_steps=max_steps)
     clock = 0.0
     pending = sorted(workload, key=lambda r: r.arrival)
     qi = 0
@@ -137,6 +144,8 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
             if not injected[i] and clock >= f.t:
                 assert orchestrator is not None
                 orchestrator.inject_failure(f.kind, f.worker_id, clock)
+                if fr is not None:
+                    fr.note_injection("failure", f)
                 injected[i] = True
         # elasticity requests (completion is clocked by the orchestrator)
         for i, s in enumerate(scale_events):
@@ -151,6 +160,8 @@ def run_serving(engine: InferenceEngine, workload: List[Request],
                 else:
                     raise ValueError(f"unknown scale event kind {s.kind!r}"
                                      " (add_ew | drain_ew | rebalance)")
+                if fr is not None:
+                    fr.note_injection("scale", s)
                 scaled[i] = True
         if orchestrator is not None:
             orchestrator.tick(clock)

@@ -895,6 +895,25 @@ class TelemetryPlane:
         if bus is not None:
             self.registry.gauge("bus.events", len(bus))
             self.registry.gauge("bus.dropped", bus.dropped)
+            # cap-drop visibility as a first-class counter: silent event
+            # loss during storms must show up in Prometheus scrapes
+            # (events_dropped_total), not just the gauge twin above
+            self.registry.set_counter("events.dropped", bus.dropped)
+        fr = getattr(eng, "flightrec", None)
+        if fr is not None:
+            # forensics plane: recorder occupancy + watchdog trip counts
+            self.registry.gauge("flightrec.records", len(fr.records))
+            self.registry.set_counter("flightrec.records_total",
+                                      fr.records_total)
+            self.registry.set_counter("flightrec.records_dropped",
+                                      fr.records_dropped)
+            self.registry.gauge("flightrec.fingerprints", fr.fingerprints)
+            wd = fr.watchdogs
+            if wd is not None:
+                self.registry.gauge("health.intervals", wd.intervals)
+                self.registry.set_counter("health.trips", len(wd.trips))
+                for k, v in wd.trip_counts.items():
+                    self.registry.set_counter(f"health.trips.{k}", v)
 
     def snapshot(self) -> dict:
         self.sync()

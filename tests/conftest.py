@@ -38,3 +38,30 @@ def make_batch(cfg, b, s, rng=None, with_labels=False):
         batch["frames"] = rng.normal(size=(b, cfg.encoder_seq,
                                            cfg.d_model)).astype(np.float32)
     return batch
+
+
+# --------------------------------------------------------------------------
+# postmortem on test failure (serving/flightrec.py): any engine built
+# during a failing test still holds its flight recorder — dump the most
+# recent ones as bundles so CI can upload the incident, not just the
+# traceback. Best-effort: a broken engine must never mask the failure.
+# --------------------------------------------------------------------------
+
+FLIGHTREC_DIR = os.environ.get("FLIGHTREC_DIR", "artifacts/flightrec")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    report = outcome.get_result()
+    if report.when != "call" or not report.failed:
+        return
+    try:
+        from repro.serving import flightrec
+        paths = flightrec.dump_live_recorders(FLIGHTREC_DIR, item.nodeid)
+        if paths:
+            report.sections.append(
+                ("flight recorder", "postmortem bundles:\n" +
+                 "\n".join(f"  {p}" for p in paths)))
+    except Exception:
+        pass
